@@ -1,0 +1,50 @@
+"""Fig. 10: energy breakdown (PU / memory / network) for DCRA-SRAM vs
+DCRA-HBM-Horiz.  Expected: SRAM config (16x more tiles) spends more on
+wires; HBM config is DRAM-energy dominated; PUs are a small fraction."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import dataset, row
+
+from repro.core.costmodel import DCRA_HBM_HORIZ, DCRA_SRAM, price
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps
+
+D_CACHE_HIT = 0.85
+
+
+def run(small: bool = True):
+    g = dataset(11)
+    root = int(np.argmax(g.out_degree()))
+    out = {}
+    for name, pkg, tiles in (("dcra-sram", DCRA_SRAM, 1024),
+                             ("dcra-hbm-horiz", DCRA_HBM_HORIZ, 64)):
+        grid = square_grid(tiles if small else tiles * 16)
+        px = ProxyConfig(max(grid.ny // 4, 2), max(grid.nx // 4, 2),
+                         slots=512)
+        r = apps.sssp(g, root, grid, proxy=px, oq_cap=32, pkg=pkg)
+        touched = (r.run.counters.edges_processed * 64
+                   + r.run.counters.records_consumed * 64)
+        if pkg.has_hbm:
+            hbm = (1 - D_CACHE_HIT) * touched * 8
+            sram = touched
+        else:
+            hbm = 0.0
+            sram = touched
+        rep = price(pkg, grid, r.run.counters, mem_bits_sram=sram,
+                    mem_bits_hbm=hbm,
+                    per_superstep_peak=dict(time_s=r.run.time_s))
+        tot = max(sum(v for k, v in rep.breakdown.items()
+                      if k.endswith("_j")), 1e-12)
+        pct = {k: 100 * v / tot for k, v in rep.breakdown.items()
+               if k.endswith("_j")}
+        out[name] = pct
+        row(f"fig10/{name}", rep.energy_j * 1e6,
+            ";".join(f"{k}={v:.1f}%" for k, v in pct.items()))
+    return out
+
+
+if __name__ == "__main__":
+    run()

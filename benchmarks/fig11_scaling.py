@@ -1,0 +1,58 @@
+"""Fig. 11: strong scaling — throughput, TEPS, on-chip memory bandwidth,
+throughput/W and throughput/$ across grid sizes (paper: 256 -> 2^20
+tiles; here 64 -> 4096 tiles at CPU-simulation scale, same trends:
+superlinear region, then utilization decay from shrinking per-tile work;
+throughput/W peaks at the smallest fitting config)."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import SCALE, dataset, row
+
+from repro.core.costmodel import DCRA_SRAM, price
+from repro.core.netstats import MSG_BITS as _MB
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps
+
+
+def run(small: bool = True):
+    g = dataset(12)
+    root = int(np.argmax(g.out_degree()))
+    x = np.random.default_rng(0).random(g.n_cols).astype(np.float32)
+    sizes = (64, 256, 1024) if small else (256, 1024, 4096, 16384)
+    out = {}
+    for app_name, fn in {
+        "bfs": lambda grid, px: apps.bfs(g, root, grid, proxy=px,
+                                         oq_cap=32),
+        "spmv": lambda grid, px: apps.spmv(
+            g, x, grid,
+            proxy=ProxyConfig(max(grid.ny // 4, 2), max(grid.nx // 4, 2),
+                              slots=512, write_back=True), oq_cap=32),
+    }.items():
+        for n_tiles in sizes:
+            grid = square_grid(n_tiles)
+            px = ProxyConfig(max(grid.ny // 4, 2), max(grid.nx // 4, 2),
+                             slots=512)
+            r = fn(grid, px)
+            t = r.run.time_s
+            gteps = r.gteps
+            ops = (r.run.counters.edges_processed
+                   + r.run.counters.records_consumed)
+            thr = ops / t
+            membw = (ops * 64 + r.run.counters.hop_msgs * _MB) / t / 8
+            bits = float(g.footprint_bytes() * 8)
+            rep = price(DCRA_SRAM, grid, r.run.counters,
+                        mem_bits_sram=bits,
+                        per_superstep_peak=dict(time_s=t))
+            out[(app_name, n_tiles)] = dict(gteps=gteps, thr=thr)
+            row(f"fig11/{app_name}/{n_tiles}tiles", t * 1e6,
+                f"gteps={gteps:.3f};ops_per_s={thr:.3g};"
+                f"membw_GBs={membw/1e9:.2f};"
+                f"thr_per_w={thr/max(rep.power_w,1e-9):.3g};"
+                f"thr_per_$={thr/rep.cost_usd:.3g}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 6: network link-width options (a)-(d) vs runtime + PU utilization.
+
+The paper evaluates four tapeout-time link configurations on a 64x64
+grid; option (c) (64-bit intra-die, 2x32-bit inter-die) wins ~1.72x
+geomean over (a).  We replay the engine's exact per-superstep traffic
+under each option's bandwidth model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import dataset, row, wiki
+
+from repro.core.costmodel import NETWORK_OPTIONS
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps
+
+
+def run(small: bool = True):
+    # needs >= 2x2 dies: options (a)-(d) differ in INTER-DIE link width,
+    # which a single-die grid never exercises
+    grid = square_grid(1024 if small else 4096)  # 32x32 (64x64 at full)
+    px = ProxyConfig(grid.ny // 2, grid.nx // 2, slots=256)
+    g = dataset(12)
+    gw = wiki(11)
+    root = int(np.argmax(g.out_degree()))
+    runs = {
+        "bfs/rmat": lambda pkg: apps.bfs(g, root, grid, proxy=px,
+                                         oq_cap=32, pkg=pkg),
+        "sssp/rmat": lambda pkg: apps.sssp(g, root, grid, proxy=px,
+                                           oq_cap=32, pkg=pkg),
+        "histo/wiki": lambda pkg: apps.histogram(
+            np.asarray(gw.col_idx) % (gw.n_rows // 8), gw.n_rows // 8,
+            grid, proxy=ProxyConfig(grid.ny // 2, grid.nx // 2, slots=256,
+                                    write_back=True), oq_cap=32, pkg=pkg),
+    }
+    geo = {}
+    for app, fn in runs.items():
+        base_t = None
+        for okey, pkg in NETWORK_OPTIONS.items():
+            r = fn(pkg)
+            t = r.run.time_s
+            if okey.startswith("a"):
+                base_t = t
+            speed = base_t / t if t else float("nan")
+            geo.setdefault(okey, []).append(speed)
+            row(f"fig6/{app}/{okey}", t * 1e6, f"speedup_vs_a={speed:.3f}")
+    for okey, sp in geo.items():
+        gm = float(np.exp(np.mean(np.log(sp))))
+        row(f"fig6/geomean/{okey}", 0.0, f"speedup_vs_a={gm:.3f}")
+    return geo
+
+
+if __name__ == "__main__":
+    run()

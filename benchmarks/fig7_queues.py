@@ -1,0 +1,47 @@
+"""Fig. 7: IQ:OQ size-ratio sweep (the Goldilocks effect).
+
+In our TPU rendering the mailbox coalesces records on arrival, so the
+contention-relief side of the paper's curve is flattened by design (the
+paper's FIFO IQs only coalesce at the P$); the sweep exposes the
+*staleness* side — larger IQ budgets admit more stale values per
+superstep, growing wasted re-expansions (EXPERIMENTS.md §Paper-validation
+discusses the deviation)."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import dataset, row
+
+from repro.core.tilegrid import square_grid
+from repro.graph import apps
+
+
+def run(small: bool = True):
+    # the IQ budget must actually bind: several owned items per tile and
+    # a small OQ so message bursts queue at the endpoints
+    grid = square_grid(256 if small else 4096)
+    g = dataset(13)
+    root = int(np.argmax(g.out_degree()))
+    x = np.random.default_rng(0).random(g.n_cols).astype(np.float32)
+    out = {}
+    for app, fn in {
+        "sssp": lambda r: apps.sssp(g, root, grid, oq_cap=4, iq_ratio=r),
+        "bfs": lambda r: apps.bfs(g, root, grid, oq_cap=4, iq_ratio=r),
+        "spmv": lambda r: apps.spmv(g, x, grid, oq_cap=4, iq_ratio=r),
+    }.items():
+        base = None
+        for ratio in (1, 2, 4, 8, 16):
+            r = fn(ratio)
+            t = r.run.time_s
+            if ratio == 1:
+                base = t
+            imp = base / t
+            out[(app, ratio)] = imp
+            row(f"fig7/{app}/iq_ratio={ratio}", t * 1e6,
+                f"improvement={imp:.3f};supersteps={r.run.supersteps};"
+                f"wasted_work={r.run.counters.records_consumed:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Fig. 9: packaging options — throughput/$ and energy-efficiency/$.
+
+Dalorex & DCRA-SRAM on the big grid; DCRA-HBM (horizontal / vertical)
+on a 16x-smaller grid backed by HBM — same measured task stream, priced
+under each package (die yield, interposer/substrate/bonding, $7.5/GB).
+Expected shape (paper §V-C): SRAM-only wins throughput/$; +HBM wins
+energy-eff/$; vertical HBM beats horizontal on energy (wire savings).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import dataset, row
+
+from repro.core.costmodel import (DALOREX, DCRA_HBM_HORIZ, DCRA_HBM_VERT,
+                                  DCRA_SRAM, HBM_CHANNELS, HBM_CHANNEL_GBS,
+                                  price)
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps
+
+D_CACHE_HIT = 0.85        # modeled D$ hit rate (paper: "high enough")
+
+
+def run(small: bool = True):
+    # dataset big enough that the 16x-tile SRAM grid still strong-scales
+    # (several vertices per tile at 64x64)
+    g = dataset(15)
+    root = int(np.argmax(g.out_degree()))
+    # paper ratio: the SRAM product uses 16x the tiles (16 dies vs 1)
+    big = square_grid(4096 if small else 16384)     # SRAM-parallelized
+    tiny = square_grid(256 if small else 1024)      # HBM-backed, 16x fewer
+    bits = float(g.footprint_bytes() * 8)
+
+    def run_on(grid, pkg, proxy_div=4):
+        px = ProxyConfig(max(grid.ny // proxy_div, 2),
+                         max(grid.nx // proxy_div, 2), slots=512,
+                         write_back=False)
+        return apps.sssp(g, root, grid, proxy=px, oq_cap=32, pkg=pkg)
+
+    r_big = run_on(big, DCRA_SRAM)
+    r_dal = apps.sssp(g, root, big, proxy=None, oq_cap=32, pkg=DALOREX)
+    r_tiny = run_on(tiny, DCRA_HBM_HORIZ)
+
+    touched = (r_tiny.run.counters.edges_processed * 64
+               + r_tiny.run.counters.records_consumed * 64)
+    hbm_bits = (1 - D_CACHE_HIT) * touched * 8     # 512b line per miss
+
+    reports = {}
+    reports["dalorex"] = price(DALOREX, big, r_dal.run.counters,
+                               mem_bits_sram=bits,
+                               per_superstep_peak=dict(
+                                   time_s=r_dal.run.time_s))
+    reports["dcra-sram"] = price(DCRA_SRAM, big, r_big.run.counters,
+                                 mem_bits_sram=bits,
+                                 per_superstep_peak=dict(
+                                     time_s=r_big.run.time_s))
+    for name, pkg in (("dcra-hbm-horiz", DCRA_HBM_HORIZ),
+                      ("dcra-hbm-vert", DCRA_HBM_VERT)):
+        dy, dx = tiny.dies
+        t_hbm = (hbm_bits / 8) / (dy * dx * HBM_CHANNELS
+                                  * HBM_CHANNEL_GBS * 1e9)
+        t = max(r_tiny.run.time_s, t_hbm)
+        reports[name] = price(pkg, tiny, r_tiny.run.counters,
+                              mem_bits_sram=touched * (1 - 0.15),
+                              mem_bits_hbm=hbm_bits,
+                              per_superstep_peak=dict(time_s=t))
+
+    base = reports["dalorex"]
+    out = {}
+    for name, rep in reports.items():
+        thr_per_usd = (1.0 / rep.time_s) / rep.cost_usd
+        eff_per_usd = (1.0 / rep.energy_j) / rep.cost_usd
+        out[name] = (thr_per_usd, eff_per_usd)
+        row(f"fig9/{name}", rep.time_s * 1e6,
+            f"thr_per_$_x={thr_per_usd/((1/base.time_s)/base.cost_usd):.2f};"
+            f"eff_per_$_x={eff_per_usd/((1/base.energy_j)/base.cost_usd):.2f};"
+            f"cost=${rep.cost_usd:.0f};power_w={rep.power_w:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

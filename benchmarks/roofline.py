@@ -1,0 +1,58 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the
+EXPERIMENTS.md table (single-pod terms per arch x shape; dominant term;
+MODEL_FLOPS/HLO_FLOPs ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from common import row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh="single"):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(ART, f"*_{mesh}.json"))):
+        art = json.load(open(path))
+        if art.get("status") != "ok":
+            continue
+        cells[(art["arch"], art["shape"])] = art
+    return cells
+
+
+def run(small: bool = True):
+    cells = load("single")
+    if not cells:
+        row("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return {}
+    for (arch, shape), art in sorted(cells.items()):
+        t = art["roofline_terms_s"]
+        bound = max(t, key=t.get)
+        frac = art["useful_flops_ratio"]
+        row(f"roofline/{arch}/{shape}", t[bound] * 1e6,
+            f"dom={bound};compute_s={t['compute_s']:.4g};"
+            f"memory_s={t['memory_s']:.4g};"
+            f"collective_s={t['collective_s']:.4g};"
+            f"useful_flops={frac:.3f};"
+            f"coll_bytes={art['collectives']['total_bytes']:.3g}")
+    # summary: worst cells by each criterion (the hillclimb shortlist)
+    def ratio(a):
+        t = a["roofline_terms_s"]
+        dom = max(t.values())
+        return t["compute_s"] / max(dom, 1e-12)
+
+    worst = min(cells.items(), key=lambda kv: ratio(kv[1]))
+    collbound = max(cells.items(),
+                    key=lambda kv: kv[1]["roofline_terms_s"]["collective_s"]
+                    / max(max(kv[1]["roofline_terms_s"].values()), 1e-12))
+    row("roofline/worst_fraction", 0.0,
+        f"{worst[0][0]}/{worst[0][1]}")
+    row("roofline/most_collective_bound", 0.0,
+        f"{collbound[0][0]}/{collbound[0][1]}")
+    return cells
+
+
+if __name__ == "__main__":
+    run()

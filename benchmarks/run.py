@@ -1,0 +1,49 @@
+"""Benchmark harness driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  REPRO_BENCH_SCALE=k bumps
+dataset/grid sizes for longer runs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    ("fig6_network", "Fig. 6  network link-width options"),
+    ("fig7_queues", "Fig. 7  IQ:OQ ratio (Goldilocks)"),
+    ("fig8_proxy", "Fig. 8  proxies vs Dalorex"),
+    ("fig9_packaging", "Fig. 9  packaging: thr/$ & eff/$"),
+    ("fig10_energy", "Fig. 10 energy breakdown"),
+    ("fig11_scaling", "Fig. 11 strong scaling"),
+    ("graph500_compare", "Graph500 BFS accounting"),
+    ("kernels_bench", "Pallas kernel microbench"),
+    ("roofline", "Roofline terms from dry-run artifacts"),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for mod_name, desc in MODULES:
+        print(f"# === {mod_name}: {desc} ===", flush=True)
+        try:
+            mod = __import__(mod_name)
+            mod.run(small=True)
+        except Exception as e:
+            failures += 1
+            print(f"# FAILED {mod_name}: {type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc()
+    print(f"# total {time.time()-t0:.1f}s, failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Strong scaling on one chart: BFS across grid sizes, proxy on/off
+(the shape of the paper's Fig. 8/11 at laptop scale).
+
+    PYTHONPATH=src python examples/graph_scaling.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps, rmat_edges
+
+graph = rmat_edges(scale=12, edge_factor=8)
+root = int(np.argmax(graph.out_degree()))
+
+print(f"{'tiles':>7} {'mode':>7} {'GTEPS':>8} {'avg hops':>9} "
+      f"{'supersteps':>10}")
+for n_tiles in (64, 256, 1024):
+    grid = square_grid(n_tiles)
+    for mode in ("direct", "proxy"):
+        px = None if mode == "direct" else ProxyConfig(
+            max(grid.ny // 4, 2), max(grid.nx // 4, 2), slots=512)
+        r = apps.bfs(graph, root, grid, proxy=px, oq_cap=32)
+        print(f"{n_tiles:>7} {mode:>7} {r.gteps:8.3f} "
+              f"{r.run.counters.avg_hops:9.2f} {r.run.supersteps:>10}")

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests through the
+continuous-batching scheduler (slots refill as requests finish).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+serve_main(["--arch", "h2o-danube-3-4b", "--smoke", "--requests", "6",
+            "--slots", "3", "--max-new", "8", "--max-len", "48"])

@@ -1,0 +1,39 @@
+"""End-to-end driver: train a ~100M-param deepseek-style LM for a few
+hundred steps on the synthetic order-2 language, with checkpointing and
+the fault-tolerant loop.
+
+Defaults are CPU-sized (~30 min); pass --full for the true ~100M x 300
+steps run on capable hardware.
+
+    PYTHONPATH=src python examples/train_lm.py [--full]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true",
+                help="~100M params, 300 steps (hours on CPU)")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+if args.full:
+    # deepseek-style dense: 12 x d512 x ffn(1408-ish scaled) ~ 100M with
+    # the 102k vocab embedding
+    argv = ["--arch", "deepseek-7b", "--d-model", "512", "--n-layers",
+            "12", "--steps", "300", "--batch", "16", "--seq", "512",
+            "--lr", "1e-3", "--microbatches", "2",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+else:
+    argv = ["--arch", "deepseek-7b", "--d-model", "128", "--n-layers",
+            "4", "--vocab", "2048", "--steps", "60", "--batch", "8",
+            "--seq", "128", "--lr", "2e-3",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "20"]
+
+losses = train_main(argv)
+assert losses[-1] < losses[0], "loss should decrease"
+print("OK: loss decreased; checkpoints in", args.ckpt_dir)

@@ -1,0 +1,19 @@
+"""MoE 256e top-8 + MLA + shared expert + MTP [arXiv:2412.19437; hf]
+
+Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this
+module is the ``--arch deepseek-v3-671b`` entry point exposing the full config, the
+reduced smoke config, and the applicable input shapes.
+"""
+from repro.models import registry
+
+ARCH = "deepseek-v3-671b"
+CONFIG = registry.ARCHS[ARCH]
+SMOKE = registry.reduced(CONFIG)
+# (shape -> applies) long_500k needs sub-quadratic attention (DESIGN.md
+# §Arch-applicability); decode applies to every assigned arch (all decode).
+SHAPES = {
+    "train_4k": True,
+    "prefill_32k": True,
+    "decode_32k": True,
+    "long_500k": False,
+}

@@ -1,0 +1,19 @@
+"""dense GQA (kv=4) + RoPE code LM [arXiv:2402.19173; hf]
+
+Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this
+module is the ``--arch starcoder2-15b`` entry point exposing the full config, the
+reduced smoke config, and the applicable input shapes.
+"""
+from repro.models import registry
+
+ARCH = "starcoder2-15b"
+CONFIG = registry.ARCHS[ARCH]
+SMOKE = registry.reduced(CONFIG)
+# (shape -> applies) long_500k needs sub-quadratic attention (DESIGN.md
+# §Arch-applicability); decode applies to every assigned arch (all decode).
+SHAPES = {
+    "train_4k": True,
+    "prefill_32k": True,
+    "decode_32k": True,
+    "long_500k": False,
+}

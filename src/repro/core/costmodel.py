@@ -1,0 +1,278 @@
+"""Cost / energy / time model for DCRA packages (paper Table III + §IV-B).
+
+Everything here is analytic and deterministic: given the traffic counters
+measured by the engine (exact message/hop/crossing counts) and a package
+configuration, we price time, energy and dollars exactly the way the
+paper does — Murphy-model die yield on a $6,047 7nm wafer, interposer /
+substrate / bonding overheads, $7.5/GB HBM, and the per-level pJ/bit and
+latency constants of Table III.
+
+The BSP time model: each superstep costs
+    max(compute_time, network_time_per_level..., memory_time)
+where compute is PU-ops at 1 GHz, network time is level traffic divided by
+provisioned level bandwidth (link width x links at that level), and memory
+time covers D$ miss traffic to HBM.  This reproduces the paper's
+observable effects (Fig. 6 link-width scaling, Fig. 9/10/11 tradeoffs)
+from measured traffic rather than per-cycle router simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from .netstats import MSG_BITS, TrafficCounters
+from .tilegrid import TileGrid
+
+# --------------------------------------------------------------------------
+# Table III constants
+# --------------------------------------------------------------------------
+SRAM_DENSITY_MIB_MM2 = 3.5
+SRAM_RW_LAT_NS = 0.82
+SRAM_READ_PJ_BIT = 0.18
+SRAM_WRITE_PJ_BIT = 0.28
+CACHE_TAG_PJ = 6.3
+
+HBM_DENSITY_GIB_MM2 = 8.0 / 110.0
+HBM_CHANNELS = 8
+HBM_CHANNEL_GBS = 64.0
+HBM_RW_LAT_NS = 50.0
+HBM_RW_PJ_BIT = 3.7
+HBM_REFRESH_PJ_BIT = 0.22
+HBM_REFRESH_PERIOD_MS = 32.0
+
+MCM_PHY_AREAL_GBIT_MM2 = 690.0
+MCM_PHY_BEACH_GBIT_MM = 880.0
+INTERPOSER_PHY_AREAL_GBIT_MM2 = 1070.0
+INTERPOSER_PHY_BEACH_GBIT_MM = 1780.0
+D2D_LINK_LAT_NS = 4.0
+D2D_LINK_PJ_BIT = 0.55
+NOC_WIRE_LAT_PS_MM = 50.0
+NOC_WIRE_PJ_BIT_MM = 0.15
+NOC_ROUTER_LAT_PS = 500.0
+NOC_ROUTER_PJ_BIT = 0.10
+IO_DIE_RXTX_LAT_NS = 20.0
+OFF_PKG_PJ_BIT = 1.17
+
+CLOCK_GHZ = 1.0
+TILE_WIRE_MM = 0.8          # wire length of one tile-to-tile NoC hop
+
+# Fabrication economics (§IV-B)
+WAFER_COST_USD = 6047.0     # 300mm, 7nm
+WAFER_DIAMETER_MM = 300.0
+WAFER_EDGE_LOSS_MM = 4.0
+SCRIBE_MM = 0.2
+# Paper text says "0.07 defects per mm^2" — that must be per cm^2 (the
+# isine yield calculator it cites uses defects/cm^2; 0.07/mm^2 would give
+# ~1% yield on a 130mm^2 die).  We use the physically sane unit.
+DEFECT_DENSITY_MM2 = 0.07 / 100.0
+HBM_USD_PER_GB = 7.5
+INTERPOSER_COST_FRac_OF_DIE = 0.20   # HBM<->DCRA silicon interposer
+SUBSTRATE_COST_FRAC_OF_DIE = 0.10    # organic substrate, per equal area
+BONDING_COST_FRAC = 0.05
+
+# PU model: simple in-order core, ~instructions per task-record / per edge.
+PU_PJ_PER_OP = 2.0          # 7nm in-order RISC-V class energy/op (refs [90],[93])
+PU_OPS_PER_RECORD = 8.0     # drain+compare+update per mailbox record
+PU_OPS_PER_EDGE = 6.0       # stream one CSR edge and emit
+
+
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackageConfig:
+    """Packaging-time design decisions for a DCRA chip product (Table II)."""
+
+    name: str = "dcra-sram"
+    sram_per_tile_mib: float = 1.5
+    hbm_gb_per_die: float = 0.0            # 0 => SRAM-only product
+    hbm_vertical: bool = False             # Fig. 5 3D option vs interposer
+    intra_die_link_bits: int = 64          # NoC link width inside a die
+    inter_die_link_bits: int = 64          # substrate links between dies
+    inter_die_links: int = 2               # paper's option (c): 2x32-bit
+    off_pkg_gbs_per_die_edge: float = 512.0  # I/O die budget per border die
+    noc_count: int = 2                     # physical NoCs
+
+    @property
+    def has_hbm(self) -> bool:
+        return self.hbm_gb_per_die > 0
+
+
+# Paper's evaluated configurations.
+DCRA_SRAM = PackageConfig(name="dcra-sram")
+DCRA_HBM_HORIZ = PackageConfig(name="dcra-hbm-horiz", hbm_gb_per_die=8.0)
+DCRA_HBM_VERT = PackageConfig(name="dcra-hbm-vert", hbm_gb_per_die=8.0,
+                              hbm_vertical=True)
+# Dalorex baseline: same chiplet integration (paper §V-C), no proxies, and
+# the network option (a): single shared 32-bit crossing between dies.
+DALOREX = PackageConfig(name="dalorex", intra_die_link_bits=32,
+                        inter_die_link_bits=32, inter_die_links=1)
+
+NETWORK_OPTIONS = {
+    # Fig. 6 characterization: (intra_die_bits, inter_die_bits, inter_die_links)
+    "a_2x32_od32": PackageConfig(name="a", intra_die_link_bits=32,
+                                 inter_die_link_bits=32, inter_die_links=1),
+    "b_32+64_od32": PackageConfig(name="b", intra_die_link_bits=64,
+                                  inter_die_link_bits=32, inter_die_links=1),
+    "c_32+64_od2x32": PackageConfig(name="c", intra_die_link_bits=64,
+                                    inter_die_link_bits=32, inter_die_links=2),
+    "d_32+64_od64": PackageConfig(name="d", intra_die_link_bits=64,
+                                  inter_die_link_bits=64, inter_die_links=1),
+}
+
+
+# --------------------------------------------------------------------------
+# Silicon cost (Murphy yield)
+# --------------------------------------------------------------------------
+def murphy_yield(area_mm2: float, d0: float = DEFECT_DENSITY_MM2) -> float:
+    ad = area_mm2 * d0
+    if ad == 0:
+        return 1.0
+    return ((1.0 - math.exp(-ad)) / ad) ** 2
+
+
+def dies_per_wafer(area_mm2: float) -> float:
+    r = WAFER_DIAMETER_MM / 2.0 - WAFER_EDGE_LOSS_MM
+    side = math.sqrt(area_mm2) + SCRIBE_MM
+    eff = side * side
+    return max(1.0, math.pi * r * r / eff - math.pi * 2 * r / math.sqrt(2 * eff))
+
+
+def die_cost(area_mm2: float) -> float:
+    good = dies_per_wafer(area_mm2) * murphy_yield(area_mm2)
+    return WAFER_COST_USD / good
+
+
+def tile_area_mm2(sram_mib: float) -> float:
+    """SRAM area + logic (PU+router+TSU = 1/7th of SRAM area at 1.5MiB, §V-A)."""
+    sram = sram_mib / SRAM_DENSITY_MIB_MM2
+    logic = (1.5 / SRAM_DENSITY_MIB_MM2) / 7.0
+    return sram + logic
+
+
+def dcra_die_area_mm2(cfg: PackageConfig, grid: TileGrid) -> float:
+    tiles = grid.die_ny * grid.die_nx
+    base = tiles * tile_area_mm2(cfg.sram_per_tile_mib)
+    # PHY beachfront for inter-die links + I/O edge (adds ~4.5% for option c,
+    # matching the paper's reported area growth).
+    phy_frac = 0.02 + 0.0125 * cfg.inter_die_links
+    if cfg.hbm_vertical:
+        phy_frac += 0.05   # active-interposer pads/power for the 3D stack
+    return base * (1.0 + phy_frac)
+
+
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SystemReport:
+    """Priced execution: produced by ``price()`` from measured counters."""
+
+    time_s: float
+    energy_j: float
+    cost_usd: float
+    power_w: float
+    breakdown: Dict[str, float]
+
+    @property
+    def throughput_per_dollar(self) -> float:
+        return 1.0 / (self.time_s * self.cost_usd)
+
+    @property
+    def efficiency_per_dollar(self) -> float:
+        return 1.0 / (self.energy_j * self.cost_usd)
+
+
+def system_cost_usd(cfg: PackageConfig, grid: TileGrid) -> float:
+    """Dollar cost of the grid: DCRA dies + HBM + interposer/substrate/bonding."""
+    die_a = dcra_die_area_mm2(cfg, grid)
+    dcra_unit = die_cost(die_a)
+    dy, dx = grid.dies
+    n_dies = dy * dx
+    cost = n_dies * dcra_unit
+    if cfg.has_hbm:
+        cost += n_dies * cfg.hbm_gb_per_die * HBM_USD_PER_GB
+        ip = INTERPOSER_COST_FRac_OF_DIE * dcra_unit
+        if cfg.hbm_vertical:
+            ip *= 1.05  # paper: vertical costs ~5% more than horizontal
+        cost += n_dies * ip
+    # organic substrate (10% of equal-area die cost) + bonding 5%/die
+    cost += n_dies * SUBSTRATE_COST_FRAC_OF_DIE * dcra_unit
+    cost *= (1.0 + BONDING_COST_FRAC)
+    # I/O dies: one per package edge, small 16-tile-edge die, cheap node
+    cost += grid.num_packages * 2 * die_cost(30.0)
+    return cost
+
+
+def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
+          mem_bits_sram: float = 0.0, mem_bits_hbm: float = 0.0,
+          per_superstep_peak: Dict[str, float] | None = None) -> SystemReport:
+    """Convert measured traffic into (time, energy, $) under a package config.
+
+    Args:
+      counters: whole-run accumulated counters from the engine.
+      mem_bits_sram / mem_bits_hbm: dataset bits read+written locally.
+      per_superstep_peak: optional dict with peak per-superstep level
+        traffic {'compute_ops', 'intra_bits', 'die_bits', 'pkg_bits',
+        'hbm_bits'}; when provided, time is summed superstep-wise by the
+        engine instead (preferred); this function then only prices energy/$.
+    """
+    bits = MSG_BITS
+    # ------------------------------------------------------------- energy
+    e_wire = (counters.intra_die_hops * bits
+              * (NOC_WIRE_PJ_BIT_MM * TILE_WIRE_MM + NOC_ROUTER_PJ_BIT))
+    e_d2d = counters.inter_die_crossings * bits * (D2D_LINK_PJ_BIT + NOC_ROUTER_PJ_BIT)
+    e_pkg = counters.inter_pkg_crossings * bits * OFF_PKG_PJ_BIT
+    if cfg.has_hbm and cfg.hbm_vertical:
+        # 3D stacking saves the interposer wire energy on HBM accesses.
+        hbm_pj = HBM_RW_PJ_BIT * 0.72
+    else:
+        hbm_pj = HBM_RW_PJ_BIT
+    e_sram = mem_bits_sram * (SRAM_READ_PJ_BIT + SRAM_WRITE_PJ_BIT) / 2.0
+    e_hbm = mem_bits_hbm * hbm_pj
+    ops = (counters.records_consumed * PU_OPS_PER_RECORD
+           + counters.edges_processed * PU_OPS_PER_EDGE)
+    e_pu = ops * PU_PJ_PER_OP
+    # P$ tag checks
+    e_tags = (counters.filtered_at_proxy + counters.coalesced_at_proxy) * CACHE_TAG_PJ
+    energy_pj = e_wire + e_d2d + e_pkg + e_sram + e_hbm + e_pu + e_tags
+
+    # --------------------------------------------------------------- time
+    if per_superstep_peak is not None:
+        time_s = per_superstep_peak["time_s"]
+    else:
+        # fall back: aggregate roofline over the whole run
+        n_tiles = grid.num_tiles
+        compute_s = ops / n_tiles / (CLOCK_GHZ * 1e9)
+        dy, dx = grid.dies
+        intra_bw = cfg.intra_die_link_bits * CLOCK_GHZ * 1e9  # bit/s per link
+        # bisection-style serialization: level traffic / (links at level * bw)
+        intra_links = n_tiles * 2
+        die_links = (dy * dx) * 2 * cfg.inter_die_links
+        die_bw = cfg.inter_die_link_bits * CLOCK_GHZ * 1e9
+        pkg_links = max(1, grid.num_packages) * 4
+        pkg_bw = cfg.off_pkg_gbs_per_die_edge * 8e9 / 16.0
+        t_intra = counters.intra_die_hops * bits / (intra_links * intra_bw)
+        t_die = counters.inter_die_crossings * bits / (max(die_links, 1) * die_bw)
+        t_pkg = counters.inter_pkg_crossings * bits / (max(pkg_links, 1) * pkg_bw)
+        t_hbm = 0.0
+        if cfg.has_hbm and mem_bits_hbm:
+            t_hbm = (mem_bits_hbm / 8.0) / (dy * dx * HBM_CHANNELS * HBM_CHANNEL_GBS * 1e9)
+        time_s = max(compute_s, t_intra, t_die, t_pkg, t_hbm)
+
+    # refresh energy for HBM over the runtime
+    if cfg.has_hbm:
+        dy, dx = grid.dies
+        stored_bits = dy * dx * cfg.hbm_gb_per_die * 8e9
+        energy_pj += stored_bits * HBM_REFRESH_PJ_BIT * (time_s * 1e3 / HBM_REFRESH_PERIOD_MS)
+
+    energy_j = energy_pj * 1e-12
+    cost = system_cost_usd(cfg, grid)
+    return SystemReport(
+        time_s=time_s, energy_j=energy_j, cost_usd=cost,
+        power_w=energy_j / max(time_s, 1e-12),
+        breakdown=dict(
+            wire_j=(e_wire + e_d2d + e_pkg) * 1e-12,
+            mem_j=(e_sram + e_hbm) * 1e-12,
+            pu_j=e_pu * 1e-12,
+            tags_j=e_tags * 1e-12,
+            ops=ops,
+        ),
+    )

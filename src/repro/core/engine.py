@@ -1,0 +1,505 @@
+"""The data-local execution engine (paper §II-B, §III), TPU-adapted.
+
+Execution model
+---------------
+The dataset is scattered across tiles as equal chunks.  Work proceeds in
+*supersteps* (the TPU-idiomatic, bulk-synchronous rendering of the
+paper's asynchronous task pipeline — see DESIGN.md §2):
+
+  1. **IQ drain**: each tile consumes up to ``iq_cap`` pending records
+     from its *mailbox* (a dense, per-owned-index combining input queue —
+     incoming records with the same index are combined on arrival, which
+     is exactly what the paper's combining queues/P$ exploit: all
+     evaluated apps have commutative updates).  Unconsumed records remain
+     pending — measurable backpressure.
+  2. **Task execution / OQ emit**: consuming an improving record
+     re-activates the per-item edge cursor; each tile then streams up to
+     ``oq_cap`` edges from its active cursors (the paper's PU executing
+     tasks, with the OQ bounding per-superstep emission), producing
+     (dst_index, value) records.
+  3. **Proxy stage** (if configured): records are routed to the proxy
+     tile in the sender's region, batch-coalesced, filtered/combined
+     through a direct-mapped P$ with write-through or write-back policy,
+     and only surviving records are forwarded to the true owners.
+  4. **Delivery**: surviving records are combined into owner mailboxes.
+
+Every message is charged exact XY-torus hops at each leg; the BSP time
+model takes the per-superstep max over (tile compute, per-level network
+serialization, endpoint contention) — reproducing the paper's observable
+effects without per-cycle router simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import netstats
+from .costmodel import (CLOCK_GHZ, HBM_CHANNEL_GBS, HBM_CHANNELS,
+                        PU_OPS_PER_EDGE, PU_OPS_PER_RECORD, DCRA_SRAM,
+                        PackageConfig)
+from .netstats import MSG_BITS, TrafficCounters
+from .proxy import ProxyConfig, make_pcache, pcache_slot, proxy_tile
+from .tilegrid import TileGrid
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    """How an application maps onto the engine."""
+
+    name: str
+    combine: str             # 'min' | 'add'
+    edge_value: str          # 'add_w' | 'add_one' | 'mul_w' | 'carry' | 'one'
+    reactivate: bool = True  # mailbox improvements re-activate edge cursors
+    count_teps_on: str = "edges"   # what Graph500-style TEPS counts
+
+    @property
+    def identity(self) -> float:
+        return float("inf") if self.combine == "min" else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    grid: TileGrid
+    n_src: int                       # items with edge cursors (vertices/cols/elems)
+    n_dst: int                       # items receiving updates (vertices/rows/bins)
+    oq_cap: int = 64                 # edge emissions per tile per superstep
+    iq_ratio: int = 8                # iq_cap = iq_ratio * oq_cap
+    proxy: Optional[ProxyConfig] = None
+    pkg: PackageConfig = DCRA_SRAM
+    max_supersteps: int = 200_000
+    element_bits: int = 64           # index+value footprint per dataset element
+
+    @property
+    def iq_cap(self) -> int:
+        return self.iq_ratio * self.oq_cap
+
+    @property
+    def chunk_src(self) -> int:
+        return self.grid.chunk_size(self.n_src)
+
+    @property
+    def chunk_dst(self) -> int:
+        return self.grid.chunk_size(self.n_dst)
+
+
+class DataLocalEngine:
+    """Vectorised single-host engine: simulates the whole tile grid, with
+    exact traffic accounting.  (The sharded multi-device rendering of the
+    same schedule lives in ``core/collectives.py`` + ``launch/dryrun.py``.)
+    """
+
+    def __init__(self, app: AppSpec, cfg: EngineConfig,
+                 row_lo: np.ndarray, row_hi: np.ndarray,
+                 col_idx: np.ndarray, weights: Optional[np.ndarray] = None):
+        self.app = app
+        self.cfg = cfg
+        grid = cfg.grid
+        T = grid.num_tiles
+        self.T = T
+        self.Cs = cfg.chunk_src
+        self.Cd = cfg.chunk_dst
+        self.Ns = T * self.Cs
+        self.Nd = T * self.Cd
+        if cfg.proxy is not None:
+            if T * cfg.proxy.slots >= 2**31:
+                raise ValueError("T*slots must fit int32 for P$ sort keys")
+        # pad per-source arrays to Ns
+        self.row_lo = jnp.asarray(_pad(row_lo, self.Ns, 0), jnp.int32)
+        self.row_hi = jnp.asarray(_pad(row_hi, self.Ns, 0), jnp.int32)
+        self.col_idx = jnp.asarray(col_idx, jnp.int32)
+        if weights is None:
+            weights = np.ones_like(col_idx, dtype=np.float32)
+        self.weights = jnp.asarray(weights, jnp.float32)
+        self._superstep = jax.jit(self._superstep_impl)
+
+    # ---------------------------------------------------------------- state
+    def init_state(self, seed_idx=None, seed_val=None,
+                   values: Optional[np.ndarray] = None):
+        ident = jnp.float32(self.app.identity)
+        st = dict(
+            values=jnp.full((self.Nd,), ident) if values is None
+            else jnp.asarray(_pad(values, self.Nd, self.app.identity), jnp.float32),
+            mail_val=jnp.full((self.Nd,), ident),
+            mail_flag=jnp.zeros((self.Nd,), jnp.bool_),
+            cur_lo=jnp.zeros((self.Ns,), jnp.int32),
+            cur_hi=jnp.zeros((self.Ns,), jnp.int32),
+            cur_val=jnp.zeros((self.Ns,), jnp.float32),
+        )
+        if self.cfg.proxy is not None:
+            tags, vals = make_pcache(self.cfg.grid, self.cfg.proxy,
+                                     self.app.identity)
+            st["p_tag"], st["p_val"] = tags, vals
+        if seed_idx is not None:
+            si = jnp.asarray(np.atleast_1d(seed_idx), jnp.int32)
+            sv = jnp.asarray(np.atleast_1d(seed_val), jnp.float32)
+            st["mail_val"] = st["mail_val"].at[si].set(sv)
+            st["mail_flag"] = st["mail_flag"].at[si].set(True)
+        return st
+
+    def activate_all(self, state, cur_val):
+        """Epoch-style activation (PageRank/SPMV/Histogram): every source
+        item starts with its full edge range and a carried value."""
+        state = dict(state)
+        state["cur_lo"] = self.row_lo
+        state["cur_hi"] = self.row_hi
+        state["cur_val"] = jnp.asarray(_pad(cur_val, self.Ns, 0.0), jnp.float32)
+        return state
+
+    # ------------------------------------------------------------ superstep
+    def _superstep_impl(self, state, flush: jnp.ndarray):
+        app, cfg, grid = self.app, self.cfg, self.cfg.grid
+        T, Cs, Cd = self.T, self.Cs, self.Cd
+        is_min = app.combine == "min"
+        ident = jnp.float32(app.identity)
+
+        # ---- 1. IQ drain (budgeted mailbox consumption) -------------------
+        flag2d = state["mail_flag"].reshape(T, Cd)
+        csum = jnp.cumsum(flag2d.astype(jnp.int32), axis=1)
+        take2d = flag2d & (csum <= cfg.iq_cap)
+        take = take2d.reshape(-1)
+        mval, vals = state["mail_val"], state["values"]
+        if is_min:
+            improved = take & (mval < vals)
+            new_vals = jnp.where(improved, mval, vals)
+        else:
+            improved = take
+            new_vals = jnp.where(take, vals + mval, vals)
+        mail_flag = state["mail_flag"] & ~take
+        mail_val = jnp.where(take, ident, mval)
+        consumed_per_tile = jnp.sum(take2d, axis=1)
+
+        cur_lo, cur_hi, cur_val = state["cur_lo"], state["cur_hi"], state["cur_val"]
+        if app.reactivate:
+            # an improving record restarts the item's edge cursor with the
+            # new value (re-expansion of an already-visited item is the
+            # engine's rendering of data staleness: measurable wasted work).
+            re = improved[: self.Ns] if self.Nd == self.Ns else jnp.zeros(
+                (self.Ns,), jnp.bool_)
+            cur_lo = jnp.where(re, self.row_lo, cur_lo)
+            cur_hi = jnp.where(re, self.row_hi, cur_hi)
+            cur_val = jnp.where(re, new_vals[: self.Ns], cur_val)
+
+        # ---- 2. OQ emit (budgeted edge streaming) -------------------------
+        B = cfg.oq_cap
+        rem2d = (cur_hi - cur_lo).reshape(T, Cs)
+        prefix = jnp.cumsum(rem2d, axis=1)                    # inclusive
+        capped = jnp.minimum(prefix, B)
+        take_v2d = capped - jnp.concatenate(
+            [jnp.zeros((T, 1), jnp.int32), capped[:, :-1]], axis=1)
+        total_take = capped[:, -1]                            # (T,)
+        b_idx = jnp.arange(B, dtype=jnp.int32)
+        vslot = jax.vmap(
+            functools.partial(jnp.searchsorted, side="right"),
+            in_axes=(0, None))(capped, b_idx)
+        vslot = jnp.minimum(vslot, Cs - 1)                    # (T, B)
+        capped_prev = capped - take_v2d
+        offset = b_idx[None, :] - jnp.take_along_axis(capped_prev, vslot, axis=1)
+        vglob = vslot + jnp.arange(T, dtype=jnp.int32)[:, None] * Cs
+        pos = cur_lo[vglob] + offset
+        emit_mask = b_idx[None, :] < total_take[:, None]
+        pos = jnp.clip(pos, 0, self.col_idx.shape[0] - 1)
+        dst = self.col_idx[pos]
+        cval = cur_val[vglob]
+        if app.edge_value == "add_w":
+            cand = cval + self.weights[pos]
+        elif app.edge_value == "add_one":
+            cand = cval + 1.0
+        elif app.edge_value == "mul_w":
+            cand = cval * self.weights[pos]
+        elif app.edge_value == "carry":
+            cand = cval
+        elif app.edge_value == "one":
+            cand = jnp.ones_like(cval)
+        else:
+            raise ValueError(app.edge_value)
+        cur_lo = cur_lo + (take_v2d.reshape(-1))
+        edges_per_tile = total_take
+
+        # flatten records
+        R = T * B
+        dst = dst.reshape(R)
+        cand = cand.reshape(R)
+        emit_mask = emit_mask.reshape(R)
+        src_tile = jnp.repeat(jnp.arange(T, dtype=jnp.int32), B)
+        owner = jnp.minimum(dst // Cd, T - 1)
+
+        stats = dict(edges_processed=jnp.sum(edges_per_tile),
+                     records_consumed=jnp.sum(consumed_per_tile),
+                     compute_per_tile_max=jnp.max(
+                         consumed_per_tile * PU_OPS_PER_RECORD
+                         + edges_per_tile * PU_OPS_PER_EDGE),
+                     filtered_at_proxy=jnp.float32(0.0),
+                     coalesced_at_proxy=jnp.float32(0.0))
+
+        p_tag = state.get("p_tag")
+        p_val = state.get("p_val")
+
+        if cfg.proxy is None:
+            ch = netstats.charge(grid, src_tile, owner, emit_mask)
+            mail_val, mail_flag, dmax = _deliver(
+                mail_val, mail_flag, dst, cand, emit_mask, owner, T,
+                self.Nd, is_min)
+            charges = dict(ch, owner_msgs=ch["messages"],
+                           owner_hop_msgs=ch["hop_msgs"])
+        else:
+            (mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax,
+             fl_extra) = self._proxy_stage(
+                mail_val, mail_flag, p_tag, p_val, dst, cand, emit_mask,
+                src_tile, owner, flush, is_min, ident)
+            stats.update(pstats)
+
+        # ---- P$ flush (write-back): emit all resident entries to owners --
+        new_state = dict(values=new_vals, mail_val=mail_val,
+                         mail_flag=mail_flag, cur_lo=cur_lo, cur_hi=cur_hi,
+                         cur_val=cur_val)
+        if p_tag is not None:
+            new_state["p_tag"], new_state["p_val"] = p_tag, p_val
+
+        pending = (jnp.sum(new_state["mail_flag"])
+                   + jnp.sum(new_state["cur_hi"] > new_state["cur_lo"]))
+        stats["pending"] = pending
+        # write-back P$ residency is *deferred* work: it does not keep the
+        # engine busy, but must be flushed before the result is final.
+        if p_tag is not None and self.cfg.proxy.write_back:
+            stats["p_resident"] = jnp.sum(new_state["p_tag"] >= 0)
+        else:
+            stats["p_resident"] = jnp.int32(0)
+        stats["delivered_max_per_tile"] = dmax
+        stats.update({k: jnp.asarray(v, jnp.float32) for k, v in charges.items()})
+        return new_state, stats
+
+    # --------------------------------------------------------- proxy stage
+    def _proxy_stage(self, mail_val, mail_flag, p_tag, p_val, dst, cand,
+                     emit_mask, src_tile, owner, flush, is_min, ident):
+        cfg, grid = self.cfg, self.cfg.grid
+        pcfg = cfg.proxy
+        T = self.T
+        S = pcfg.slots
+        R = dst.shape[0]
+
+        ptile = proxy_tile(grid, pcfg, owner, src_tile)
+        leg1 = netstats.charge(grid, src_tile, ptile, emit_mask)
+
+        slot = pcache_slot(pcfg, dst)
+        key = jnp.where(emit_mask, ptile * S + slot, T * S)   # sentinel at end
+        dkey = jnp.where(emit_mask, dst, self.Nd)
+        # lexicographic (key, dst) via two stable argsorts
+        perm1 = jnp.argsort(dkey, stable=True)
+        key1, dst1 = key[perm1], dst[perm1]
+        cand1, mask1 = cand[perm1], emit_mask[perm1]
+        perm2 = jnp.argsort(key1, stable=True)
+        skey, sdst = key1[perm2], dst1[perm2]
+        scand, smask = cand1[perm2], mask1[perm2]
+
+        first = jnp.arange(R) == 0
+        new_slot = smask & (first | (skey != jnp.roll(skey, 1)))
+        new_dst = smask & (new_slot | (sdst != jnp.roll(sdst, 1)))
+        gid = jnp.cumsum(new_dst.astype(jnp.int32)) - 1
+        gid = jnp.where(smask, gid, R - 1)
+        if is_min:
+            gagg = jax.ops.segment_min(jnp.where(smask, scand, INF), gid,
+                                       num_segments=R, indices_are_sorted=True)
+        else:
+            gagg = jax.ops.segment_sum(jnp.where(smask, scand, 0.0), gid,
+                                       num_segments=R, indices_are_sorted=True)
+        combined = gagg[gid]                                   # per-record view
+        n_leaders = jnp.sum(new_dst)
+        coalesced = jnp.sum(smask) - n_leaders
+
+        winner = new_slot                                      # first dst-group per slot
+        bypass = new_dst & ~new_slot                           # batch slot conflicts
+
+        wtile = jnp.minimum(skey // S, T - 1)
+        wslot = skey % S
+        cur_tag = p_tag[wtile, wslot]
+        cur_pv = p_val[wtile, wslot]
+        tag_hit = winner & (cur_tag == sdst)
+        if is_min:
+            improves = combined < cur_pv
+        else:
+            improves = jnp.ones_like(cur_pv, dtype=bool)
+        filtered = tag_hit & ~improves                         # absorbed
+        upd_hit = tag_hit & improves
+        miss = winner & ~tag_hit
+        evict = miss & (cur_tag >= 0) & pcfg.write_back        # flush resident
+
+        if is_min:
+            new_pv_hit = jnp.minimum(cur_pv, combined)
+        else:
+            new_pv_hit = cur_pv + combined
+        inst_val = jnp.where(upd_hit, new_pv_hit, combined)
+        do_write = upd_hit | miss
+        # Scatter P$ updates.  Only winner records write, and there is at
+        # most one winner per (tile, slot) per superstep; non-writers are
+        # redirected to a padding row so no duplicate index can clobber a
+        # winner's write (XLA scatter order with dupes is undefined).
+        wtile_safe = jnp.where(do_write, wtile, T)
+        p_tag = jnp.concatenate([p_tag, jnp.zeros((1, S), p_tag.dtype)]) \
+            .at[wtile_safe, wslot].set(sdst)[:T]
+        p_val = jnp.concatenate([p_val, jnp.zeros((1, S), p_val.dtype)]) \
+            .at[wtile_safe, wslot].set(inst_val)[:T]
+
+        # forwarding set
+        if pcfg.write_back:
+            fwd_now = bypass                                   # only conflicts bypass
+        else:
+            fwd_now = upd_hit | miss | bypass                  # write-through
+        fdst = jnp.where(fwd_now, sdst, self.Nd)
+        fval = jnp.where(fwd_now, combined, ident)
+        # evicted residents (write-back) also forward
+        edst = jnp.where(evict, cur_tag, self.Nd)
+        eval_ = jnp.where(evict, cur_pv, ident)
+
+        # write-back flush: when the engine signals idle, spill whole P$
+        def flushed(args):
+            p_tag_, p_val_ = args
+            ft = p_tag_.reshape(-1)
+            fv = p_val_.reshape(-1)
+            return ft, fv, jnp.full_like(ft, -1), jnp.full(fv.shape, ident)
+
+        def not_flushed(args):
+            p_tag_, p_val_ = args
+            z = jnp.full((T * S,), -1, jnp.int32)
+            return z, jnp.full((T * S,), ident), p_tag_.reshape(-1), p_val_.reshape(-1)
+
+        if pcfg.write_back:
+            ftags, fvals, keep_t, keep_v = jax.lax.cond(
+                flush, flushed, not_flushed, (p_tag, p_val))
+            p_tag = keep_t.reshape(T, S)
+            p_val = keep_v.reshape(T, S)
+            flush_dst = jnp.where(ftags >= 0, ftags, self.Nd)
+            flush_val = jnp.where(ftags >= 0, fvals, ident)
+            flush_src = jnp.repeat(jnp.arange(T, dtype=jnp.int32), S)
+        else:
+            flush_dst = flush_val = flush_src = None
+
+        # charge + deliver all forwarded legs
+        all_dst = [fdst, edst]
+        all_val = [fval, eval_]
+        all_src = [jnp.minimum(skey // S, T - 1)] * 2
+        if flush_dst is not None:
+            all_dst.append(flush_dst)
+            all_val.append(flush_val)
+            all_src.append(flush_src)
+        cat_dst = jnp.concatenate(all_dst)
+        cat_val = jnp.concatenate(all_val)
+        cat_src = jnp.concatenate(all_src)
+        cat_mask = cat_dst < self.Nd
+        cat_owner = jnp.minimum(cat_dst // self.Cd, T - 1)
+        leg2 = netstats.charge(grid, cat_src, cat_owner, cat_mask)
+        mail_val, mail_flag, dmax = _deliver(
+            mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_owner, T,
+            self.Nd, is_min)
+        charges = dict(netstats.merge_charges(leg1, leg2),
+                       owner_msgs=leg2["messages"],
+                       owner_hop_msgs=leg2["hop_msgs"])
+        pstats = dict(filtered_at_proxy=jnp.sum(filtered).astype(jnp.float32),
+                      coalesced_at_proxy=coalesced.astype(jnp.float32))
+        return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, None
+
+    # ----------------------------------------------------------------- run
+    def run(self, state, max_supersteps: Optional[int] = None,
+            progress_every: int = 0):
+        """Run supersteps until drained; returns (state, RunResult)."""
+        cfg = self.cfg
+        maxs = max_supersteps or cfg.max_supersteps
+        counters = TrafficCounters()
+        cycles = 0.0
+        write_back = cfg.proxy is not None and cfg.proxy.write_back
+        steps = 0
+        pkg = cfg.pkg
+        grid = cfg.grid
+        dy, dx = grid.dies
+        n_die_links = (dy * (dx - 1) + dx * (dy - 1)) * 2 * pkg.inter_die_links \
+            if dy * dx > 1 else 1
+        py, px = grid.packages
+        n_pkg_links = max(1, (py * (px - 1) + px * (py - 1)) * 2)
+        intra_links = grid.num_tiles * 4
+        diameter = (grid.ny + grid.nx) / (2 if grid.torus else 1)
+
+        flush_flag = jnp.asarray(False)
+        while steps < maxs:
+            state, stats = self._superstep(state, flush_flag)
+            stats = jax.device_get(stats)
+            steps += 1
+            sc = TrafficCounters(
+                messages=stats["messages"], hop_msgs=stats["hop_msgs"],
+                owner_msgs=stats["owner_msgs"],
+                owner_hop_msgs=stats["owner_hop_msgs"],
+                intra_die_hops=stats["intra_die_hops"],
+                inter_die_crossings=stats["inter_die_crossings"],
+                inter_pkg_crossings=stats["inter_pkg_crossings"],
+                filtered_at_proxy=stats["filtered_at_proxy"],
+                coalesced_at_proxy=stats["coalesced_at_proxy"],
+                edges_processed=stats["edges_processed"],
+                records_consumed=stats["records_consumed"], supersteps=1)
+            counters.add(sc)
+            # ---- BSP time model for this superstep ------------------------
+            t_compute = stats["compute_per_tile_max"]          # PU ops (1/cycle)
+            bits = MSG_BITS
+            t_intra = stats["intra_die_hops"] * bits / (
+                intra_links * pkg.intra_die_link_bits)
+            t_die = stats["inter_die_crossings"] * bits / (
+                n_die_links * pkg.inter_die_link_bits)
+            t_pkg = stats["inter_pkg_crossings"] * bits / (n_pkg_links * 512.0)
+            t_end = stats["delivered_max_per_tile"] * bits / pkg.intra_die_link_bits
+            step_cycles = max(t_compute, t_intra, t_die, t_pkg, t_end)
+            if step_cycles > 0 or stats["pending"] > 0:
+                cycles += step_cycles + diameter * 0.5         # pipeline fill
+            if flush_flag:
+                flush_flag = jnp.asarray(False)
+            if stats["pending"] == 0:
+                # live work drained; spill any write-back P$ residue (the
+                # paper's TSU heuristic: flush when queues/buffers go idle).
+                # Repeated flushes terminate: a spilled value that does not
+                # improve its owner generates no new work.
+                if write_back and stats["p_resident"] > 0:
+                    flush_flag = jnp.asarray(True)
+                    continue
+                break
+            if progress_every and steps % progress_every == 0:
+                print(f"  [{self.app.name}] step {steps} pending={stats['pending']:.0f}")
+        counters.supersteps = steps
+        time_s = cycles / (CLOCK_GHZ * 1e9)
+        return state, RunResult(counters=counters, cycles=cycles, time_s=time_s,
+                                supersteps=steps)
+
+
+@dataclasses.dataclass
+class RunResult:
+    counters: TrafficCounters
+    cycles: float
+    time_s: float
+    supersteps: int
+
+
+def _deliver(mail_val, mail_flag, dst, val, mask, owner, T, Nd, is_min):
+    """Combine records into owner mailboxes; returns endpoint-contention max."""
+    safe_dst = jnp.where(mask, dst, Nd)
+    mv = jnp.concatenate([mail_val, jnp.zeros((1,), mail_val.dtype)])
+    mf = jnp.concatenate([mail_flag, jnp.zeros((1,), jnp.bool_)])
+    if is_min:
+        mv = mv.at[safe_dst].min(jnp.where(mask, val, INF))
+    else:
+        mv = mv.at[safe_dst].add(jnp.where(mask, val, 0.0))
+    mf = mf.at[safe_dst].max(mask)
+    per_tile = jax.ops.segment_sum(mask.astype(jnp.float32),
+                                   jnp.where(mask, owner, T),
+                                   num_segments=T + 1)[:T]
+    return mv[:Nd], mf[:Nd], jnp.max(per_tile)
+
+
+def _pad(a: np.ndarray, n: int, fill) -> np.ndarray:
+    a = np.asarray(a)
+    if a.shape[0] == n:
+        return a
+    out = np.full((n,), fill, dtype=a.dtype)
+    out[: a.shape[0]] = a
+    return out

@@ -1,0 +1,77 @@
+"""Pipeline parallelism (GPipe-style) over a mesh axis, via shard_map +
+collective_permute.
+
+For >1k-chip jobs the scan-over-layers + FSDP schedule stops scaling
+(per-layer weight gathers cross the whole data axis); pipelining layer
+*stages* over a mesh axis keeps weight traffic local and overlaps the
+stage boundary transfer with compute.  This module gives the minimal
+complete form: L layers split into S contiguous stages laid out on a
+mesh axis; microbatches stream through; each stage boundary is one
+collective_permute (neighbour hop — cheap on a torus, and across pods it
+crosses the DCI exactly once per microbatch: the proxy-region discipline
+again).
+
+API (used inside shard_map over the stage axis):
+    run_pipeline(stage_fn, params_stage, x_mb, axis, n_stages)
+where stage_fn(params_stage, x) applies this device's layer block.
+The schedule is the standard GPipe fill-drain: T = M + S - 1 ticks for
+M microbatches; bubble fraction (S-1)/(M+S-1).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def stage_index(axis: str):
+    return jax.lax.axis_index(axis)
+
+
+def run_pipeline(stage_fn: Callable, params_stage, x_mb, axis: str,
+                 n_stages: int):
+    """Run microbatches through pipeline stages laid out on ``axis``.
+
+    stage_fn: (params_stage, x) -> x, this device's contiguous layer
+        block (same shape in/out — a residual-stream transformer block).
+    params_stage: this device's stage parameters (leading stage axis
+        already sharded away by shard_map).
+    x_mb: (M, mb, S, D) microbatched input; only stage 0 reads it, but
+        every device passes the same shape (SPMD).
+    Returns (M, mb, S, D): outputs as produced by the LAST stage (other
+    devices return garbage slots; the caller selects stage S-1's copy).
+    """
+    m = x_mb.shape[0]
+    sidx = jax.lax.axis_index(axis)
+    ticks = m + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def tick(carry, t):
+        buf, outs = carry
+        # stage 0 injects microbatch t (if in range); others use buf
+        inject = jnp.where(t < m, t, m - 1)
+        x_in = jnp.where(sidx == 0, x_mb[inject], buf)
+        y = stage_fn(params_stage, x_in)
+        # last stage banks its result for microbatch (t - S + 1)
+        out_slot = t - (n_stages - 1)
+        slot = jnp.clip(out_slot, 0, m - 1)
+        write = jnp.logical_and(sidx == n_stages - 1, out_slot >= 0)
+        outs = jax.lax.cond(
+            write,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, slot, 0),
+            lambda o: o, outs)
+        # boundary hop: neighbour permute (stage s -> s+1)
+        buf = jax.lax.ppermute(y, axis, perm)
+        return (buf, outs), None
+
+    buf0 = jnp.zeros_like(x_mb[0])
+    outs0 = jnp.zeros_like(x_mb)
+    (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                jnp.arange(ticks))
+    return outs
+
+
+def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

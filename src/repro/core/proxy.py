@@ -1,0 +1,80 @@
+"""Proxy regions (paper §III-A): the core technique.
+
+The tile grid is divided into P subgrids ("proxy regions").  Each region
+holds proxy ownership of an entire selected data array, distributed across
+the region's tiles by taking the owner tile's coordinates modulo the
+region dimensions (the paper's P_DIST).  A task message destined for a
+far-away owner is first routed to the proxy tile inside the *sender's*
+region, where a direct-mapped proxy cache (P$) filters unsuccessful
+updates (e.g. non-improving minimisations) and coalesces commutative ones
+(additions) before forwarding a single combined record to the true owner.
+
+Policies (paper §III-A "Proxy Coherence"):
+  * write-through: forward whenever the proxy value improves (used by
+    SSSP/BFS/WCC, which run without epoch barriers and need fast
+    propagation);
+  * write-back: accumulate locally and flush on eviction / at epoch or
+    kernel end (used by PageRank(BSP), SPMV, Histogram, whose updates are
+    purely additive).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .tilegrid import TileGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxyConfig:
+    """Per-task proxy configuration (one entry of Table II 'Per Task')."""
+
+    region_ny: int
+    region_nx: int
+    slots: int = 1024          # P$ entries per tile (direct-mapped)
+    write_back: bool = False   # False => write-through
+
+    def num_regions(self, grid: TileGrid) -> int:
+        return (grid.ny // self.region_ny) * (grid.nx // self.region_nx)
+
+
+def region_id(grid: TileGrid, cfg: ProxyConfig, tid):
+    """Proxy-region id of a tile."""
+    y, x = grid.coords(tid)
+    rx = grid.nx // cfg.region_nx
+    return (y // cfg.region_ny) * rx + (x // cfg.region_nx)
+
+
+def proxy_tile(grid: TileGrid, cfg: ProxyConfig, owner_tid, src_tid):
+    """Proxy tile for a message from ``src_tid`` to owner ``owner_tid``.
+
+    The proxy lives in the sender's region, at the owner's coordinates
+    modulo the region dimensions (paper Fig. 2).
+    """
+    oy, ox = grid.coords(owner_tid)
+    sy, sx = grid.coords(src_tid)
+    ry0 = (sy // cfg.region_ny) * cfg.region_ny
+    rx0 = (sx // cfg.region_nx) * cfg.region_nx
+    py = ry0 + oy % cfg.region_ny
+    px = rx0 + ox % cfg.region_nx
+    return grid.tid(py, px)
+
+
+def pcache_slot(cfg: ProxyConfig, global_idx):
+    """Direct-mapped P$ slot for a global array index.
+
+    Indices that proxy to the same tile are congruent modulo the region
+    geometry, so a simple modulo hash distributes them across slots.
+    A P$ line holds a single element (paper §III-C) to avoid multi-update
+    messages in write-back mode.
+    """
+    return global_idx % jnp.int32(cfg.slots)
+
+
+def make_pcache(grid: TileGrid, cfg: ProxyConfig, default_value: float):
+    """Allocate per-tile P$ state: (tags, values).  tag == -1 => invalid."""
+    shape = (grid.num_tiles, cfg.slots)
+    tags = jnp.full(shape, -1, dtype=jnp.int32)
+    vals = jnp.full(shape, default_value, dtype=jnp.float32)
+    return tags, vals

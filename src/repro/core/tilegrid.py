@@ -1,0 +1,153 @@
+"""Tile-grid geometry for the DCRA data-local execution model.
+
+A DCRA system is a 2D grid of ``ny x nx`` tiles.  Tiles are grouped into
+dies (default 16x16 per the paper), dies into packages (default 64x64
+tiles per package, i.e. 4x4 dies), packages onto a board.  Every dataset
+array of global length N is scattered across tiles as equal-sized chunks
+(``chunk = ceil(N / num_tiles)``), and the *owner* of global index ``i``
+is ``i // chunk`` — exactly the paper's index-routed placement, which lets
+messages be routed by their first parameter with no headers.
+
+All geometry helpers are written with ``jnp``-compatible arithmetic so
+they can be traced inside jitted supersteps; they also work with plain
+numpy arrays and python ints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGrid:
+    """Geometry of a DCRA tile grid.
+
+    Attributes:
+      ny, nx: grid dimensions in tiles.
+      die_ny, die_nx: tiles per die (tapeout-time; paper uses 16x16).
+      pkg_ny, pkg_nx: tiles per package (packaging-time; paper uses 64x64).
+      torus: whether the tile network is configured as a (folded) 2D torus
+        (compile-time reconfigurable per the paper, Fig. 4).
+    """
+
+    ny: int
+    nx: int
+    die_ny: int = 16
+    die_nx: int = 16
+    pkg_ny: int = 64
+    pkg_nx: int = 64
+    torus: bool = True
+
+    def __post_init__(self):
+        if self.ny <= 0 or self.nx <= 0:
+            raise ValueError("grid dims must be positive")
+
+    # ------------------------------------------------------------------ ids
+    @property
+    def num_tiles(self) -> int:
+        return self.ny * self.nx
+
+    @property
+    def dies(self) -> Tuple[int, int]:
+        return (max(1, self.ny // self.die_ny), max(1, self.nx // self.die_nx))
+
+    @property
+    def packages(self) -> Tuple[int, int]:
+        return (max(1, self.ny // self.pkg_ny), max(1, self.nx // self.pkg_nx))
+
+    @property
+    def num_packages(self) -> int:
+        py, px = self.packages
+        return py * px
+
+    def coords(self, tid):
+        """tile id -> (y, x). Row-major, matching the paper's logical ids."""
+        return tid // self.nx, tid % self.nx
+
+    def tid(self, y, x):
+        return y * self.nx + x
+
+    # ------------------------------------------------------------- partition
+    def chunk_size(self, n: int) -> int:
+        """Equal-chunk size for a global array of length n."""
+        return -(-n // self.num_tiles)
+
+    def owner(self, idx, n: int):
+        """Owner tile of global array index ``idx`` (array of length n)."""
+        return jnp.minimum(idx // self.chunk_size(n), self.num_tiles - 1)
+
+    # -------------------------------------------------------------- routing
+    def _axis_hops(self, a, b, period: int):
+        """Hops along one axis under XY dimension-ordered routing."""
+        d = jnp.abs(a - b)
+        if self.torus and period > 1:
+            return jnp.minimum(d, period - d)
+        return d
+
+    def hops(self, src_tid, dst_tid):
+        """Total router-to-router hops for a message src -> dst (XY/DOR)."""
+        sy, sx = self.coords(src_tid)
+        dy, dx = self.coords(dst_tid)
+        return self._axis_hops(sx, dx, self.nx) + self._axis_hops(sy, dy, self.ny)
+
+    def _axis_crossings(self, a, b, period: int, cell: int):
+        """Number of ``cell``-boundaries crossed travelling a -> b along one
+        axis, taking the shorter torus direction when configured.
+
+        Boundary between coordinate c and c+1 exists iff (c+1) % cell == 0.
+        """
+        lo = jnp.minimum(a, b)
+        hi = jnp.maximum(a, b)
+        # boundaries in [lo, hi): floor(hi/cell) - floor(lo/cell)
+        direct = hi // cell - lo // cell
+        if not (self.torus and period > 1):
+            return direct
+        # wrap path crosses boundaries in [hi, period) and [0, lo), plus the
+        # wrap seam itself iff the seam is a cell boundary — which requires
+        # at least two cells along the axis (a torus confined to one
+        # die/package wraps on internal links).
+        seam = 1 if (period % cell == 0 and period > cell) else 0
+        wrap = (period - 1) // cell - hi // cell + lo // cell + seam
+        d = hi - lo
+        use_wrap = (period - d) < d
+        return jnp.where(use_wrap, wrap, direct)
+
+    def link_levels(self, src_tid, dst_tid):
+        """Decompose the XY route into (intra_die_hops, die_crossings,
+        package_crossings).  die_crossings counts inter-die (on-package
+        substrate) link traversals; package_crossings counts off-package
+        link traversals; intra_die_hops is the remaining on-silicon hops.
+        Used by the energy/latency model (Table III charges each level
+        differently)."""
+        sy, sx = self.coords(src_tid)
+        dy, dx = self.coords(dst_tid)
+        die_x = self._axis_crossings(sx, dx, self.nx, self.die_nx)
+        die_y = self._axis_crossings(sy, dy, self.ny, self.die_ny)
+        pkg_x = self._axis_crossings(sx, dx, self.nx, self.pkg_nx)
+        pkg_y = self._axis_crossings(sy, dy, self.ny, self.pkg_ny)
+        total = self.hops(src_tid, dst_tid)
+        die = die_x + die_y
+        pkg = pkg_x + pkg_y
+        # package crossings are also die crossings physically; separate them.
+        die_only = jnp.maximum(die - pkg, 0)
+        intra = jnp.maximum(total - die, 0)
+        return intra, die_only, pkg
+
+    # ---------------------------------------------------------------- misc
+    def describe(self) -> str:
+        dy, dx = self.dies
+        py, px = self.packages
+        return (f"TileGrid {self.ny}x{self.nx} ({self.num_tiles} tiles), "
+                f"{dy}x{dx} dies of {self.die_ny}x{self.die_nx}, "
+                f"{py}x{px} packages of {self.pkg_ny}x{self.pkg_nx}, "
+                f"{'torus' if self.torus else 'mesh'}")
+
+
+def square_grid(num_tiles: int, **kw) -> TileGrid:
+    """Convenience: the paper always evaluates square grids (16x16 .. 1024x1024)."""
+    side = int(round(num_tiles ** 0.5))
+    if side * side != num_tiles:
+        raise ValueError(f"num_tiles={num_tiles} is not a perfect square")
+    return TileGrid(side, side, **kw)

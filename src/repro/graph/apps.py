@@ -1,0 +1,178 @@
+"""The paper's six applications (§IV) on the data-local engine.
+
+Each app declares how it maps onto the engine's (combine, edge_value)
+algebra and which proxy policy it uses (§III-A):
+
+  BFS    min / add_one   write-through proxy on vertex update
+  SSSP   min / add_w     write-through proxy on vertex update
+  WCC    min / carry     write-through proxy on vertex update
+  PageRank add / carry   BSP epochs; write-back proxy, flushed per epoch
+  SPMV   add / mul_w     write-back proxy on the row reduction
+  Histo  add / one       write-back proxy on the bin reduction
+
+All return the computed values plus the engine's RunResult (traffic
+counters + BSP time), which benchmarks convert into the paper's metrics
+(GTEPS, hops/message, energy, $).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.engine import AppSpec, DataLocalEngine, EngineConfig, RunResult
+from ..core.proxy import ProxyConfig
+from ..core.tilegrid import TileGrid
+from .csr import CSR, transpose_csr
+
+BFS_SPEC = AppSpec("bfs", combine="min", edge_value="add_one")
+SSSP_SPEC = AppSpec("sssp", combine="min", edge_value="add_w")
+WCC_SPEC = AppSpec("wcc", combine="min", edge_value="carry")
+PAGERANK_SPEC = AppSpec("pagerank", combine="add", edge_value="carry",
+                        reactivate=False)
+SPMV_SPEC = AppSpec("spmv", combine="add", edge_value="mul_w",
+                    reactivate=False)
+HISTO_SPEC = AppSpec("histo", combine="add", edge_value="one",
+                     reactivate=False)
+
+
+@dataclasses.dataclass
+class AppResult:
+    values: np.ndarray
+    run: RunResult
+    teps_edges: float         # Graph500-style edge count for TEPS
+
+    @property
+    def gteps(self) -> float:
+        return self.teps_edges / max(self.run.time_s, 1e-12) / 1e9
+
+
+def _mk_cfg(grid: TileGrid, n_src: int, n_dst: int,
+            proxy: Optional[ProxyConfig], **kw) -> EngineConfig:
+    return EngineConfig(grid=grid, n_src=n_src, n_dst=n_dst, proxy=proxy, **kw)
+
+
+def _engine(spec: AppSpec, g: CSR, grid: TileGrid,
+            proxy: Optional[ProxyConfig], **kw) -> DataLocalEngine:
+    cfg = _mk_cfg(grid, g.n_rows, g.n_cols, proxy, **kw)
+    return DataLocalEngine(spec, cfg, g.row_lo, g.row_hi, g.col_idx, g.weights)
+
+
+# ---------------------------------------------------------------- traversals
+def bfs(g: CSR, root: int, grid: TileGrid,
+        proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+    eng = _engine(BFS_SPEC, g, grid, proxy, **kw)
+    state = eng.init_state(seed_idx=root, seed_val=0.0)
+    state, run = eng.run(state)
+    vals = np.asarray(state["values"])[: g.n_rows]
+    reached = np.isfinite(vals)
+    teps = float(g.out_degree()[reached].sum())
+    return AppResult(values=vals, run=run, teps_edges=teps)
+
+
+def sssp(g: CSR, root: int, grid: TileGrid,
+         proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+    eng = _engine(SSSP_SPEC, g, grid, proxy, **kw)
+    state = eng.init_state(seed_idx=root, seed_val=0.0)
+    state, run = eng.run(state)
+    vals = np.asarray(state["values"])[: g.n_rows]
+    reached = np.isfinite(vals)
+    teps = float(g.out_degree()[reached].sum())
+    return AppResult(values=vals, run=run, teps_edges=teps)
+
+
+def wcc(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
+        symmetrize: bool = False, **kw) -> AppResult:
+    """Min-label propagation (graph colouring per [75]).  The input graph
+    must contain both edge directions for weak components; RMAT graphs
+    from ``rmat_edges`` already do — pass symmetrize=True otherwise."""
+    if symmetrize:
+        gt = transpose_csr(g)
+        src = np.concatenate([
+            np.repeat(np.arange(g.n_rows, dtype=np.int64), g.out_degree()),
+            np.repeat(np.arange(gt.n_rows, dtype=np.int64), gt.out_degree())])
+        dst = np.concatenate([g.col_idx.astype(np.int64),
+                              gt.col_idx.astype(np.int64)])
+        from .csr import csr_from_edges
+        g = csr_from_edges(src, dst, max(g.n_rows, g.n_cols))
+    eng = _engine(WCC_SPEC, g, grid, proxy, **kw)
+    n = g.n_rows
+    state = eng.init_state(seed_idx=np.arange(n),
+                           seed_val=np.arange(n, dtype=np.float32))
+    state, run = eng.run(state)
+    vals = np.asarray(state["values"])[:n]
+    return AppResult(values=vals, run=run, teps_edges=float(g.nnz))
+
+
+# --------------------------------------------------------------- BSP / algebra
+def pagerank(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
+             epochs: int = 10, damping: float = 0.85, **kw) -> AppResult:
+    """BSP PageRank: one engine drain per epoch (barrier = paper's epoch
+    end, where the write-back proxy flushes)."""
+    n = g.n_rows
+    deg = np.maximum(g.out_degree(), 1).astype(np.float32)
+    ranks = np.full(n, 1.0 / n, np.float32)
+    eng = _engine(PAGERANK_SPEC, g, grid, proxy, **kw)
+    total = RunResult(counters=_zero_counters(), cycles=0.0, time_s=0.0,
+                      supersteps=0)
+    for _ in range(epochs):
+        contrib = damping * ranks / deg
+        state = eng.init_state()
+        state = eng.activate_all(state, contrib)
+        state, run = eng.run(state)
+        acc = np.asarray(state["values"])[:n]
+        ranks = (1.0 - damping) / n + acc
+        _accumulate(total, run)
+    return AppResult(values=ranks, run=total,
+                     teps_edges=float(g.nnz) * epochs)
+
+
+def spmv(a: CSR, x: np.ndarray, grid: TileGrid,
+         proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+    """y = A @ x.  The engine streams from *columns* (the source items that
+    own x[j]) along the column's nonzeros to row owners — i.e. we run on
+    A^T's CSR, which is A's CSC.  This is the paper's formulation: the
+    reduction onto y rows is the proxied task."""
+    at = transpose_csr(a)                      # rows of at = columns of a
+    cfg = _mk_cfg(grid, at.n_rows, a.n_rows, proxy, **kw)
+    eng = DataLocalEngine(SPMV_SPEC, cfg, at.row_lo, at.row_hi,
+                          at.col_idx, at.weights)
+    state = eng.init_state()
+    state = eng.activate_all(state, np.asarray(x, np.float32))
+    state, run = eng.run(state)
+    y = np.asarray(state["values"])[: a.n_rows]
+    return AppResult(values=y, run=run, teps_edges=float(a.nnz))
+
+
+def histogram(values: np.ndarray, bins: int, grid: TileGrid,
+              proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+    """Count values into bins.  Each input element is a source item with a
+    single 'edge' to its bin (paper: E elements filtered into V/8 bins)."""
+    values = np.asarray(values, np.int32)
+    m = values.shape[0]
+    row_lo = np.arange(m, dtype=np.int32)
+    row_hi = row_lo + 1
+    cfg = _mk_cfg(grid, m, bins, proxy, **kw)
+    eng = DataLocalEngine(HISTO_SPEC, cfg, row_lo, row_hi, values, None)
+    state = eng.init_state()
+    state = eng.activate_all(state, np.ones(m, np.float32))
+    state, run = eng.run(state)
+    counts = np.asarray(state["values"])[:bins]
+    return AppResult(values=counts, run=run, teps_edges=float(m))
+
+
+APPS = dict(bfs=bfs, sssp=sssp, wcc=wcc, pagerank=pagerank, spmv=spmv,
+            histo=histogram)
+
+
+def _zero_counters():
+    from ..core.netstats import TrafficCounters
+    return TrafficCounters()
+
+
+def _accumulate(total: RunResult, run: RunResult) -> None:
+    total.counters.add(run.counters)
+    total.cycles += run.cycles
+    total.time_s += run.time_s
+    total.supersteps += run.supersteps

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+spmv_csr        block-sparse (BCSR) SpMV — the paper's SPMV app, re-tiled
+                for the MXU with scalar-prefetch dynamic x-block gather.
+histogram_bin   one-hot-reduce binning — the paper's Histogram app.
+relax_min       fused mailbox drain (min/add combine + improved mask) —
+                the vertex-update task of BFS/SSSP/WCC.
+segment_combine dense segment min/add reduction — the proxy (P$)
+                filter/coalesce operation itself.
+decode_attention flash-decode GQA attention — the serving-side hot spot.
+
+Each kernel is a pl.pallas_call with explicit BlockSpec VMEM tiling,
+validated in interpret mode against the pure-jnp oracles in ref.py.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,102 @@
+"""Flash-decode GQA attention kernel — the serving-side hot spot.
+
+One new query token attends to a long KV cache (decode_32k / long_500k
+shapes).  Grid is (batch, q_head, kv_block); the KV sequence dim is the
+innermost (sequential) grid axis, and the online-softmax running state
+(max, denominator, weighted accumulator) lives in VMEM scratch that
+persists across the kv-block revisits of the same (b, h) output block.
+Lengths are scalar-prefetched and mask the tail block.
+
+Block sizing: a (block_s, d) KV tile at d=128, block_s=512 is 256 KiB of
+bf16 in VMEM for K plus the same for V — comfortably double-buffered
+inside the ~16 MiB v5e VMEM while the MXU computes (block_s,d)@(d,) dots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+_NEG = -1e30   # python float literal (jnp constants would be captured)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, block_s: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[0, 0] = _NEG
+        l_ref[0, 0] = 0.0
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (d,)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bS, d)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bS, d)
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+    pos = s * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s, 1), 0)[:, 0]
+    scores = jnp.where(pos < len_ref[b], scores, _NEG)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    p = jnp.exp(scores - m_new)                            # (bS,)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+
+    @pl.when(s == ns - 1)
+    def _fini():
+        o_ref[0, 0] = (acc_ref[0] / jnp.maximum(l_ref[0, 0], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, scale: float | None = None,
+                     block_s: int = DEFAULT_BLOCK_S,
+                     interpret: bool = True) -> jax.Array:
+    """Single-token GQA attention.
+
+    q: (B, H, D); k, v: (B, Hkv, S, D); lengths: (B,) valid KV lengths.
+    Returns (B, H, D) in q's dtype.  H must be a multiple of Hkv.
+    """
+    bsz, h, d = q.shape
+    _, hkv, seq, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s_pad = -(-seq // block_s) * block_s
+    if s_pad != seq:
+        pad = [(0, 0), (0, 0), (0, s_pad - seq), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    ns = s_pad // block_s
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, h, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, hh, s, ln: (b, hh, 0)),
+            pl.BlockSpec((1, 1, block_s, d),
+                         lambda b, hh, s, ln: (b, hh // group, s, 0)),
+            pl.BlockSpec((1, 1, block_s, d),
+                         lambda b, hh, s, ln: (b, hh // group, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, hh, s, ln: (b, hh, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=float(scale)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, h, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

@@ -1,0 +1,62 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to auto: compiled on TPU, interpreted elsewhere
+(this container is CPU-only; interpret=True executes the kernel bodies in
+Python for bit-faithful validation against ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _da
+from . import histogram_bin as _hb
+from . import relax_min as _rx
+from . import segment_combine as _sc
+from . import spmv_csr as _sp
+
+bcsr_from_csr = _sp.bcsr_from_csr
+BCSR = _sp.BCSR
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "interpret"))
+def histogram(idx, num_bins: int, interpret=None):
+    return _hb.histogram_bin(idx, num_bins,
+                             interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("combine", "interpret"))
+def relax(values, mail_val, mail_flag, combine: str = "min", interpret=None):
+    return _rx.relax(values, mail_val, mail_flag, combine,
+                     interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "combine", "interpret"))
+def segment_combine(seg, val, num_segments: int, combine: str = "min",
+                    interpret=None):
+    return _sc.segment_combine(seg, val, num_segments, combine,
+                               interpret=_auto_interpret(interpret))
+
+
+def spmv(mat: _sp.BCSR, x, interpret=None):
+    """y = A @ x.  (Not jitted at this level: BCSR holds host numpy; the
+    pallas_call inside is jit-compiled by JAX on first use.)"""
+    return _sp.spmv_bcsr(mat, jnp.asarray(x),
+                         interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def decode_attention(q, k, v, lengths, scale=None, block_s: int = 512,
+                     interpret=None):
+    return _da.decode_attention(q, k, v, lengths, scale=scale,
+                                block_s=block_s,
+                                interpret=_auto_interpret(interpret))

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def histogram_ref(idx, num_bins: int):
+    idx = jnp.asarray(idx)
+    ok = idx >= 0
+    safe = jnp.where(ok, idx, num_bins)
+    return jnp.zeros((num_bins + 1,), jnp.float32).at[safe].add(
+        ok.astype(jnp.float32))[:num_bins]
+
+
+def relax_ref(values, mail_val, mail_flag, combine: str = "min"):
+    v = jnp.asarray(values, jnp.float32)
+    m = jnp.asarray(mail_val, jnp.float32)
+    f = jnp.asarray(mail_flag) != 0
+    if combine == "min":
+        imp = f & (m < v)
+        return jnp.where(imp, m, v), imp.astype(jnp.int8)
+    return jnp.where(f, v + m, v), f.astype(jnp.int8)
+
+
+def segment_combine_ref(seg, val, num_segments: int, combine: str = "min"):
+    seg = jnp.asarray(seg)
+    val = jnp.asarray(val, jnp.float32)
+    ok = seg >= 0
+    safe = jnp.where(ok, seg, num_segments)
+    if combine == "min":
+        out = jnp.full((num_segments + 1,), jnp.inf, jnp.float32)
+        out = out.at[safe].min(jnp.where(ok, val, jnp.inf))
+    else:
+        out = jnp.zeros((num_segments + 1,), jnp.float32)
+        out = out.at[safe].add(jnp.where(ok, val, 0.0))
+    return out[:num_segments]
+
+
+def spmv_ref_csr(row_ptr, col_idx, weights, x):
+    """CSR oracle in numpy (matches spmv_bcsr through the BCSR conversion)."""
+    row_ptr = np.asarray(row_ptr)
+    col_idx = np.asarray(col_idx)
+    n = row_ptr.shape[0] - 1
+    w = (np.ones_like(col_idx, np.float32) if weights is None
+         else np.asarray(weights, np.float32))
+    x = np.asarray(x, np.float32)
+    src = np.repeat(np.arange(n), np.diff(row_ptr))
+    y = np.zeros(n, np.float32)
+    np.add.at(y, src, w * x[col_idx])
+    return y
+
+
+def decode_attention_ref(q, k, v, lengths, scale=None):
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)           # (B, H, S, D)
+    vq = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kq) * scale
+    pos = jnp.arange(s)[None, None, :]
+    mask = pos < jnp.asarray(lengths)[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vq)
+
+
+

@@ -1,0 +1,59 @@
+"""Fused mailbox-drain / relaxation kernel (BFS/SSSP/WCC vertex update).
+
+The engine's IQ drain is: for every owned item, combine the pending
+mailbox record into the value array and report whether it improved
+(improvements re-activate the item's edge cursor).  One elementwise pass,
+fused so values/mailbox/flags stream through VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+
+
+def _kernel(v_ref, m_ref, f_ref, out_v_ref, out_i_ref, *, combine: str):
+    v = v_ref[...]
+    m = m_ref[...]
+    f = f_ref[...] != 0
+    if combine == "min":
+        imp = f & (m < v)
+        out_v_ref[...] = jnp.where(imp, m, v)
+    else:  # add: every flagged record "improves" (accumulates)
+        imp = f
+        out_v_ref[...] = jnp.where(f, v + m, v)
+    out_i_ref[...] = imp.astype(jnp.int8)
+
+
+def relax(values: jax.Array, mail_val: jax.Array, mail_flag: jax.Array,
+          combine: str = "min", block: int = DEFAULT_BLOCK,
+          interpret: bool = True):
+    """Returns (new_values, improved int8 mask)."""
+    assert combine in ("min", "add")
+    n = values.shape[0]
+    n_pad = -(-n // block) * block
+    ident = jnp.inf if combine == "min" else 0.0
+
+    def pad(a, fill, dt):
+        return jnp.full((n_pad,), fill, dt).at[:n].set(a.astype(dt)) \
+            .reshape(n_pad // block, block)
+
+    v = pad(values, ident, jnp.float32)
+    m = pad(mail_val, ident, jnp.float32)
+    f = pad(mail_flag, 0, jnp.int8)
+    nb = n_pad // block
+    spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    out_v, out_i = pl.pallas_call(
+        functools.partial(_kernel, combine=combine),
+        grid=(nb,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32),
+                   jax.ShapeDtypeStruct((nb, block), jnp.int8)],
+        interpret=interpret,
+    )(v, m, f)
+    return out_v.reshape(-1)[:n], out_i.reshape(-1)[:n]

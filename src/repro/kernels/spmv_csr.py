@@ -1,0 +1,121 @@
+"""Block-sparse SpMV kernel — the paper's SPMV app, re-tiled for the MXU.
+
+Hardware adaptation (DESIGN.md §2): the paper traverses CSR edge-by-edge
+on scalar PUs; a TPU wants 128x128 MXU tiles.  We convert each tile's CSR
+chunk to BCSR (bm x bk dense blocks, ELL-padded to a fixed number of
+blocks per block-row) and compute  y[m] += A_blk[m,k] @ x_blk[cols[m,k]].
+
+The x block to load depends on data (cols) — exactly the paper's
+data-dependent routing.  On TPU this is expressed with scalar prefetch:
+the block-column table is prefetched to SMEM and *drives the BlockSpec
+index_map*, so the pipeline fetches the right x block from HBM into VMEM
+ahead of each grid step.  This is the TPU-native rendering of "route the
+message by its array index".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+
+
+@dataclasses.dataclass
+class BCSR:
+    """ELL-padded block-sparse matrix: every block-row holds exactly
+    ``kmax`` (bm x bk) blocks; absent blocks are all-zero with col 0."""
+
+    blocks: np.ndarray     # (Mb, kmax, bm, bk) float32
+    cols: np.ndarray       # (Mb, kmax) int32 block-column ids
+    shape: tuple           # (M, K) logical
+    bm: int
+    bk: int
+
+    @property
+    def mb(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def kmax(self) -> int:
+        return self.blocks.shape[1]
+
+
+def bcsr_from_csr(row_ptr, col_idx, weights, shape, bm: int = DEFAULT_BM,
+                  bk: int = DEFAULT_BK) -> BCSR:
+    """Host-side CSR -> BCSR conversion (the 'dataset load' step)."""
+    m, k = shape
+    mb = -(-m // bm)
+    kb = -(-k // bk)
+    row_ptr = np.asarray(row_ptr)
+    col_idx = np.asarray(col_idx)
+    weights = (np.ones_like(col_idx, np.float32) if weights is None
+               else np.asarray(weights, np.float32))
+    # collect per-block-row set of touched block-columns
+    block_maps = []
+    kmax = 1
+    for mblk in range(mb):
+        r0, r1 = mblk * bm, min((mblk + 1) * bm, m)
+        lo, hi = row_ptr[r0], row_ptr[r1]
+        bcols = np.unique(col_idx[lo:hi] // bk) if hi > lo else np.zeros(0, np.int64)
+        block_maps.append(bcols)
+        kmax = max(kmax, len(bcols))
+    blocks = np.zeros((mb, kmax, bm, bk), np.float32)
+    cols = np.zeros((mb, kmax), np.int32)
+    for mblk in range(mb):
+        bcols = block_maps[mblk]
+        lut = {int(c): i for i, c in enumerate(bcols)}
+        cols[mblk, : len(bcols)] = bcols
+        r0, r1 = mblk * bm, min((mblk + 1) * bm, m)
+        for r in range(r0, r1):
+            for e in range(row_ptr[r], row_ptr[r + 1]):
+                c = int(col_idx[e])
+                slot = lut[c // bk]
+                blocks[mblk, slot, r - r0, c % bk] += weights[e]
+    return BCSR(blocks=blocks, cols=cols, shape=(m, k), bm=bm, bk=bk)
+
+
+def _kernel(cols_ref, a_ref, x_ref, y_ref):
+    del cols_ref
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[0, 0]                  # (bm, bk)
+    x = x_ref[...]                   # (1, bk)
+    y_ref[...] += jnp.dot(a, x[0], preferred_element_type=jnp.float32)[None, :]
+
+
+def spmv_bcsr(mat: BCSR, x: jax.Array, interpret: bool = True) -> jax.Array:
+    """y = A @ x for a BCSR matrix.  Returns (M,) float32."""
+    m, k = mat.shape
+    bm, bk = mat.bm, mat.bk
+    kb = -(-k // bk)
+    x_pad = jnp.zeros((kb * bk,), jnp.float32).at[:k].set(
+        x.astype(jnp.float32)).reshape(kb, bk)
+    blocks = jnp.asarray(mat.blocks)
+    cols = jnp.asarray(mat.cols)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mat.mb, mat.kmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk), lambda mi, ki, cols: (mi, ki, 0, 0)),
+            pl.BlockSpec((1, bk), lambda mi, ki, cols: (cols[mi, ki], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda mi, ki, cols: (mi, 0)),
+    )
+    y = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mat.mb, bm), jnp.float32),
+        interpret=interpret,
+    )(cols, blocks, x_pad)
+    return y.reshape(-1)[:m]

@@ -1,0 +1,330 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a ``while`` body ONCE
+— for scanned-layer models that undercounts FLOPs/bytes/collective
+traffic by the layer count (verified empirically; see EXPERIMENTS.md
+§Dry-run).  This module re-derives the three roofline inputs from the
+optimized HLO text with loop multiplicities applied:
+
+  flops        2 * numel(result) * prod(contracted dims) per dot, summed
+               with multiplicity; elementwise ops contribute numel.
+  hbm_bytes    operand + result bytes at fusion boundaries (the XLA
+               memory-traffic accounting convention), with multiplicity.
+  collectives  operand bytes per collective class, with multiplicity.
+
+Loop trip counts are recovered from the loop condition's comparison
+constant (jax scans lower to a counted while); conditionals take the
+max-cost branch.  Fusion/call bodies are charged flops (their dots) but
+not bytes (internal traffic stays in registers/VMEM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = dict(f64=8, f32=4, bf16=2, f16=2, s64=8, u64=8, s32=4,
+                    u32=4, s16=2, u16=2, s8=1, u8=1, pred=1, f8e4m3fn=1,
+                    f8e5m2=1, c64=8, c128=16, token=0, opaque=0)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(|\{)")
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes_numel(type_str: str) -> Tuple[float, float]:
+    """Total (bytes, numel) across possibly-tuple type string."""
+    bts = 0.0
+    numel = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if not dims:
+            n = 1.0
+        bts += n * _DTYPE_BYTES[dt]
+        numel += n
+    return bts, numel
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and ("{" in line):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if m:
+            comps[cur].append(Op(name=m.group(1), type_str=m.group(2),
+                                 opcode=m.group(3), rest=m.group(4)))
+    return comps
+
+
+def _entry_name(hlo: str, comps: Dict[str, List[Op]]) -> str:
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip()[len("ENTRY"):].strip()
+                                   if line.strip().startswith("ENTRY")
+                                   else line.strip())
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m and m.group(1) in comps:
+                return m.group(1)
+    # fallback: computation named main
+    for name in comps:
+        if "main" in name:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(cond_ops: List[Op]) -> float:
+    """Counted jax loops compare the induction var with a constant."""
+    best = 1.0
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = _CONST_RE.search(op.opcode + "(" + op.rest)
+            if m:
+                best = max(best, float(m.group(1)))
+        m = _CONST_RE.search(op.rest)
+        if m:
+            best = max(best, float(m.group(1)))
+    return best
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self.entry = _entry_name(hlo_text, self.comps)
+        self._memo: Dict[Tuple[str, bool], CostTotals] = {}
+        # symbol tables: op name -> type string (for dot operand lookup)
+        self.symbols: Dict[str, Dict[str, str]] = {
+            cname: {op.name: op.type_str for op in ops}
+            for cname, ops in self.comps.items()}
+        # parameters appear as ops with opcode 'parameter'
+        self.totals = self._cost(self.entry, count_bytes=True)
+
+    # ------------------------------------------------------------------
+    def _operand_names(self, rest: str) -> List[str]:
+        # operands are %refs before the closing paren at depth 0
+        out = []
+        depth = 0
+        token = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            token += ch
+        for m in re.finditer(r"%([\w\.\-]+)", token):
+            out.append(m.group(1))
+        return out
+
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        _, numel = _shape_bytes_numel(op.type_str)
+        mult = 2.0 * numel
+        m = _CONTRACT_RE.search(op.rest)
+        ops = self._operand_names(op.rest)
+        if m and ops:
+            lhs_type = self.symbols[comp].get(ops[0], "")
+            shapes = _SHAPE_RE.findall(lhs_type)
+            if shapes:
+                dims = [int(d) for d in shapes[0][1].split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        mult *= dims[int(ci)]
+        return mult
+
+    _ALIAS_OPS = ("get-tuple-element", "bitcast", "reshape", "transpose",
+                  "copy", "convert")
+
+    def _carry_gtes(self, cname: str) -> set:
+        """Names of ops aliasing the loop-carry parameter (scan xs stacks
+        / invariants), transitively through view-like ops.  Their bytes
+        are charged ONCE at the while site, not per trip: a scan reads
+        each stack element exactly once across the whole loop."""
+        params = {op.name for op in self.comps.get(cname, ())
+                  if op.opcode == "parameter"}
+        out = set()
+        changed = True
+        while changed:
+            changed = False
+            for op in self.comps.get(cname, ()):
+                if op.name in out or op.opcode not in self._ALIAS_OPS:
+                    continue
+                ops_ = self._operand_names(op.rest)
+                if ops_ and all(o in params or o in out for o in ops_):
+                    out.add(op.name)
+                    changed = True
+        return out
+
+    def _cost(self, cname: str, count_bytes: bool) -> CostTotals:
+        key = (cname, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        self._memo[key] = total                 # break cycles defensively
+        skip_operands = self._carry_gtes(cname) if count_bytes else set()
+        for op in self.comps.get(cname, ()):
+            code = op.opcode
+            base = code.replace("-start", "")
+            if base in COLLECTIVES:
+                b, _ = _shape_bytes_numel(op.type_str)
+                if not code.endswith("-done"):
+                    total.coll[base] += b
+                    total.coll_counts[base] += 1
+                continue
+            if code == "while":
+                body = None
+                mb = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                mc = _COND_RE.search(op.rest)
+                if mb:
+                    body = mb.group(1)
+                trips = 1.0
+                if mc and mc.group(1) in self.comps:
+                    trips = _trip_count(self.comps[mc.group(1)])
+                if body in self.comps:
+                    total.add(self._cost(body, count_bytes), trips)
+                if count_bytes:
+                    # the carry tuple (stacked xs + invariants) streams
+                    # through HBM once across the whole loop
+                    total.bytes += _shape_bytes_numel(op.type_str)[0]
+                continue
+            if code == "conditional":
+                mbr = _BRANCH_RE.search(op.rest)
+                branches = []
+                if mbr:
+                    branches = re.findall(r"%?([\w\.\-]+)",
+                                          mbr.group(1))
+                sub = [self._cost(b, count_bytes) for b in branches
+                       if b in self.comps]
+                if sub:
+                    best = max(sub, key=lambda t: (t.coll_bytes, t.flops))
+                    total.add(best)
+                continue
+            if code in ("fusion", "call", "async-start"):
+                mcall = _CALL_RE.search(op.rest)
+                if mcall and mcall.group(1) in self.comps:
+                    # flops inside fusions count; internal bytes do not
+                    total.add(self._cost(mcall.group(1), False))
+                if count_bytes:
+                    b, _ = _shape_bytes_numel(op.type_str)
+                    opb = []
+                    for o in self._operand_names(op.rest):
+                        if o in skip_operands:
+                            continue
+                        t = self.symbols[cname].get(o)
+                        if t:
+                            opb.append(_shape_bytes_numel(t)[0])
+                    if "dynamic-update-slice" in op.name and opb:
+                        # in-place buffer update: XLA aliases the big
+                        # operand; traffic = small operands + the written
+                        # slice (~= update operand), not 2x the buffer.
+                        total.bytes += sum(opb) - max(opb)
+                    else:
+                        total.bytes += b + sum(opb)
+                continue
+            if code in ("dot", "convolution"):
+                total.flops += self._dot_flops(cname, op)
+                if count_bytes:
+                    b, _ = _shape_bytes_numel(op.type_str)
+                    total.bytes += b
+                    for o in self._operand_names(op.rest):
+                        if o in skip_operands:
+                            continue
+                        t = self.symbols[cname].get(o)
+                        if t:
+                            total.bytes += _shape_bytes_numel(t)[0]
+                continue
+            if code == "dynamic-update-slice":
+                if count_bytes:
+                    opb = []
+                    for o in self._operand_names(op.rest):
+                        if o in skip_operands:
+                            continue
+                        t = self.symbols[cname].get(o)
+                        if t:
+                            opb.append(_shape_bytes_numel(t)[0])
+                    if opb:                       # in-place: slice traffic
+                        total.bytes += sum(opb) - max(opb)
+                continue
+            if code in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "copy-start", "copy-done",
+                        "after-all", "partition-id"):
+                continue
+            # elementwise / reduce / transcendental: 1 flop per output elt
+            b, numel = _shape_bytes_numel(op.type_str)
+            total.flops += numel
+            if count_bytes and code in ("copy", "reduce", "scatter",
+                                        "gather", "dynamic-slice", "sort",
+                                        "transpose", "reshape", "select",
+                                        "iota", "broadcast", "convert",
+                                        "slice", "concatenate", "pad",
+                                        "reduce-window", "rng",
+                                        "select-and-scatter", "map"):
+                total.bytes += b
+        return total
+
+    def summary(self) -> dict:
+        t = self.totals
+        return dict(flops=t.flops, hbm_bytes=t.bytes,
+                    collective_bytes=dict(t.coll),
+                    collective_counts=dict(t.coll_counts),
+                    collective_total_bytes=t.coll_bytes)
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    return HloCost(hlo_text).summary()

@@ -1,0 +1,83 @@
+"""Assigned input shapes x architecture -> abstract input specs.
+
+Every (arch, shape) cell resolves to a step kind and a pytree of
+ShapeDtypeStructs (weak-type-correct, shardable, no allocation):
+
+  train_4k     train_step   seq=4096    global_batch=256
+  prefill_32k  prefill      seq=32768   global_batch=32
+  decode_32k   serve_step   cache=32768 global_batch=128
+  long_500k    serve_step   cache=524288 global_batch=1 (sub-quadratic only)
+
+Whisper note: the assigned seq_len is the *audio frame* length (encoder);
+the decoder runs its native 448-token context (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+S = jax.ShapeDtypeStruct
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+WHISPER_DEC = 448
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str                # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def batch_specs(cfg, cell: ShapeCell) -> dict:
+    """Abstract train/prefill batch for an architecture."""
+    b, s = cell.batch, cell.seq
+    if cfg.family == "encdec":
+        d = min(WHISPER_DEC, s)
+        out = dict(embeds=S((b, s, cfg.d_model), BF16),
+                   tokens=S((b, d), I32))
+        if cell.kind == "train":
+            out["labels"] = S((b, d), I32)
+        return out
+    if cfg.input_embeds:
+        out = dict(embeds=S((b, s, cfg.d_model), BF16))
+        if cell.kind == "train":
+            out["labels"] = S((b, s), I32)
+        return out
+    out = dict(tokens=S((b, s), I32))
+    if cell.kind == "train":
+        out["labels"] = S((b, s), I32)
+    return out
+
+
+def cache_specs(cfg, fam, cell: ShapeCell):
+    """Abstract decode cache via the family's init_cache under eval_shape."""
+    return jax.eval_shape(
+        lambda: fam["init_cache"](cfg, cell.batch, cell.seq))
+
+
+def decode_specs(cfg, fam, cell: ShapeCell):
+    cache = cache_specs(cfg, fam, cell)
+    tokens = S((cell.batch, 1), I32)
+    pos = S((), I32)
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return cache, tokens, pos, key

@@ -1,0 +1,185 @@
+"""Rule-based sharding assignment (GSPMD path).
+
+Parameters, optimizer state, batches and caches get PartitionSpecs from
+name+shape rules.  Divisibility is always checked against the mesh —
+axes that don't divide fall back to replication (correctness first; the
+hillclimb refines placement for the three chosen cells).
+
+Scheme (Megatron/FSDP hybrid, per DESIGN.md §6):
+  column-parallel weights (w_in, wq, ...):  (..., fsdp->'data', 'model')
+  row-parallel weights (w_out, wo, ...):    (..., 'model', fsdp->'data')
+  embeddings / lm_head (V, d):              ('model', fsdp->'data')
+  MoE experts (E, d, ff):                   ('data' on E, ..., 'model')
+  norms / scalars / small state:            replicated
+  batch leaves:                             (('pod','data'), None, ...)
+  KV caches (L, B, T, H, D):                B->('pod','data') else
+                                            H->'model' else T->'model'
+Scan-stacked leading layer axes are detected by path and skipped.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# trailing-name classes
+_COL = ("w_in", "w_gate", "wq", "wk", "wv", "wq_a", "wq_b", "wkv_a",
+        "wk_b", "wv_b", "up", "in_proj", "ff_in", "ff_gate", "wx",
+        "router", "proj")
+_ROW = ("w_out", "wo", "down", "out_proj", "ff_out")
+_EMB = ("tok_emb", "lm_head")
+# path components that carry stacked layer/group axes (skip leading dims)
+_STACKS = ("layers", "moe_layers", "dense_layers", "mamba", "groups",
+           "enc_layers", "dec_layers", "mlstm")
+
+
+def _leading_stack_dims(path: str, ndim: int, trailing: int) -> int:
+    """How many leading axes are layer stacks (not shardable weight dims)."""
+    n = 0
+    if any(f"'{s}'" in path for s in _STACKS):
+        n = 1
+        if "'mlstm'" in path:         # (G, m_per, ...) double stack
+            n = 2
+        elif "'groups'" in path and "'slstm'" in path:
+            n = 1
+    return min(n, max(ndim - trailing, 0))
+
+
+def _name(path: str) -> str:
+    parts = re.findall(r"\['([^']+)'\]", path)
+    return parts[-1] if parts else path
+
+
+def _div(size: int, mesh_sizes: dict, axis: Optional[str]) -> bool:
+    return axis in mesh_sizes and size % mesh_sizes[axis] == 0
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh,
+               fsdp: bool = True) -> P:
+    sizes = dict(zip(mesh.axis_names, np.array(mesh.devices.shape)))
+    name = _name(path)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    spec = [None] * nd
+
+    is_moe_expert = ("'moe'" in path or "'shared'" in path) and name in (
+        "w_in", "w_gate", "w_out") and nd >= 3 and "'shared'" not in path
+
+    if name in _EMB:
+        if _div(shape[0], sizes, "model"):
+            spec[0] = "model"
+        if fsdp and nd > 1 and _div(shape[1], sizes, "data"):
+            spec[1] = "data"
+        return P(*spec)
+
+    skip = _leading_stack_dims(path, nd, 2)
+    if is_moe_expert:
+        # (L?, E, d_in, d_out): expert-parallel over as much of the mesh
+        # as divides — ('data','model') for deepseek-v3's 256 experts,
+        # 'model' for granite's 32.  Per-expert dims stay unsharded (the
+        # dispatch all-to-all moves tokens to the experts; DESIGN.md §3).
+        e_ax = skip
+        if e_ax < nd:
+            both = sizes.get("data", 1) * sizes.get("model", 1)
+            if "data" in sizes and "model" in sizes \
+                    and shape[e_ax] % both == 0:
+                spec[e_ax] = ("data", "model")
+            elif _div(shape[e_ax], sizes, "model"):
+                spec[e_ax] = "model"
+            elif _div(shape[e_ax], sizes, "data"):
+                spec[e_ax] = "data"
+        return P(*spec)
+
+    if nd - skip >= 2:
+        a_in, a_out = nd - 2, nd - 1
+        if name in _COL:
+            if _div(shape[a_out], sizes, "model"):
+                spec[a_out] = "model"
+            if fsdp and _div(shape[a_in], sizes, "data"):
+                spec[a_in] = "data"
+            return P(*spec)
+        if name in _ROW:
+            if _div(shape[a_in], sizes, "model"):
+                spec[a_in] = "model"
+            if fsdp and _div(shape[a_out], sizes, "data"):
+                spec[a_out] = "data"
+            return P(*spec)
+    return P()                                   # norms, gates, small state
+
+
+def opt_spec(path: str, shape: tuple, mesh: Mesh, fsdp: bool = True) -> P:
+    """Optimizer-state leaves mirror their parameter's spec; factored
+    adafactor rows/cols lose the last/second-to-last axis."""
+    name = _name(path)
+
+    def padded(base, n):
+        lst = list(base)
+        return lst + [None] * (n - len(lst))
+
+    if name == "vr":           # param.shape[:-1] (reduced over cols)
+        base = padded(param_spec(path.replace("['vr']", ""),
+                                 shape + (1,), mesh, fsdp),
+                      len(shape) + 1)
+        return P(*base[: len(shape)])
+    if name == "vc":           # param.shape[:-2] + param.shape[-1:]
+        full = shape[:-1] + (1,) + shape[-1:]
+        base = padded(param_spec(path.replace("['vc']", ""), full, mesh,
+                                 fsdp), len(full))
+        return P(*(base[: len(shape) - 1] + [base[-1]]))
+    for k in ("mu", "nu", "v"):
+        path = path.replace(f"['{k}']", "")
+    return param_spec(path, shape, mesh, fsdp)
+
+
+def batch_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = int(np.prod([dict(zip(mesh.axis_names,
+                              mesh.devices.shape))[a] for a in axes]))
+    if len(shape) >= 1 and shape[0] % n == 0:
+        return P(axes)
+    return P()
+
+
+def cache_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """Decode caches: (L, B, T, H, D)-like stacks.  Prefer batch
+    sharding, then heads over 'model', then sequence over 'model'."""
+    sizes = dict(zip(mesh.axis_names, np.array(mesh.devices.shape)))
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nbatch = int(np.prod([sizes[a] for a in axes]))
+    nd = len(shape)
+    spec = [None] * nd
+    # find the batch axis: first axis after the leading stack dims whose
+    # size divides the batch submesh — heuristically axis 1 for stacked
+    # caches, axis 0 for unstacked.
+    b_ax = 1 if nd >= 3 else 0
+    if nd > b_ax and shape[b_ax] % nbatch == 0 and shape[b_ax] >= nbatch:
+        spec[b_ax] = axes
+    if "model" in sizes and nd >= 2:
+        m = sizes["model"]
+        # prefer a head-like axis (between batch and last), else seq
+        for ax in range(nd - 2, b_ax, -1):
+            if spec[ax] is None and shape[ax] % m == 0 and shape[ax] >= m:
+                spec[ax] = "model"
+                break
+    return P(*spec)
+
+
+def tree_specs(tree, rule, mesh: Mesh, **kw):
+    """Map a rule over a pytree (of arrays or ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        specs.append(rule(jax.tree_util.keystr(path), tuple(leaf.shape),
+                          mesh, **kw))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(tree, rule, mesh: Mesh, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(tree, rule, mesh, **kw),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+# Subpackages are imported lazily by consumers (registry pulls in the
+# family modules it needs); keep this light to avoid import cycles.

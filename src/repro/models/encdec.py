@@ -1,0 +1,162 @@
+"""Encoder-decoder model (whisper-tiny).
+
+The conv/audio frontend is a STUB per the brief: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d).  The transformer
+backbone — bidirectional encoder, causal decoder with cross-attention —
+is complete.  Positional encodings are sinusoidal (length-agnostic, so
+the assigned 32k shapes lower cleanly even though real Whisper caps at
+448 decoder positions).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (DTYPE, apply_norm, attention, attention_decode,
+                     attn_init, constrain, cross_attention, embed_init,
+                     mlp, mlp_init, norm_init)
+
+
+def sinusoidal(positions, dim: int):
+    """positions: (...,) -> (..., dim) sinusoidal embedding."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encdec_init_params(cfg, key):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return dict(attn=attn_init(k1, cfg), mlp=mlp_init(k2, cfg))
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return dict(self=attn_init(k1, cfg), cross=attn_init(k2, cfg),
+                    mlp=mlp_init(k3, cfg))
+
+    from .lm import _stack
+    return dict(
+        tok_emb=embed_init(ks[0], cfg.vocab_pad, d),
+        enc_layers=_stack(enc_layer,
+                          jax.random.split(ks[1], cfg.enc_layers)),
+        dec_layers=_stack(dec_layer,
+                          jax.random.split(ks[2], cfg.dec_layers)),
+        enc_norm=norm_init(d, with_bias=cfg.norm_bias),
+        final_norm=norm_init(d, with_bias=cfg.norm_bias),
+        lm_head=embed_init(ks[3], cfg.vocab_pad, d),
+    )
+
+
+def _encode(params, embeds, cfg):
+    b, s, d = embeds.shape
+    x = embeds.astype(DTYPE) + sinusoidal(jnp.arange(s), d)[None].astype(DTYPE)
+
+    def body(x, lp):
+        x, _ = attention(lp["attn"], x, cfg, bidirectional=True)
+        return constrain(mlp(lp["mlp"], x, cfg)), None
+
+    x, _ = jax.lax.scan(body, constrain(x), params["enc_layers"])
+    return apply_norm(params["enc_norm"], x)
+
+
+def _cross_kv(params, enc_out, cfg):
+    """Per-decoder-layer cross (k, v) from encoder output."""
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.n_kv, cfg.head_dim
+
+    def body(_, lp):
+        cp = lp["cross"]
+        xn = apply_norm(cp["norm"], enc_out)
+        k = (xn @ cp["wk"]).reshape(b, s, hkv, hd)
+        v = (xn @ cp["wv"]).reshape(b, s, hkv, hd)
+        return None, (k, v)
+
+    _, kv = jax.lax.scan(body, None, params["dec_layers"])
+    return kv                                           # (L,B,S,Hkv,D) x2
+
+
+def _dec_embed(params, tokens, pos0, cfg):
+    x = jnp.take(params["tok_emb"], tokens, axis=0)
+    s = tokens.shape[1]
+    return x + sinusoidal(pos0 + jnp.arange(s),
+                          cfg.d_model)[None].astype(x.dtype)
+
+
+def encdec_forward(params, batch, cfg):
+    """Teacher-forced training pass.  batch: {embeds, tokens, labels}."""
+    enc_out = _encode(params, batch["embeds"], cfg)
+    ck, cv = _cross_kv(params, enc_out, cfg)
+    x = _dec_embed(params, batch["tokens"], 0, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def block(lp, kv, x):
+        x, _ = attention(lp["self"], x, cfg, positions)
+        # cross-attention skips re-projecting k/v (precomputed above);
+        # cross_attention applies q-proj + out-proj around them.
+        x = cross_attention(lp["cross"], x, kv, cfg)
+        return constrain(mlp(lp["mlp"], x, cfg))
+
+    block_ck = jax.checkpoint(block,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, xs):
+        lp, k, v = xs
+        return block_ck(lp, (k, v), x), None
+
+    x, _ = jax.lax.scan(body, x, (params["dec_layers"], ck, cv))
+    x = apply_norm(params["final_norm"], x)
+    return jnp.einsum("bsd,vd->bsv", x, params["lm_head"]), 0.0
+
+
+def encdec_prefill(params, batch, cfg):
+    """Encode audio + run the decoder prefix; returns (logits, cache)."""
+    enc_out = _encode(params, batch["embeds"], cfg)
+    ck, cv = _cross_kv(params, enc_out, cfg)
+    x = _dec_embed(params, batch["tokens"], 0, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, xs):
+        lp, k, v = xs
+        x, kv_self = attention(lp["self"], x, cfg, positions)
+        x = cross_attention(lp["cross"], x, (k, v), cfg)
+        return mlp(lp["mlp"], x, cfg), kv_self
+
+    x, selfkv = jax.lax.scan(body, x, (params["dec_layers"], ck, cv))
+    x = apply_norm(params["final_norm"], x[:, -1:])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    return logits, dict(k=selfkv[0], v=selfkv[1], ck=ck, cv=cv)
+
+
+def encdec_decode(params, cache, tokens, pos, cfg):
+    x = _dec_embed(params, tokens, pos, cfg)
+
+    def body(x, xs):
+        lp, sk, sv, k, v = xs
+        x, ncl = attention_decode(lp["self"], x, dict(k=sk, v=sv), pos, cfg)
+        x = cross_attention(lp["cross"], x, (k, v), cfg)
+        return mlp(lp["mlp"], x, cfg), ncl
+
+    x, ncache = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                       cache["v"], cache["ck"], cache["cv"]))
+    x = apply_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"])
+    return logits[:, 0], dict(k=ncache["k"], v=ncache["v"], ck=cache["ck"],
+                              cv=cache["cv"])
+
+
+def encdec_init_cache(cfg, batch, cache_len):
+    l = cfg.dec_layers
+    shape = (l, batch, cache_len, cfg.n_kv, cfg.head_dim)
+    return dict(k=jnp.zeros(shape, DTYPE), v=jnp.zeros(shape, DTYPE),
+                ck=jnp.zeros(shape, DTYPE), cv=jnp.zeros(shape, DTYPE))
+
+
+ENCDEC_FAMILY: Dict[str, Any] = dict(
+    init=encdec_init_params, forward=encdec_forward, prefill=encdec_prefill,
+    decode=encdec_decode, init_cache=encdec_init_cache)

@@ -1,0 +1,521 @@
+"""Shared model building blocks (pure functions over param pytrees).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; layer stacks carry a leading L
+  axis and are consumed by ``jax.lax.scan``.
+* Weights/activations are bf16; normalisation, softmax, router and gate
+  math run in f32.
+* Every block takes an explicit config dataclass (``registry.ModelConfig``)
+  so the same code serves all ten assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------- sharding
+# Activation sharding constraints (set by the launcher; None = off).
+# Without these GSPMD may satisfy FSDP-sharded weights by replicating
+# activations over the batch axes — catastrophic at 32k seq.  With them,
+# activations stay batch-sharded and the partitioner all-gathers weights
+# instead (the FSDP schedule).
+BATCH_AXES = None            # e.g. ('data',) or ('pod', 'data')
+EP_AXES = None               # expert-parallel axes for MoE, e.g. ('model',)
+FSDP_GATHER = False          # gather FSDP-sharded weights at use
+MODEL_SIZE = 0               # 'model' axis size (for divisibility guards)
+SEQ_SHARD = False            # sequence-parallel residual stream: shard the
+                             # seq dim over 'model' between blocks, turning
+                             # each TP all-reduce into reduce-scatter (+
+                             # all-gather at the next projection) and
+                             # cutting activation checkpoints by 1/TP
+                             # (Korthikanti et al.; beyond-paper §Perf)
+MOE_GROUP = 2048             # GShard dispatch group size: per-token
+                             # dispatch matmul cost is 2*k*group*cf*d —
+                             # linear in group size (hillclimb knob)
+MOE_CF = 1.25                # expert capacity factor
+TWO_HOP_DISPATCH = False     # factored per-axis dispatch exchange.
+                             # Measured WORSE than the token-gather
+                             # schedule on this partitioner (capacity
+                             # buffers carry k*cf ~10x token bytes;
+                             # EXPERIMENTS.md §Perf A, iterations 4-6) —
+                             # kept as a flag because on ICI-optimized
+                             # a2a hardware the balance may flip.
+
+
+def wload(w, model_axis: int = -1):
+    """FSDP weight load: constrain the weight to drop its 'data' (fsdp)
+    sharding and keep only tensor-parallel 'model' on ``model_axis``.
+    GSPMD then materialises the all-gather of the *weight* (small) rather
+    than partial-summing and all-reducing *activations* (huge) — the
+    standard FSDP schedule, stated explicitly so the partitioner cannot
+    pick the wrong strategy."""
+    if BATCH_AXES is None or not FSDP_GATHER:
+        return w
+    spec = [None] * w.ndim
+    ax = model_axis % w.ndim
+    if MODEL_SIZE and w.shape[ax] % MODEL_SIZE == 0:
+        spec[ax] = "model"
+    return jax.lax.with_sharding_constraint(w, P(*spec))
+
+
+def constrain(x, kind: str = "act"):
+    if BATCH_AXES is None:
+        return x
+    if kind == "act":        # (B, ..., D): batch over BATCH_AXES
+        if (SEQ_SHARD and MODEL_SIZE and x.ndim >= 3
+                and x.shape[1] % MODEL_SIZE == 0 and x.shape[1] > 1):
+            spec = P(BATCH_AXES, "model", *([None] * (x.ndim - 2)))
+        else:
+            spec = P(BATCH_AXES, *([None] * (x.ndim - 1)))
+    elif kind == "logits":   # (B, ..., V): vocab over model
+        spec = P(BATCH_AXES, *([None] * (x.ndim - 2)), "model")
+    elif kind == "expert":   # (G, E, C, D): experts over EP_AXES
+        if EP_AXES is None:
+            return x
+        spec = P(None, EP_AXES, *([None] * (x.ndim - 2)))
+    elif kind == "expert_hop1":
+        # intermediate hop of the factored dispatch: experts over 'data'
+        # only.  g->e(data) is a clean single-axis all-to-all; the
+        # subsequent e(data)->e(data,model) step is a free local slice
+        # (replicated->sharded).  Without this hop GSPMD faces a
+        # cross-axis resharding it can only do by full replication.
+        if EP_AXES is None or EP_AXES[0] != "data" or len(EP_AXES) == 1:
+            return x
+        spec = P(None, ("data",), *([None] * (x.ndim - 2)))
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------- init
+def dense_init(key, in_dim: int, out_dim: int, dtype=DTYPE,
+               scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / in_dim) ** 0.5
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=DTYPE):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+def norm_init(dim: int, with_bias: bool = False):
+    p = {"w": jnp.ones((dim,), jnp.float32)}
+    if with_bias:
+        p["b"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x):
+    if "b" in p:
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    if x.ndim == ang.ndim + 1:                         # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+DEFAULT_Q_CHUNK = 1024   # query-block size for chunked attention (a
+                         # dry-run/hillclimb knob: smaller blocks cap the
+                         # (B,H,q,T) score transient)
+
+
+def attn_init(key, cfg) -> Dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return dict(
+        wq=dense_init(ks[0], d, h * hd),
+        wk=dense_init(ks[1], d, hkv * hd),
+        wv=dense_init(ks[2], d, hkv * hd),
+        wo=dense_init(ks[3], h * hd, d),
+        norm=norm_init(d, with_bias=cfg.norm_bias),
+    )
+
+
+def _attention_scores(q, k, v, mask, q_chunk: int = 0):
+    """softmax(q kᵀ / sqrt(d)) v, GQA-aware.
+
+    q: (B, S, H, D); k, v: (B, T, Hkv, D); mask: (B?, S, T) bool or callable
+    producing the (Sq_chunk, T) mask for a query offset (used when
+    chunking so the full S x T mask is never materialised).
+    Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                 # may differ from d (MLA)
+    group = h // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, s, hkv, group, d)
+
+    def block(q_blk, mask_blk):
+        # q_blk: (B, Sb, Hkv, G, D); mask_blk: (Sb, T) or (B, Sb, T)
+        scores = jnp.einsum("bskgd,btkd->bkgst", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        m = mask_blk if mask_blk.ndim == 3 else mask_blk[None]
+        scores = jnp.where(m[:, None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btkd->bskgd", p, v)
+
+    if q_chunk and s > q_chunk:
+        nchunks = s // q_chunk
+        qc = qg.reshape(b, nchunks, q_chunk, hkv, group, d)
+
+        def body(i):
+            mask_blk = mask(i * q_chunk, q_chunk)
+            return block(qc[:, i], mask_blk)
+
+        out = jax.lax.map(body, jnp.arange(nchunks))      # (n, B, Sb, ...)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, hkv, group, dv)
+    else:
+        mask_blk = mask(0, s) if callable(mask) else mask
+        out = block(qg, mask_blk)
+    return out.reshape(b, s, h, dv)
+
+
+def causal_mask(q_off: int, s_q: int, t: int, window: int = 0):
+    """(s_q, t) bool mask; query i at absolute position q_off + i."""
+    qpos = q_off + jnp.arange(s_q)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention(p, x, cfg, positions=None, q_chunk: int = 0,
+              bidirectional: bool = False):
+    """Self-attention over a full sequence (training / prefill).
+
+    Returns (out, kv) where kv = (k, v) for cache construction.
+    """
+    b, s, _ = x.shape
+    q_chunk = q_chunk or DEFAULT_Q_CHUNK
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    xn = apply_norm(p["norm"], x)
+    q = (xn @ wload(p["wq"])).reshape(b, s, h, hd)
+    k = (xn @ wload(p["wk"])).reshape(b, s, hkv, hd)
+    v = (xn @ wload(p["wv"])).reshape(b, s, hkv, hd)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if bidirectional:
+        mask_fn = lambda off, sq: jnp.ones((sq, s), bool)   # noqa: E731
+    else:
+        mask_fn = lambda off, sq: causal_mask(off, sq, s, cfg.swa_window)  # noqa: E731
+    chunk = q_chunk if s > (q_chunk * 2) else 0
+    out = _attention_scores(q, k, v, mask_fn, q_chunk=chunk)
+    out = out.reshape(b, s, h * hd) @ wload(p["wo"], 0)
+    return x + out, (k, v)
+
+
+def cross_attention(p, x, enc_kv, cfg):
+    """Decoder cross-attention to precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k, v = enc_kv
+    xn = apply_norm(p["norm"], x)
+    q = (xn @ p["wq"]).reshape(b, s, h, hd)
+    t = k.shape[1]
+    mask_fn = lambda off, sq: jnp.ones((sq, t), bool)       # noqa: E731
+    out = _attention_scores(q, k, v, mask_fn, q_chunk=0)
+    return x + out.reshape(b, s, h * hd) @ p["wo"]
+
+
+def attention_decode(p, x, cache, pos, cfg, ring: bool = False):
+    """One-token decode.  x: (B, 1, d); cache: dict(k=(B, T, Hkv, D), v=...);
+    pos: scalar int32 absolute position.  With ``ring`` (sliding-window
+    archs) the cache is a ring buffer of size window and positions wrap.
+    Returns (out, new_cache)."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    t = cache["k"].shape[1]
+    xn = apply_norm(p["norm"], x)
+    q = (xn @ wload(p["wq"])).reshape(b, 1, h, hd)
+    k = (xn @ wload(p["wk"])).reshape(b, 1, hkv, hd)
+    v = (xn @ wload(p["wv"])).reshape(b, 1, hkv, hd)
+    if cfg.rope:
+        pp = jnp.full((b, 1), pos)
+        q = apply_rope(q, pp, cfg.rope_theta)
+        k = apply_rope(k, pp, cfg.rope_theta)
+    slot = jnp.where(ring, pos % t, jnp.minimum(pos, t - 1))
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # valid positions: all <= pos (ring: the whole buffer once warm)
+    kpos = jnp.arange(t)
+    valid = jnp.where(ring, kpos <= jnp.maximum(pos, t - 1), kpos <= pos)
+    mask_fn = valid[None, :]
+
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (hd ** -0.5)
+    scores = jnp.where(mask_fn[:, None, None], scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", pr, cv).reshape(b, 1, h * hd)
+    return x + out @ wload(p["wo"], 0), dict(k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------- mlp
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = dict(w_in=dense_init(ks[0], d, ff), w_out=dense_init(ks[1], ff, d),
+             norm=norm_init(d, with_bias=cfg.norm_bias))
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, ff)
+    return p
+
+
+def mlp(p, x, cfg):
+    xn = apply_norm(p["norm"], x)
+    hmid = xn @ wload(p["w_in"])
+    if cfg.mlp_act == "swiglu":
+        hmid = jax.nn.silu((xn @ wload(p["w_gate"])).astype(jnp.float32)) \
+            .astype(hmid.dtype) * hmid
+    else:
+        hmid = jax.nn.gelu(hmid.astype(jnp.float32)).astype(hmid.dtype)
+    return x + hmid @ wload(p["w_out"], 0)
+
+
+# ---------------------------------------------------------------------- moe
+def moe_init(key, cfg) -> Dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    p = dict(
+        router=dense_init(ks[0], d, e, dtype=jnp.float32, scale=0.02),
+        w_in=(jax.random.normal(ks[1], (e, d, ff)) * (1 / d) ** 0.5).astype(DTYPE),
+        w_gate=(jax.random.normal(ks[2], (e, d, ff)) * (1 / d) ** 0.5).astype(DTYPE),
+        w_out=(jax.random.normal(ks[3], (e, ff, d)) * (1 / ff) ** 0.5).astype(DTYPE),
+        norm=norm_init(d, with_bias=cfg.norm_bias),
+    )
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe(p, x, cfg, group_size: int = 0, capacity_factor: float = 0.0):
+    """Top-k routed MoE, GShard-style grouped capacity dispatch.
+
+    Tokens are reshaped into groups of ``group_size``; within each group
+    every expert accepts at most C = ceil(k*group/E * cf) tokens (overflow
+    dropped, standard GShard semantics).  The dispatch/combine tensor is
+    (G, T_g, E, C) — groups shard over the batch ('data') axes and
+    experts over 'model', so per-device memory is bounded.
+
+    The *explicit* two-hop (proxy) dispatch across pods lives in
+    core/collectives.two_hop_all_to_all and is used by the optimized
+    schedule; this dense formulation is the GSPMD baseline.
+    Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    group_size = group_size or MOE_GROUP
+    capacity_factor = capacity_factor or MOE_CF
+    xn = apply_norm(p["norm"], x)
+    t_total = b * s
+    g_sz = min(group_size, t_total)
+    ng = t_total // g_sz
+    xg = xn.reshape(ng, g_sz, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])          # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (G,Tg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (switch-style)
+    onehot_k = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (G,Tg,k,E)
+    density = jnp.mean(onehot_k.sum(2), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * router_prob) * e
+
+    cap = int(np.ceil(k * g_sz / e * capacity_factor))
+    # position of each (token, k) slot within its expert's capacity
+    flat_mask = onehot_k.reshape(ng, g_sz * k, e)
+    pos = jnp.cumsum(flat_mask, axis=1) - 1.0                # (G,Tg*k,E)
+    pos = jnp.sum(pos * flat_mask, axis=-1).reshape(ng, g_sz, k)
+    keep = pos < cap
+    # combine weights (G,Tg,E,C): sum over k of gate * 1[e] * 1[c]
+    comb = jnp.zeros((ng, g_sz, e, cap), jnp.float32)
+    for kk in range(k):
+        oh_c = jax.nn.one_hot(jnp.where(keep[..., kk], pos[..., kk], cap),
+                              cap, dtype=jnp.float32)        # (G,Tg,C)
+        comb = comb + (gate_vals[..., kk, None, None]
+                       * onehot_k[..., kk, :, None] * oh_c[..., None, :])
+    dispatch = (comb > 0).astype(DTYPE)
+
+    # Two-stage (proxy / two-hop) dispatch.  Stage 1 packs each group's
+    # routed tokens into its (E, C, d) send buffer *locally* (the
+    # regional coalesce: at most C tokens per expert survive).  Stage 2
+    # is a single g-shard -> e-shard resharding, which GSPMD lowers to an
+    # all-to-all of only the routed tokens.  Constraining only the final
+    # expert-sharded layout lets the partitioner instead all-gather every
+    # token to every expert shard — ~10x the wire bytes (EXPERIMENTS.md
+    # §Perf, deepseek-v3 iteration 4).
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg.astype(DTYPE))
+    if TWO_HOP_DISPATCH:
+        # factored per-axis exchange: pack locally, a2a over 'data',
+        # free slice over 'model' (and the reverse on the way out)
+        xe = constrain(constrain(constrain(xe), "expert_hop1"), "expert")
+    else:
+        # token-gather schedule: constrain only the expert-sharded layout
+        # and let the partitioner gather tokens to the expert shards
+        xe = constrain(xe, "expert")
+    hin = jnp.einsum("gecd,edf->gecf", xe, p["w_in"])
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    hmid = jax.nn.silu(hg.astype(jnp.float32)).astype(DTYPE) * hin
+    oe = constrain(jnp.einsum("gecf,efd->gecd", hmid, p["w_out"]),
+                   "expert")
+    if TWO_HOP_DISPATCH:
+        oe = constrain(constrain(oe, "expert_hop1"))
+    out = constrain(jnp.einsum("gecd,gtec->gtd", oe, comb.astype(DTYPE)))
+    out = out.reshape(b, s, d)
+    if "shared" in p:
+        out = out + (mlp(p["shared"], x, cfg) - x)
+    return x + out, aux
+
+
+# ---------------------------------------------------------------------- mla
+def mla_init(key, cfg) -> Dict:
+    """DeepSeek-V3 Multi-head Latent Attention."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    dq, dc = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return dict(
+        wq_a=dense_init(ks[0], d, dq),
+        q_norm=norm_init(dq),
+        wq_b=dense_init(ks[1], dq, h * (dn + dr)),
+        wkv_a=dense_init(ks[2], d, dc + dr),
+        kv_norm=norm_init(dc),
+        wk_b=dense_init(ks[3], dc, h * dn),
+        wv_b=dense_init(ks[4], dc, h * dv),
+        wo=dense_init(ks[5], h * dv, d),
+        norm=norm_init(d, with_bias=cfg.norm_bias),
+    )
+
+
+def mla_attention(p, x, cfg, positions=None, q_chunk: int = 0):
+    """MLA over a full sequence.  Returns (out, latent_cache) where
+    latent_cache = (c_kv (B,S,dc), k_rope (B,S,dr)) — the compressed cache
+    that makes 500k-class decode feasible (paper's data-local footprint
+    argument applied to KV state)."""
+    b, s, _ = x.shape
+    q_chunk = q_chunk or DEFAULT_Q_CHUNK
+    h = cfg.n_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, \
+        cfg.kv_lora_rank
+    xn = apply_norm(p["norm"], x)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_norm(p["q_norm"], xn @ wload(p["wq_a"])) @ wload(p["wq_b"])
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = xn @ wload(p["wkv_a"])                           # (B,S,dc+dr)
+    c_kv = apply_norm(p["kv_norm"], kv[..., :dc])
+    k_rope = apply_rope(kv[..., dc:], positions, cfg.rope_theta)
+    k_nope = (c_kv @ wload(p["wk_b"])).reshape(b, s, h, dn)
+    v = (c_kv @ wload(p["wv_b"])).reshape(b, s, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+        axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask_fn = lambda off, sq: causal_mask(off, sq, s, cfg.swa_window)  # noqa: E731
+    chunk = q_chunk if s > (q_chunk * 2) else 0
+    out = _attention_scores(qq, k, v, mask_fn, q_chunk=chunk)
+    out = out.reshape(b, s, h * dv) @ wload(p["wo"], 0)
+    return x + out, (c_kv, kv[..., dc:])
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """One-token MLA decode against the compressed latent cache.
+    cache: dict(c=(B,T,dc), kr=(B,T,dr)).  Absorbs wk_b into the query
+    (the paper-faithful low-rank trick): scores = (q_nope wk_bᵀ) · c."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, \
+        cfg.kv_lora_rank
+    t = cache["c"].shape[1]
+    xn = apply_norm(p["norm"], x)
+    q = apply_norm(p["q_norm"], xn @ wload(p["wq_a"])) @ wload(p["wq_b"])
+    q = q.reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pp = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope, pp, cfg.rope_theta)
+
+    kv = xn @ wload(p["wkv_a"])
+    c_new = apply_norm(p["kv_norm"], kv[..., :dc])
+    kr_new = apply_rope(kv[..., dc:], pp, cfg.rope_theta)
+    slot = jnp.minimum(pos, t - 1)
+    cc = jax.lax.dynamic_update_slice(cache["c"],
+                                      c_new.astype(cache["c"].dtype),
+                                      (0, slot, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["kr"],
+                                       kr_new.astype(cache["kr"].dtype),
+                                       (0, slot, 0))
+    # absorb wk_b into the query (low-rank trick): score against the
+    # *compressed* latent directly.  wkb: (dc, h, dn); contract dn.
+    wkb = p["wk_b"].reshape(dc, h, dn)
+    q_eff = jnp.einsum("bhn,chn->bhc", q_nope[:, 0].astype(jnp.float32),
+                       wkb.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bhc,btc->bht", q_eff, cc.astype(jnp.float32))
+              + jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(jnp.float32),
+                           ckr.astype(jnp.float32))) * scale
+    valid = jnp.arange(t)[None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bht,btc->bhc", pr, cc.astype(jnp.float32))  # (B,h,dc)
+    wvb = p["wv_b"].reshape(dc, h, dv)
+    out = jnp.einsum("bhc,chv->bhv", ctx, wvb.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return x + out, dict(c=cc, kr=ckr)

@@ -1,0 +1,621 @@
+"""Decoder-only LM assembly for all non-enc-dec families.
+
+Families (dispatch table at the bottom):
+  dense   - GQA/SWA attention + MLP              (starcoder2, deepseek-7b,
+                                                   h2o-danube, pixtral bkbn)
+  moe     - attention + top-k routed MoE          (granite-moe)
+  mla_moe - MLA attention + MoE w/ shared expert  (deepseek-v3, opt. MTP)
+  xlstm   - mLSTM/sLSTM groups                    (xlstm-1.3b)
+  hybrid  - Mamba2 + shared attention block       (zamba2-1.2b)
+
+Common protocol per family module:
+  init(cfg, key) -> params
+  forward(params, batch, cfg) -> (logits, aux_loss)
+  prefill(params, batch, cfg) -> (logits, cache)
+  decode(params, cache, tokens, pos, cfg) -> (logits, cache)
+  init_cache(cfg, batch, cache_len) -> cache pytree (zeros; used via
+      eval_shape by the dry-run to build ShapeDtypeStruct stand-ins)
+
+Layers are stacked on a leading L axis and consumed with lax.scan
+(+ jax.checkpoint for remat) — essential to keep 61-layer HLO small.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm as ssm_mod
+from . import xlstm as xl_mod
+from .layers import (DTYPE, apply_norm, attention, attention_decode,
+                     attn_init, constrain, dense_init, embed_init,
+                     mla_attention, mla_decode, mla_init, mlp, mlp_init,
+                     moe, moe_init, norm_init)
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ shared
+def _embed_in(params, batch, cfg):
+    if isinstance(batch, dict) and "embeds" in batch:
+        return constrain(batch["embeds"].astype(DTYPE))
+    tokens = batch["tokens"] if isinstance(batch, dict) else batch
+    return constrain(jnp.take(params["tok_emb"], tokens, axis=0))
+
+
+def _head(params, x, cfg):
+    x = apply_norm(params["final_norm"], x)
+    from .layers import wload
+    return constrain(jnp.einsum("bsd,vd->bsv", x,
+                                wload(params["lm_head"], 0)), "logits")
+
+
+def lm_loss(logits, labels, cfg, aux=0.0):
+    """CE over the (padded, possibly vocab-sharded) logits.  The true
+    logit is extracted with an iota-compare masked sum — elementwise, so
+    it shards like the logits (no gather over the vocab dim)."""
+    lf = logits.astype(jnp.float32)
+    vpad = lf.shape[-1]
+    vids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    lf = jnp.where(vids < cfg.vocab, lf, -1e30)          # mask padding rows
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)       # (B,S)
+    true = jnp.sum(jnp.where(vids == labels[..., None], lf, 0.0), axis=-1)
+    ce = jnp.mean(lse - true)
+    return ce + cfg.moe_aux_weight * aux
+
+
+def _base_init(cfg, key):
+    ks = jax.random.split(key, 3)
+    p = dict(final_norm=norm_init(cfg.d_model, with_bias=cfg.norm_bias),
+             lm_head=embed_init(ks[1], cfg.vocab_pad, cfg.d_model))
+    if not cfg.input_embeds or cfg.family in ("dense", "moe", "mla_moe",
+                                              "xlstm", "hybrid"):
+        p["tok_emb"] = embed_init(ks[0], cfg.vocab_pad, cfg.d_model)
+    return p
+
+
+def _stack(layer_fn, keys):
+    layers = [layer_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ======================================================================
+# dense
+# ======================================================================
+def dense_init_params(cfg, key):
+    p = _base_init(cfg, key)
+    keys = jax.random.split(jax.random.fold_in(key, 7), cfg.n_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return dict(attn=attn_init(k1, cfg), mlp=mlp_init(k2, cfg))
+
+    p["layers"] = _stack(one, keys)
+    return p
+
+
+def _dense_block(lp, x, cfg, positions):
+    x, kv = attention(lp["attn"], x, cfg, positions)
+    x = constrain(mlp(lp["mlp"], constrain(x), cfg))
+    return x, kv
+
+
+def dense_forward(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    block = jax.checkpoint(
+        lambda lp, x: _dense_block(lp, x, cfg, positions)[0],
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, lp):
+        return block(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return _head(params, x, cfg), 0.0
+
+
+def dense_prefill(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        x, kv = _dense_block(lp, x, cfg, positions)
+        return x, kv
+
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    cache = dict(k=kvs[0], v=kvs[1])                     # (L,B,S,Hkv,D)
+    logits = _head(params, x[:, -1:], cfg)
+    return logits, cache
+
+
+CARRY_CACHE = True    # decode-cache scheduling: True (default) = cache is
+                      # a loop *carry* updated in place at the layer index
+                      # (aliases with the donated input); False = cache
+                      # flows through scan xs->ys, which makes XLA
+                      # double-buffer the whole stacked cache (-95% decode
+                      # temp with carry; EXPERIMENTS.md §Perf C)
+
+
+def dense_decode(params, cache, tokens, pos, cfg):
+    x = _embed_in(params, dict(tokens=tokens), cfg)
+    ring = cfg.swa_window > 0 and cache["k"].shape[2] == cfg.swa_window
+
+    if CARRY_CACHE:
+        def body(carry, xs):
+            x, ck, cv = carry
+            lp, li = xs
+            cl = dict(k=jax.lax.dynamic_index_in_dim(ck, li, 0, False),
+                      v=jax.lax.dynamic_index_in_dim(cv, li, 0, False))
+            x, ncl = attention_decode(lp["attn"], x, cl, pos, cfg,
+                                      ring=ring)
+            x = mlp(lp["mlp"], x, cfg)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, ncl["k"], li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, ncl["v"], li, 0)
+            return (x, ck, cv), None
+
+        (x, ck, cv), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        return _head(params, x, cfg)[:, 0], dict(k=ck, v=cv)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, ncl = attention_decode(lp["attn"], x, dict(k=ck, v=cv), pos, cfg,
+                                  ring=ring)
+        x = mlp(lp["mlp"], x, cfg)
+        return x, ncl
+
+    x, ncache = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                       cache["v"]))
+    logits = _head(params, x, cfg)
+    return logits[:, 0], dict(k=ncache["k"], v=ncache["v"])
+
+
+def dense_init_cache(cfg, batch, cache_len):
+    t = cache_len if not cfg.swa_window else min(cache_len, cfg.swa_window)
+    shape = (cfg.n_layers, batch, t, cfg.n_kv, cfg.head_dim)
+    return dict(k=jnp.zeros(shape, DTYPE), v=jnp.zeros(shape, DTYPE))
+
+
+# ======================================================================
+# moe (dense attention + routed MoE mlp)
+# ======================================================================
+def moe_init_params(cfg, key):
+    p = _base_init(cfg, key)
+    keys = jax.random.split(jax.random.fold_in(key, 11), cfg.n_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return dict(attn=attn_init(k1, cfg), moe=moe_init(k2, cfg))
+
+    p["layers"] = _stack(one, keys)
+    return p
+
+
+def _moe_block(lp, x, cfg, positions):
+    x, kv = attention(lp["attn"], x, cfg, positions)
+    x, aux = moe(lp["moe"], constrain(x), cfg)
+    return constrain(x), aux, kv
+
+
+def moe_forward(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    block = jax.checkpoint(
+        lambda lp, x: _moe_block(lp, x, cfg, positions)[:2],
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
+    return _head(params, x, cfg), aux / cfg.n_layers
+
+
+def moe_prefill(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        x, _, kv = _moe_block(lp, x, cfg, positions)
+        return x, kv
+
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    return _head(params, x[:, -1:], cfg), dict(k=kvs[0], v=kvs[1])
+
+
+def moe_decode(params, cache, tokens, pos, cfg):
+    x = _embed_in(params, dict(tokens=tokens), cfg)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, ncl = attention_decode(lp["attn"], x, dict(k=ck, v=cv), pos, cfg)
+        x, _ = moe(lp["moe"], x, cfg)
+        return x, ncl
+
+    x, ncache = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                       cache["v"]))
+    return _head(params, x, cfg)[:, 0], dict(k=ncache["k"], v=ncache["v"])
+
+
+moe_init_cache = dense_init_cache
+
+
+# ======================================================================
+# mla_moe (deepseek-v3: MLA attention, leading dense layers, MoE + MTP)
+# ======================================================================
+def mla_moe_init_params(cfg, key):
+    p = _base_init(cfg, key)
+    kd = jax.random.split(jax.random.fold_in(key, 13), cfg.n_dense_layers)
+    km = jax.random.split(jax.random.fold_in(key, 17),
+                          cfg.n_layers - cfg.n_dense_layers)
+
+    def one_dense(k):
+        k1, k2 = jax.random.split(k)
+        return dict(attn=mla_init(k1, cfg), mlp=mlp_init(k2, cfg))
+
+    def one_moe(k):
+        k1, k2 = jax.random.split(k)
+        return dict(attn=mla_init(k1, cfg), moe=moe_init(k2, cfg))
+
+    p["dense_layers"] = _stack(one_dense, kd)
+    p["moe_layers"] = _stack(one_moe, km)
+    if cfg.mtp:
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, 19), 3)
+        p["mtp"] = dict(proj=dense_init(k1, 2 * cfg.d_model, cfg.d_model),
+                        block=one_dense(k2),
+                        norm=norm_init(cfg.d_model, with_bias=cfg.norm_bias))
+    return p
+
+
+def mla_moe_forward(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def dense_block(lp, x):
+        x, _ = mla_attention(lp["attn"], x, cfg, positions)
+        return constrain(mlp(lp["mlp"], constrain(x), cfg))
+
+    def moe_block(lp, x):
+        x, _ = mla_attention(lp["attn"], x, cfg, positions)
+        x, aux = moe(lp["moe"], constrain(x), cfg)
+        return constrain(x), aux
+
+    dense_ck = jax.checkpoint(dense_block,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    moe_ck = jax.checkpoint(moe_block,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda x, lp: (dense_ck(lp, x), None), x,
+                        params["dense_layers"])
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = moe_ck(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["moe_layers"])
+    logits = _head(params, x, cfg)
+    aux = aux / max(cfg.n_layers - cfg.n_dense_layers, 1)
+    if cfg.mtp and isinstance(batch, dict) and "tokens" in batch:
+        # MTP: predict token t+2 from (h_t, emb(token_{t+1})).
+        emb_next = jnp.take(params["tok_emb"],
+                            jnp.roll(batch["tokens"], -1, axis=1), axis=0)
+        xn = apply_norm(params["mtp"]["norm"], x)
+        h = jnp.concatenate([xn, emb_next], axis=-1) @ params["mtp"]["proj"]
+        h, _ = mla_attention(params["mtp"]["block"]["attn"], h, cfg,
+                             positions)
+        h = mlp(params["mtp"]["block"]["mlp"], h, cfg)
+        mtp_logits = _head(params, h, cfg)
+        return (logits, mtp_logits), aux
+    return logits, aux
+
+
+def mla_moe_prefill(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def dbody(x, lp):
+        x, lat = mla_attention(lp["attn"], x, cfg, positions)
+        return mlp(lp["mlp"], x, cfg), lat
+
+    x, dlat = jax.lax.scan(dbody, x, params["dense_layers"])
+
+    def mbody(x, lp):
+        x, lat = mla_attention(lp["attn"], x, cfg, positions)
+        x, _ = moe(lp["moe"], x, cfg)
+        return x, lat
+
+    x, mlat = jax.lax.scan(mbody, x, params["moe_layers"])
+    cache = dict(dc=dlat[0], dkr=dlat[1], mc=mlat[0], mkr=mlat[1])
+    return _head(params, x[:, -1:], cfg), cache
+
+
+def mla_moe_decode(params, cache, tokens, pos, cfg):
+    x = _embed_in(params, dict(tokens=tokens), cfg)
+
+    def dbody(x, xs):
+        lp, c, kr = xs
+        x, nc = mla_decode(lp["attn"], x, dict(c=c, kr=kr), pos, cfg)
+        return mlp(lp["mlp"], x, cfg), nc
+
+    x, dlat = jax.lax.scan(dbody, x, (params["dense_layers"], cache["dc"],
+                                      cache["dkr"]))
+
+    def mbody(x, xs):
+        lp, c, kr = xs
+        x, nc = mla_decode(lp["attn"], x, dict(c=c, kr=kr), pos, cfg)
+        x, _ = moe(lp["moe"], x, cfg)
+        return x, nc
+
+    x, mlat = jax.lax.scan(mbody, x, (params["moe_layers"], cache["mc"],
+                                      cache["mkr"]))
+    ncache = dict(dc=dlat["c"], dkr=dlat["kr"], mc=mlat["c"],
+                  mkr=mlat["kr"])
+    return _head(params, x, cfg)[:, 0], ncache
+
+
+def mla_moe_init_cache(cfg, batch, cache_len):
+    nd = cfg.n_dense_layers
+    nm = cfg.n_layers - nd
+    return dict(
+        dc=jnp.zeros((nd, batch, cache_len, cfg.kv_lora_rank), DTYPE),
+        dkr=jnp.zeros((nd, batch, cache_len, cfg.qk_rope_dim), DTYPE),
+        mc=jnp.zeros((nm, batch, cache_len, cfg.kv_lora_rank), DTYPE),
+        mkr=jnp.zeros((nm, batch, cache_len, cfg.qk_rope_dim), DTYPE),
+    )
+
+
+# ======================================================================
+# xlstm (groups of (slstm_every - 1) mLSTM + 1 sLSTM)
+# ======================================================================
+def xlstm_init_params(cfg, key):
+    p = _base_init(cfg, key)
+    g = cfg.n_layers // cfg.xlstm_slstm_every
+    m_per = cfg.xlstm_slstm_every - 1
+    gkeys = jax.random.split(jax.random.fold_in(key, 23), g)
+
+    def one_group(k):
+        mks = jax.random.split(k, m_per + 1)
+        ml = _stack(lambda kk: xl_mod.mlstm_init(kk, cfg), mks[:m_per])
+        sl = xl_mod.slstm_init(mks[-1], cfg)
+        return dict(mlstm=ml, slstm=sl)
+
+    p["groups"] = _stack(one_group, gkeys)
+    return p
+
+
+def _xlstm_group(gp, x, cfg, states=None):
+    """Run one group; states = (m_states, s_state) or None."""
+    m_per = jax.tree.leaves(gp["mlstm"])[0].shape[0]
+
+    def mbody(x, xs):
+        if states is None:
+            lp = xs
+            x, st = xl_mod.mlstm_forward(lp, x, cfg)
+        else:
+            lp, st_in = xs
+            x, st = xl_mod.mlstm_forward(lp, x, cfg, state=st_in)
+        return x, st
+
+    xs = gp["mlstm"] if states is None else (gp["mlstm"], states[0])
+    x, m_states = jax.lax.scan(mbody, x, xs)
+    x, s_state = xl_mod.slstm_forward(gp["slstm"], x, cfg,
+                                      state=None if states is None
+                                      else states[1])
+    return x, (m_states, s_state)
+
+
+def xlstm_forward(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    group = jax.checkpoint(lambda gp, x: _xlstm_group(gp, x, cfg)[0],
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda x, gp: (constrain(group(gp, x)), None), x,
+                        params["groups"])
+    return _head(params, x, cfg), 0.0
+
+
+def xlstm_prefill(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+
+    def body(x, gp):
+        x, st = _xlstm_group(gp, x, cfg)
+        return x, st
+
+    x, states = jax.lax.scan(body, x, params["groups"])
+    return _head(params, x[:, -1:], cfg), states
+
+
+def xlstm_decode(params, cache, tokens, pos, cfg):
+    x = _embed_in(params, dict(tokens=tokens), cfg)
+
+    def body(x, xs):
+        gp, st = xs
+
+        def mbody(x, ys):
+            lp, s = ys
+            x, ns = xl_mod.mlstm_decode(lp, x, s, cfg)
+            return x, ns
+
+        x, m_states = jax.lax.scan(mbody, x, (gp["mlstm"], st[0]))
+        x, s_state = xl_mod.slstm_decode(gp["slstm"], x, st[1], cfg)
+        return x, (m_states, s_state)
+
+    x, states = jax.lax.scan(body, x, (params["groups"], cache))
+    return _head(params, x, cfg)[:, 0], states
+
+
+def xlstm_init_cache(cfg, batch, cache_len):
+    del cache_len                                  # O(1) state
+    g = cfg.n_layers // cfg.xlstm_slstm_every
+    m_per = cfg.xlstm_slstm_every - 1
+    di = cfg.xlstm_proj * cfg.d_model
+    pp = di // cfg.n_heads
+    sp = cfg.d_model // cfg.n_heads
+    f32 = jnp.float32
+    m_states = (jnp.zeros((g, m_per, batch, cfg.n_heads, pp, pp), f32),
+                jnp.zeros((g, m_per, batch, cfg.n_heads, pp), f32),
+                jnp.full((g, m_per, batch, cfg.n_heads), -1e30, f32))
+    s_state = (jnp.zeros((g, batch, cfg.n_heads, sp), f32),
+               jnp.zeros((g, batch, cfg.n_heads, sp), f32),
+               jnp.zeros((g, batch, cfg.n_heads, sp), f32),
+               jnp.full((g, batch, cfg.n_heads), -1e30, f32))
+    return (m_states, s_state)
+
+
+# ======================================================================
+# hybrid (zamba2: Mamba2 backbone + shared attention block every k layers)
+# ======================================================================
+def hybrid_init_params(cfg, key):
+    p = _base_init(cfg, key)
+    keys = jax.random.split(jax.random.fold_in(key, 29), cfg.n_layers)
+    p["mamba"] = _stack(lambda k: ssm_mod.ssd_init(k, cfg), keys)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 31))
+    p["shared"] = dict(attn=attn_init(k1, cfg), mlp=mlp_init(k2, cfg))
+    return p
+
+
+def _n_shared(cfg):
+    return cfg.n_layers // cfg.hybrid_every
+
+
+def hybrid_forward(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    shared = params["shared"]
+
+    def block(lp, x, idx):
+        x, _ = ssm_mod.ssd_forward(lp, x, cfg)
+        x = constrain(x)
+        apply_shared = (idx % cfg.hybrid_every) == (cfg.hybrid_every - 1)
+
+        def with_attn(x):
+            x, _ = attention(shared["attn"], x, cfg, positions)
+            return constrain(mlp(shared["mlp"], x, cfg))
+
+        return jax.lax.cond(apply_shared, with_attn, lambda x: x, x)
+
+    block_ck = jax.checkpoint(block,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, xs):
+        lp, idx = xs
+        return block_ck(lp, x, idx), None
+
+    x, _ = jax.lax.scan(body, x, (params["mamba"],
+                                  jnp.arange(cfg.n_layers)))
+    return _head(params, x, cfg), 0.0
+
+
+def hybrid_prefill(params, batch, cfg):
+    x = _embed_in(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    shared = params["shared"]
+    n_sh = _n_shared(cfg)
+    b = x.shape[0]
+    t = x.shape[1] if not cfg.swa_window else min(x.shape[1], cfg.swa_window)
+    sh_cache = dict(
+        k=jnp.zeros((n_sh, b, t, cfg.n_kv, cfg.head_dim), DTYPE),
+        v=jnp.zeros((n_sh, b, t, cfg.n_kv, cfg.head_dim), DTYPE))
+
+    def body(carry, xs):
+        x, sh = carry
+        lp, idx = xs
+        x, st = ssm_mod.ssd_forward(lp, x, cfg)
+        apply_shared = (idx % cfg.hybrid_every) == (cfg.hybrid_every - 1)
+        sidx = idx // cfg.hybrid_every
+
+        def with_attn(args):
+            x, sh = args
+            x2, (k, v) = attention(shared["attn"], x, cfg, positions)
+            x2 = mlp(shared["mlp"], x2, cfg)
+            kk = k[:, -t:].astype(DTYPE)
+            vv = v[:, -t:].astype(DTYPE)
+            sh = dict(
+                k=jax.lax.dynamic_update_slice(
+                    sh["k"], kk[None], (sidx, 0, 0, 0, 0)),
+                v=jax.lax.dynamic_update_slice(
+                    sh["v"], vv[None], (sidx, 0, 0, 0, 0)))
+            return x2, sh
+
+        x, sh = jax.lax.cond(apply_shared, with_attn, lambda a: a, (x, sh))
+        return (x, sh), st
+
+    (x, sh_cache), sstates = jax.lax.scan(
+        body, (x, sh_cache), (params["mamba"], jnp.arange(cfg.n_layers)))
+    cache = dict(ssm=sstates[0], conv=sstates[1], shared=sh_cache)
+    return _head(params, x[:, -1:], cfg), cache
+
+
+def hybrid_decode(params, cache, tokens, pos, cfg):
+    x = _embed_in(params, dict(tokens=tokens), cfg)
+    shared = params["shared"]
+    t = cache["shared"]["k"].shape[2]
+    ring = cfg.swa_window > 0 and t == cfg.swa_window
+
+    def body(carry, xs):
+        x, sh = carry
+        lp, s_ssm, s_conv, idx = xs
+        x, (n_ssm, n_conv) = ssm_mod.ssd_decode(lp, x, (s_ssm, s_conv), cfg)
+        apply_shared = (idx % cfg.hybrid_every) == (cfg.hybrid_every - 1)
+        sidx = idx // cfg.hybrid_every
+
+        def with_attn(args):
+            x, sh = args
+            cl = dict(k=sh["k"][sidx], v=sh["v"][sidx])
+            x2, ncl = attention_decode(shared["attn"], x, cl, pos, cfg,
+                                       ring=ring)
+            x2 = mlp(shared["mlp"], x2, cfg)
+            sh = dict(
+                k=jax.lax.dynamic_update_slice(
+                    sh["k"], ncl["k"][None], (sidx, 0, 0, 0, 0)),
+                v=jax.lax.dynamic_update_slice(
+                    sh["v"], ncl["v"][None], (sidx, 0, 0, 0, 0)))
+            return x2, sh
+
+        x, sh = jax.lax.cond(apply_shared, with_attn, lambda a: a, (x, sh))
+        return (x, sh), (n_ssm, n_conv)
+
+    (x, sh_cache), sstates = jax.lax.scan(
+        body, (x, cache["shared"]),
+        (params["mamba"], cache["ssm"], cache["conv"],
+         jnp.arange(cfg.n_layers)))
+    ncache = dict(ssm=sstates[0], conv=sstates[1], shared=sh_cache)
+    return _head(params, x, cfg)[:, 0], ncache
+
+
+def hybrid_init_cache(cfg, batch, cache_len):
+    di = cfg.ssm_expand * cfg.d_model
+    t = cache_len if not cfg.swa_window else min(cache_len, cfg.swa_window)
+    n_sh = _n_shared(cfg)
+    return dict(
+        ssm=jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, ssm_mod.CONV_W - 1, di), DTYPE),
+        shared=dict(
+            k=jnp.zeros((n_sh, batch, t, cfg.n_kv, cfg.head_dim), DTYPE),
+            v=jnp.zeros((n_sh, batch, t, cfg.n_kv, cfg.head_dim), DTYPE)),
+    )
+
+
+# ----------------------------------------------------------------- dispatch
+FAMILIES: Dict[str, Dict[str, Any]] = {
+    "dense": dict(init=dense_init_params, forward=dense_forward,
+                  prefill=dense_prefill, decode=dense_decode,
+                  init_cache=dense_init_cache),
+    "moe": dict(init=moe_init_params, forward=moe_forward,
+                prefill=moe_prefill, decode=moe_decode,
+                init_cache=moe_init_cache),
+    "mla_moe": dict(init=mla_moe_init_params, forward=mla_moe_forward,
+                    prefill=mla_moe_prefill, decode=mla_moe_decode,
+                    init_cache=mla_moe_init_cache),
+    "xlstm": dict(init=xlstm_init_params, forward=xlstm_forward,
+                  prefill=xlstm_prefill, decode=xlstm_decode,
+                  init_cache=xlstm_init_cache),
+    "hybrid": dict(init=hybrid_init_params, forward=hybrid_forward,
+                   prefill=hybrid_prefill, decode=hybrid_decode,
+                   init_cache=hybrid_init_cache),
+}

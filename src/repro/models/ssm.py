@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) block — used by zamba2-1.2b and as the sub-quadratic
+long-context path (long_500k shapes).
+
+Training uses the chunked state-space-dual algorithm: quadratic
+attention-like compute *within* a chunk (MXU-friendly), linear recurrence
+*across* chunks (lax.scan carrying the (H, P, N) state).  Decode is the
+O(1) recurrent step.  The cross-chunk state hand-off is associative — the
+same regional-combine structure the paper's proxies exploit (DESIGN §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, apply_norm, dense_init, norm_init
+
+CONV_W = 4          # causal depthwise conv width
+CHUNK = 256
+
+
+def ssd_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert h * p == di, (h, p, di)
+    ks = jax.random.split(key, 8)
+    return dict(
+        in_proj=dense_init(ks[0], d, 2 * di + 2 * n + h),
+        conv_w=(jax.random.normal(ks[1], (CONV_W, di)) * 0.2).astype(DTYPE),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        dt_bias=jnp.zeros((h,), jnp.float32),
+        d_skip=jnp.ones((h,), jnp.float32),
+        gate_norm=norm_init(di),
+        out_proj=dense_init(ks[2], di, d),
+        norm=norm_init(d, with_bias=cfg.norm_bias),
+    )
+
+
+def _split_proj(p, xn, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    z, xc, bc, cc, dt = jnp.split(xn @ p["in_proj"],
+                                  [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                                  axis=-1)
+    return z, xc, bc, cc, dt
+
+
+def _conv(xc, conv_w, state=None):
+    """Causal depthwise conv.  xc: (B,S,di).  With ``state`` (B,CONV_W-1,di)
+    performs the single-step decode update; returns (out, new_state)."""
+    if state is None:
+        pad = jnp.pad(xc, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+        out = sum(pad[:, i: i + xc.shape[1]] * conv_w[i]
+                  for i in range(CONV_W))
+        return out, pad[:, -(CONV_W - 1):] if CONV_W > 1 else None
+    win = jnp.concatenate([state, xc], axis=1)            # (B,CONV_W,di)
+    out = jnp.einsum("bwd,wd->bd", win.astype(jnp.float32),
+                     conv_w.astype(jnp.float32))[:, None].astype(xc.dtype)
+    return out, win[:, 1:]
+
+
+def ssd_forward(p, x, cfg, state: Tuple | None = None):
+    """Full-sequence SSD.  x: (B,S,d).  Returns (y, (ssm_state, conv_state))
+    where ssm_state: (B,H,P,N) f32 — the decode-ready carry."""
+    b, s, d = x.shape
+    h, pp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = h * pp
+    xn = apply_norm(p["norm"], x)
+    z, xc, bc, cc, dt = _split_proj(p, xn, cfg)
+    xc, conv_state = _conv(xc, p["conv_w"])
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    la = -dt * jnp.exp(p["a_log"])                                # log decay
+    xh = xc.reshape(b, s, h, pp)
+    bcf = bc.astype(jnp.float32)
+    ccf = cc.astype(jnp.float32)
+
+    # pad to a chunk multiple
+    c = min(CHUNK, s)
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        z2 = lambda a: jnp.pad(a, [(0, 0), (0, s_pad - s)] +               # noqa: E731
+                               [(0, 0)] * (a.ndim - 2))
+        xh, bcf, ccf, dt, la = map(z2, (xh, bcf, ccf, dt, la))
+    nc = s_pad // c
+    xh = xh.reshape(b, nc, c, h, pp)
+    bcf = bcf.reshape(b, nc, c, n)
+    ccf = ccf.reshape(b, nc, c, n)
+    dt = dt.reshape(b, nc, c, h)
+    la = la.reshape(b, nc, c, h)
+
+    fcs = jnp.cumsum(la, axis=2)                       # (B,nc,C,H) F_t
+    if state is None:
+        s0 = jnp.zeros((b, h, pp, n), jnp.float32)
+    else:
+        s0 = state[0]
+
+    def chunk_body(carry, inp):
+        s_prev = carry
+        xh_c, b_c, c_c, dt_c, la_c, f_c = inp          # (B,C,...) per chunk
+        # intra-chunk: w[t,s] = exp(F_t - F_s) * dt_s, s <= t.
+        # Mask the exponent (not the value): exp would overflow above the
+        # diagonal and poison the gradient through the where.
+        diff = f_c[:, :, None, :] - f_c[:, None, :, :]          # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30)) \
+            * dt_c[:, None, :, :]
+        scores = jnp.einsum("btn,bsn->bts", c_c, b_c)           # (B,t,s)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", scores, w, xh_c)
+        # inter-chunk: carry state decayed to position t
+        et = jnp.exp(f_c)                                       # (B,C,H)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", c_c, s_prev, et)
+        y = y_intra + y_inter
+        # state update to chunk end
+        dec_end = jnp.exp(f_c[:, -1])                           # (B,H)
+        w_end = jnp.exp(f_c[:, -1][:, None] - f_c) * dt_c       # (B,C,H)
+        s_new = (dec_end[:, :, None, None] * s_prev
+                 + jnp.einsum("bch,bchp,bcn->bhpn", w_end, xh_c, b_c))
+        return s_new, y
+
+    inp = (xh, bcf, ccf, dt, la, fcs)
+    inp = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), inp)    # scan over nc
+    s_fin, ys = jax.lax.scan(chunk_body, s0, inp)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, h, pp)[:, :s]
+    y = y + xh.reshape(b, s_pad, h, pp)[:, :s] * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = apply_norm(p["gate_norm"], y.astype(x.dtype)) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + y @ p["out_proj"], (s_fin, conv_state)
+
+
+def ssd_decode(p, x, state, cfg):
+    """One-token SSD step.  x: (B,1,d); state: (ssm (B,H,P,N) f32,
+    conv (B,CONV_W-1,di))."""
+    b = x.shape[0]
+    h, pp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = h * pp
+    ssm_state, conv_state = state
+    xn = apply_norm(p["norm"], x)
+    z, xc, bc, cc, dt = _split_proj(p, xn, cfg)
+    xc, conv_state = _conv(xc, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))[:, 0]              # (B,di)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (B,H)
+    la = -dt * jnp.exp(p["a_log"])
+    alpha = jnp.exp(la)                                          # (B,H)
+    xh = xc.reshape(b, h, pp)
+    bf = bc.astype(jnp.float32)[:, 0]                            # (B,N)
+    cf = cc.astype(jnp.float32)[:, 0]
+    ssm_state = (alpha[:, :, None, None] * ssm_state
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bf))
+    y = jnp.einsum("bn,bhpn->bhp", cf, ssm_state) \
+        + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di)
+    y = apply_norm(p["gate_norm"], y.astype(x.dtype)) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + y @ p["out_proj"], (ssm_state, conv_state)

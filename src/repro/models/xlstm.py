@@ -1,0 +1,238 @@
+"""xLSTM blocks (mLSTM + sLSTM) for xlstm-1.3b.
+
+mLSTM: matrix-memory cell with exponential gating.  Training runs the
+*chunkwise* form derived directly from the stabilised recurrence
+(equivalence is property-tested): within a chunk the decay structure is a
+lower-triangular matrix (quadratic, MXU-friendly); across chunks a
+(C, n, m) state is carried by lax.scan.  Decode is the O(1) recurrence.
+
+sLSTM: scalar-memory cell with hidden-to-hidden recurrence — inherently
+sequential, so training scans over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, apply_norm, dense_init, norm_init
+
+MCHUNK = 256
+
+
+# -------------------------------------------------------------------- mLSTM
+def mlstm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    di = cfg.xlstm_proj * d
+    h = cfg.n_heads
+    pp = di // h
+    ks = jax.random.split(key, 8)
+
+    def blockdiag(k):
+        # per-head (block-diagonal) projection, as in the xLSTM paper
+        return (jax.random.normal(k, (h, pp, pp)) * (pp ** -0.5)
+                ).astype(DTYPE)
+
+    return dict(
+        up=dense_init(ks[0], d, 2 * di),          # x-branch and o-gate branch
+        wq=blockdiag(ks[1]),
+        wk=blockdiag(ks[2]),
+        wv=blockdiag(ks[3]),
+        wif=dense_init(ks[4], di, 2 * h, dtype=jnp.float32, scale=0.02),
+        gate_norm=norm_init(di),
+        down=dense_init(ks[5], di, d),
+        norm=norm_init(d, with_bias=cfg.norm_bias),
+    )
+
+
+def _mlstm_qkvif(p, x, cfg):
+    b, s, d = x.shape
+    di = cfg.xlstm_proj * d
+    h = cfg.n_heads
+    pp = di // h
+    xn = apply_norm(p["norm"], x)
+    up = xn @ p["up"]
+    xb, og = up[..., :di], up[..., di:]
+    xh = xb.reshape(b, s, h, pp)
+    q = jnp.einsum("bshp,hpq->bshq", xh, p["wq"])
+    k = jnp.einsum("bshp,hpq->bshq", xh, p["wk"]) * (pp ** -0.5)
+    v = jnp.einsum("bshp,hpq->bshq", xh, p["wv"])
+    gif = xb.astype(jnp.float32) @ p["wif"]
+    li = gif[..., :h]                                   # log input gate
+    lf = jax.nn.log_sigmoid(gif[..., h:])               # log forget gate
+    return xn, q, k, v, li, lf, og
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    """Chunkwise mLSTM.  Returns (y, state) with state =
+    (C (B,H,P,P), n (B,H,P), m (B,H)) — all f32."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = cfg.xlstm_proj * d
+    pp = di // h
+    xn, q, k, v, li, lf, og = _mlstm_qkvif(p, x, cfg)
+
+    c = min(MCHUNK, s)
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, s_pad - s)] +             # noqa: E731
+                                 [(0, 0)] * (a.ndim - 2))
+        q, k, v, li, lf = map(padf, (q, k, v, li, lf))
+        # padded forget gates must not decay the carried state: lf=0
+        li = li.at[:, s:].set(-1e30)
+    nc = s_pad // c
+    rs = lambda a: jnp.moveaxis(                                            # noqa: E731
+        a.reshape((b, nc, c) + a.shape[2:]), 1, 0)
+    qc, kc, vc, lic, lfc = map(rs, (q, k, v, li, lf))
+
+    if state is None:
+        c0 = jnp.zeros((b, h, pp, pp), jnp.float32)
+        n0 = jnp.zeros((b, h, pp), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def body(carry, inp):
+        c_st, n_st, m_st = carry
+        q_c, k_c, v_c, li_c, lf_c = inp                 # (B,C,H,...)
+        qf = q_c.astype(jnp.float32)
+        kf = k_c.astype(jnp.float32)
+        vf = v_c.astype(jnp.float32)
+        f_cs = jnp.cumsum(lf_c, axis=1)                 # (B,C,H) F_t
+        # m_t = F_t + max(m0, cummax_{s<=t}(li_s - F_s))
+        g = jnp.maximum(m_st[:, None, :],
+                        jax.lax.cummax(li_c - f_cs, axis=1))
+        m_t = f_cs + g                                  # (B,C,H)
+        # intra decay w[t,s] = exp(F_t - F_s + li_s - m_t), s<=t
+        dd = (f_cs[:, :, None] - f_cs[:, None, :]
+              + li_c[:, None, :, :] - m_t[:, :, None, :])   # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+        # mask the exponent, not the value (grad-safe, see ssm.py)
+        w = jnp.exp(jnp.where(tri, dd, -1e30))
+        scores = jnp.einsum("bthp,bshp->btsh", qf, kf)
+        num = jnp.einsum("btsh,btsh,bshp->bthp", scores, w, vf)
+        den = jnp.einsum("btsh,btsh->bth", scores, w)
+        # inter: carried state decayed to t.  c_st is (B,H,Pv,Pk); q lives
+        # in key space, so contract q with the k-dim (last axis).
+        e_t = jnp.exp(f_cs + m_st[:, None, :] - m_t)    # (B,C,H)
+        num = num + jnp.einsum("bthk,bhpk,bth->bthp", qf, c_st, e_t)
+        den = den + jnp.einsum("bthp,bhp,bth->bth", qf, n_st, e_t)
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state to chunk end
+        m_end = m_t[:, -1]                              # (B,H)
+        dec = jnp.exp(f_cs[:, -1] + m_st - m_end)       # (B,H)
+        wk_end = jnp.exp(f_cs[:, -1][:, None] - f_cs + li_c
+                         - m_end[:, None])              # (B,C,H)
+        c_new = (dec[:, :, None, None] * c_st
+                 + jnp.einsum("bsh,bshp,bsho->bhpo", wk_end, vf, kf))
+        n_new = dec[:, :, None] * n_st \
+            + jnp.einsum("bsh,bshp->bhp", wk_end, kf)
+        return (c_new, n_new, m_end), y
+
+    (c_f, n_f, m_f), ys = jax.lax.scan(body, (c0, n0, m0),
+                                       (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, di)[:, :s]
+    y = apply_norm(p["gate_norm"], y.astype(x.dtype)) \
+        * jax.nn.sigmoid(og.astype(jnp.float32)).astype(x.dtype)
+    return x + y @ p["down"], (c_f, n_f, m_f)
+
+
+def mlstm_decode(p, x, state, cfg):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    di = cfg.xlstm_proj * d
+    pp = di // h
+    c_st, n_st, m_st = state
+    xn, q, k, v, li, lf, og = _mlstm_qkvif(p, x, cfg)
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    li0, lf0 = li[:, 0], lf[:, 0]                      # (B,H)
+    m_new = jnp.maximum(lf0 + m_st, li0)
+    a = jnp.exp(lf0 + m_st - m_new)
+    bgt = jnp.exp(li0 - m_new)
+    c_new = a[:, :, None, None] * c_st \
+        + bgt[:, :, None, None] * jnp.einsum("bhp,bho->bhpo", vf, kf)
+    n_new = a[:, :, None] * n_st + bgt[:, :, None] * kf
+    num = jnp.einsum("bhpo,bho->bhp", c_new, qf)  # contract k-dim with q
+    den = jnp.einsum("bhp,bhp->bh", n_new, qf)
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).reshape(b, 1, di)
+    y = apply_norm(p["gate_norm"], y.astype(x.dtype)) \
+        * jax.nn.sigmoid(og.astype(jnp.float32)).astype(x.dtype)
+    return x + y @ p["down"], (c_new, n_new, m_new)
+
+
+# -------------------------------------------------------------------- sLSTM
+def slstm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    pp = d // h
+    ff = int(d * 4 / 3)
+    ks = jax.random.split(key, 8)
+    return dict(
+        wx=dense_init(ks[0], d, 4 * d),                # i,f,z,o from x
+        rh=(jax.random.normal(ks[1], (h, pp, 4 * pp)) * (pp ** -0.5)
+            ).astype(jnp.float32),
+        norm=norm_init(d, with_bias=cfg.norm_bias),
+        gate_norm=norm_init(d),
+        ff_in=dense_init(ks[2], d, ff),
+        ff_gate=dense_init(ks[3], d, ff),
+        ff_out=dense_init(ks[4], ff, d),
+        ff_norm=norm_init(d, with_bias=cfg.norm_bias),
+    )
+
+
+def _slstm_cell(p, xg, carry, cfg):
+    """One sLSTM time step.  xg: (B, 4d) gate preactivations from x;
+    carry: (h, c, n, m) each (B, H, P)-shaped (m is (B,H))."""
+    b = xg.shape[0]
+    d = cfg.d_model
+    h = cfg.n_heads
+    pp = d // h
+    h_prev, c_prev, n_prev, m_prev = carry
+    rec = jnp.einsum("bhp,hpq->bhq", h_prev, p["rh"])   # (B,H,4P)
+    g = xg.reshape(b, h, 4 * pp).astype(jnp.float32) + rec
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)           # (B,H,P)
+    # scalar-per-head exponential gating (use mean preact per head)
+    li = jnp.mean(gi, axis=-1)                          # (B,H)
+    lf = jax.nn.log_sigmoid(jnp.mean(gf, axis=-1))
+    m_new = jnp.maximum(lf + m_prev, li)
+    fg = jnp.exp(lf + m_prev - m_new)[..., None]
+    ig = jnp.exp(li - m_new)[..., None]
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = fg * c_prev + ig * z
+    n_new = fg * n_prev + ig
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p, x, cfg, state=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    pp = d // h
+    xn = apply_norm(p["norm"], x)
+    xg = xn @ p["wx"]                                   # (B,S,4d)
+    if state is None:
+        zeros = jnp.zeros((b, h, pp), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, h), -1e30, jnp.float32))
+
+    def step(carry, xg_t):
+        new = _slstm_cell(p, xg_t, carry, cfg)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y)
+    x = x + y
+    # gated FFN (proj factor 4/3)
+    xf = apply_norm(p["ff_norm"], x)
+    mid = jax.nn.silu((xf @ p["ff_gate"]).astype(jnp.float32)).astype(x.dtype) \
+        * (xf @ p["ff_in"])
+    return x + mid @ p["ff_out"], state
+
+
+def slstm_decode(p, x, state, cfg):
+    y, state = slstm_forward(p, x, cfg, state=state)
+    return y, state

@@ -1,0 +1,6 @@
+from .fault import FaultTolerantLoop, SimulatedFailure
+from .straggler import rebalance_chunks
+from .elastic import reshard_checkpoint
+
+__all__ = ["FaultTolerantLoop", "SimulatedFailure", "rebalance_chunks",
+           "reshard_checkpoint"]

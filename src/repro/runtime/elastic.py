@@ -1,0 +1,37 @@
+"""Elastic restart: resume a checkpoint on a different mesh shape.
+
+The checkpoint stores plain host arrays; re-placement happens through the
+target mesh's sharding rules.  This makes "pod died, continue on half the
+mesh" (or "doubled the job, continue on 2x") a pure-restore operation —
+no resharding communication step, because leaves stream from storage
+directly into their new layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..checkpoint.ckpt import restore_checkpoint
+
+PyTree = Any
+
+
+def reshard_checkpoint(directory: str, template: PyTree, mesh: Mesh,
+                       rule: Callable[[str, tuple], P],
+                       step: Optional[int] = None) -> PyTree:
+    """Restore ``directory`` onto ``mesh`` using sharding ``rule``.
+
+    rule(path_str, shape) -> PartitionSpec; axes whose sizes don't divide
+    are expected to be handled by the rule (it should return a spec that
+    divides — see launch/shardings.py).
+    """
+
+    def sharding_fn(path, shape):
+        spec = rule(path, tuple(shape))
+        return NamedSharding(mesh, spec)
+
+    return restore_checkpoint(directory, template, step=step,
+                              sharding_fn=sharding_fn)

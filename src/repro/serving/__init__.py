@@ -1,0 +1,5 @@
+from .decode import make_prefill, make_serve_step, sample_logits
+from .scheduler import Request, ServeScheduler
+
+__all__ = ["make_prefill", "make_serve_step", "sample_logits", "Request",
+           "ServeScheduler"]

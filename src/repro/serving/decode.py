@@ -1,0 +1,73 @@
+"""Serving steps: prefill + single-token decode with sampling.
+
+``serve_step`` is what the decode_32k / long_500k dry-run shapes lower:
+one new token against a KV cache of seq_len, optimizer-free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def sample_logits(logits, key, temperature: float = 0.0, vocab: int = 0):
+    """Greedy (T=0) or temperature sampling.  logits: (B, V_pad)."""
+    if vocab:
+        vids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(vids < vocab, logits, -jnp.inf)
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+def make_prefill(cfg, fam) -> Callable:
+    """prefill(params, batch) -> (logits_last, cache)."""
+
+    def prefill(params, batch):
+        return fam["prefill"](params, batch, cfg)
+
+    return prefill
+
+
+def make_serve_step(cfg, fam, temperature: float = 0.0) -> Callable:
+    """serve_step(params, cache, tokens, pos, key)
+       -> (next_tokens, logits, cache).
+
+    tokens: (B, 1) current token; pos: scalar absolute position.
+    """
+
+    def serve_step(params, cache, tokens, pos, key):
+        logits, cache = fam["decode"](params, cache, tokens, pos, cfg)
+        nxt = sample_logits(logits, key, temperature, cfg.vocab)
+        return nxt[:, None], logits, cache
+
+    return serve_step
+
+
+def generate(cfg, fam, params, batch, steps: int, temperature: float = 0.0,
+             key=None):
+    """Host loop: prefill then `steps` decode steps (example/test path)."""
+    from .kvcache import pad_cache
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prefill = jax.jit(make_prefill(cfg, fam))
+    step = jax.jit(make_serve_step(cfg, fam, temperature))
+    logits, cache = prefill(params, batch)
+    cache = pad_cache(cfg, cache, steps)           # decode headroom
+    tok = sample_logits(logits[:, -1], key, temperature, cfg.vocab)[:, None]
+    if "tokens" in batch:
+        pos0 = batch["tokens"].shape[1]
+    else:
+        pos0 = batch["embeds"].shape[1]
+    out = [tok]
+    for i in range(steps - 1):
+        key, sub = jax.random.split(key)
+        tok, _, cache = step(params, cache, tok, jnp.int32(pos0 + i), sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

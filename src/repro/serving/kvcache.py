@@ -1,0 +1,64 @@
+"""KV-cache helpers.
+
+Cache *structure* is family-specific and owned by the model modules
+(``fam['init_cache']``); this module adds the serving-level concerns:
+capacity planning (bytes/device under a mesh) and ring-buffer metadata
+for sliding-window archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    arch: str
+    batch: int
+    cache_len: int
+    bytes_total: int
+    bytes_per_device: int
+    ring: bool
+
+
+def pad_cache(cfg, cache, extra: int):
+    """Grow a prefill-built cache's time axis by ``extra`` decode slots.
+
+    Attention-family caches carry time on axis 2 of their (L, B, T, ...)
+    leaves; recurrent families (xlstm/ssm states) are O(1) and returned
+    unchanged.  Ring (sliding-window) caches never grow."""
+    import jax.numpy as jnp
+
+    def grow(leaf, time_axis=2):
+        if leaf.ndim <= time_axis:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[time_axis] = (0, extra)
+        return jnp.pad(leaf, pad)
+
+    if not isinstance(cache, dict):
+        return cache                               # recurrent families
+    if cfg.swa_window:                             # ring buffers stay put
+        return cache
+    out = dict(cache)
+    for key in ("k", "v", "dc", "dkr", "mc", "mkr"):
+        if key in out:
+            out[key] = grow(out[key])
+    if "shared" in out and isinstance(out["shared"], dict):
+        out["shared"] = {k: grow(v) for k, v in out["shared"].items()}
+    return out
+
+
+def plan_cache(cfg, fam, batch: int, cache_len: int,
+               n_devices: int = 1) -> CachePlan:
+    """Size the decode cache without allocating it (eval_shape)."""
+    shapes = jax.eval_shape(lambda: fam["init_cache"](cfg, batch, cache_len))
+    total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(shapes))
+    return CachePlan(arch=cfg.arch, batch=batch, cache_len=cache_len,
+                     bytes_total=total,
+                     bytes_per_device=total // max(n_devices, 1),
+                     ring=cfg.swa_window > 0)

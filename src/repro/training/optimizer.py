@@ -1,0 +1,117 @@
+"""Optimizers (pytree-native, no external deps).
+
+adamw      — default for the <=15B dense archs.
+adafactor  — factored second moment, no first moment: the optimizer state
+             for deepseek-v3-671b must stay sub-linear in params to fit a
+             256-chip pod (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, jnp.ndarray], tuple]
+    name: str = "opt"
+
+
+# ------------------------------------------------------------------- adamw
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          warmup: int = 100) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return dict(mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+    def schedule(step):
+        w = jnp.minimum(step.astype(jnp.float32) / warmup, 1.0)
+        return lr * w
+
+    def update(grads, state, params, step):
+        lr_t = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:                       # decay matrices only
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), \
+                m2, v2
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, dict(mu=new_mu, nu=new_nu)
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# --------------------------------------------------------------- adafactor
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, warmup: int = 100) -> Optimizer:
+    """Factored RMS optimizer (Shazeer & Stern): O(rows+cols) state for
+    matrices, O(n) for vectors; no momentum."""
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return dict(
+                    vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                    vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return dict(v=jnp.zeros(p.shape, jnp.float32))
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr * jnp.minimum(t / warmup, 1.0)
+
+        def one(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = gf * rfac[..., None] * cfac[..., None, :]
+                ns = dict(vr=vr, vc=vc)
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v)
+                ns = dict(v=v)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), ns
+
+        # grads is a structural prefix of state (state has a dict per leaf)
+        out = jax.tree.map(one, grads, state, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update, name="adafactor")

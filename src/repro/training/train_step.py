@@ -1,0 +1,118 @@
+"""Training step factory.
+
+Builds a jitted train step for any registered architecture, with:
+  * microbatched gradient accumulation (lax.scan over the micro axis),
+  * global-norm gradient clipping,
+  * optimizer update (adamw / adafactor),
+  * optional *explicit* proxy gradient sync (the paper's hierarchical
+    schedule) when the step is built in manual (shard_map) mode — the
+    default GSPMD mode lets the partitioner place the reductions and is
+    what the dry-run lowers.
+
+The GSPMD path is a plain jax.jit over (state, batch) with shardings
+attached by launch/shardings.py; batch is sharded over ('pod','data') so
+gradients are averaged over the batch axes by the partitioner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import lm_loss
+from .optimizer import Optimizer
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: PyTree
+    step: jnp.ndarray
+
+    @staticmethod
+    def create(params, optimizer: Optimizer) -> "TrainState":
+        return TrainState(params=params, opt_state=optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+def make_loss_fn(cfg, fam, mtp_weight: float = 0.1):
+    def loss_fn(params, batch):
+        logits, aux = fam["forward"](params, batch, cfg)
+        labels = batch["labels"]
+        if isinstance(logits, tuple):              # deepseek-v3 MTP head
+            main, mtp = logits
+            # MTP predicts token t+2: shift labels one extra step.
+            mtp_labels = jnp.roll(labels, -1, axis=1)
+            return (lm_loss(main, labels, cfg, aux)
+                    + mtp_weight * lm_loss(mtp, mtp_labels, cfg))
+        return lm_loss(logits, labels, cfg, aux)
+
+    return loss_fn
+
+
+def make_train_step(cfg, fam, optimizer: Optimizer,
+                    microbatches: int = 1,
+                    clip_norm: float = 1.0,
+                    mtp_weight: float = 0.1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves are (B, ...) arrays; with microbatches > 1 the leading
+    axis is split (B = microbatches * micro_bs) and gradients accumulate
+    across a lax.scan — compute of microbatch i+1 overlaps the reduction
+    tail of i under GSPMD's async collectives.
+    """
+    loss_fn = make_loss_fn(cfg, fam, mtp_weight)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32),
+                    grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, zero), micro)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               params, state.step)
+        metrics = dict(loss=loss, grad_norm=gnorm,
+                       step=state.step.astype(jnp.float32))
+        return TrainState(params=new_params, opt_state=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step

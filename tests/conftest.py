@@ -1,0 +1,27 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (tests/_subproc.py).
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import rmat_edges
+    return rmat_edges(9, edge_factor=8, seed=1)      # 512 vertices
+
+
+@pytest.fixture(scope="session")
+def grid8():
+    from repro.core.tilegrid import square_grid
+    return square_grid(64)                           # 8x8 tiles
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

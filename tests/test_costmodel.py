@@ -1,0 +1,91 @@
+"""Cost/energy model sanity (paper §IV-B constants and Fig. 9 structure)."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (DALOREX, DCRA_HBM_HORIZ, DCRA_HBM_VERT,
+                                  DCRA_SRAM, NETWORK_OPTIONS, dcra_die_area_mm2,
+                                  die_cost, dies_per_wafer, murphy_yield,
+                                  price, system_cost_usd, tile_area_mm2)
+from repro.core.netstats import TrafficCounters
+from repro.core.tilegrid import TileGrid, square_grid
+
+
+def test_murphy_yield_monotone():
+    areas = [10, 50, 100, 400, 800]
+    ys = [murphy_yield(a) for a in areas]
+    assert all(0 < y <= 1 for y in ys)
+    assert all(a >= b for a, b in zip(ys, ys[1:]))
+
+
+def test_paper_die_size_yield_claim():
+    """Paper §V-A: a 32x32-tile die (~27x25mm) yields far fewer good dies
+    per wafer than 16x16 dies (paper: "62% less")."""
+    a16 = dcra_die_area_mm2(DCRA_SRAM, TileGrid(16, 16))
+    a32 = 4 * a16
+    good16 = dies_per_wafer(a16) * murphy_yield(a16)
+    good32 = dies_per_wafer(a32) * murphy_yield(a32)
+    # raw good dies per wafer collapse (>=60% fewer, the paper's claim)
+    assert good32 / good16 < 0.4
+    # per-tile silicon efficiency also degrades, but less than 2x
+    assert 0.4 < (good32 * 4) / good16 < 0.9
+
+
+def test_die_cost_increases_with_area():
+    assert die_cost(400.0) > 4 * die_cost(100.0)   # superlinear via yield
+
+
+def test_sram_dominates_tile_area():
+    a = tile_area_mm2(1.5)
+    logic = (1.5 / 3.5) / 7.0
+    assert a > 7 * logic                # §V-A: SRAM ~7x logic
+
+
+def test_hbm_package_costs_more():
+    g = square_grid(1024)               # 2x2 dies
+    assert system_cost_usd(DCRA_HBM_HORIZ, g) > system_cost_usd(DCRA_SRAM, g)
+    assert system_cost_usd(DCRA_HBM_VERT, g) > \
+        system_cost_usd(DCRA_HBM_HORIZ, g)
+
+
+def test_network_option_c_area_overhead():
+    """Fig. 6 text: option (c) grows die area ~4.5% over option (a)."""
+    g = TileGrid(16, 16)
+    a = dcra_die_area_mm2(NETWORK_OPTIONS["a_2x32_od32"], g)
+    c = dcra_die_area_mm2(NETWORK_OPTIONS["c_32+64_od2x32"], g)
+    assert 1.005 < c / a < 1.06
+
+
+def _counters(msgs=1e6, hops=4e6):
+    c = TrafficCounters()
+    c.messages = msgs
+    c.hop_msgs = hops
+    c.intra_die_hops = hops * 0.8
+    c.inter_die_crossings = hops * 0.15
+    c.inter_pkg_crossings = hops * 0.05
+    c.edges_processed = msgs
+    c.records_consumed = msgs / 2
+    return c
+
+
+def test_price_components_positive():
+    g = square_grid(4096)
+    rep = price(DCRA_SRAM, g, _counters(), mem_bits_sram=1e9)
+    assert rep.energy_j > 0 and rep.cost_usd > 0 and rep.time_s > 0
+    assert rep.breakdown["wire_j"] > 0
+    assert rep.power_w == pytest.approx(rep.energy_j / rep.time_s)
+
+
+def test_vertical_hbm_saves_wire_energy():
+    g = square_grid(1024)
+    c = _counters()
+    horiz = price(DCRA_HBM_HORIZ, g, c, mem_bits_hbm=1e10)
+    vert = price(DCRA_HBM_VERT, g, c, mem_bits_hbm=1e10)
+    assert vert.energy_j < horiz.energy_j      # paper §V-C conclusion
+
+
+def test_dalorex_narrower_links_slower():
+    g = square_grid(4096)
+    c = _counters()
+    t_dal = price(DALOREX, g, c).time_s
+    t_dcra = price(DCRA_SRAM, g, c).time_s
+    assert t_dal >= t_dcra

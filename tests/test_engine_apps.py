@@ -1,0 +1,114 @@
+"""The six paper applications vs pure-numpy oracles, with and without
+proxy regions and both coherence policies — plus engine invariants."""
+import numpy as np
+import pytest
+
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps, oracles, rmat_edges, wikipedia_like
+from repro.graph.rmat import histogram_input
+
+GRID = square_grid(64)
+WT = ProxyConfig(4, 4, slots=256)
+WB = ProxyConfig(4, 4, slots=256, write_back=True)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_edges(9, edge_factor=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def root(g):
+    return int(np.argmax(g.out_degree()))
+
+
+@pytest.mark.parametrize("proxy", [None, WT], ids=["direct", "proxy-wt"])
+def test_bfs(g, root, proxy):
+    r = apps.bfs(g, root, GRID, proxy=proxy, oq_cap=32)
+    assert np.array_equal(r.values, oracles.bfs_oracle(g, root))
+    assert r.run.counters.messages > 0
+    assert r.gteps > 0
+
+
+@pytest.mark.parametrize("proxy", [None, WT], ids=["direct", "proxy-wt"])
+def test_sssp(g, root, proxy):
+    r = apps.sssp(g, root, GRID, proxy=proxy, oq_cap=32)
+    assert np.allclose(r.values, oracles.sssp_oracle(g, root))
+
+
+@pytest.mark.parametrize("proxy", [None, WT], ids=["direct", "proxy-wt"])
+def test_wcc(g, proxy):
+    r = apps.wcc(g, GRID, proxy=proxy, oq_cap=32)
+    assert np.array_equal(r.values, oracles.wcc_oracle(g))
+
+
+@pytest.mark.parametrize("proxy", [None, WB], ids=["direct", "proxy-wb"])
+def test_pagerank(g, proxy):
+    r = apps.pagerank(g, GRID, proxy=proxy, epochs=3, oq_cap=32)
+    o = oracles.pagerank_oracle(g, epochs=3)
+    assert np.allclose(r.values, o, rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("proxy", [None, WB], ids=["direct", "proxy-wb"])
+def test_spmv(g, proxy, rng):
+    x = rng.random(g.n_cols).astype(np.float32)
+    r = apps.spmv(g, x, GRID, proxy=proxy, oq_cap=32)
+    assert np.allclose(r.values, oracles.spmv_oracle(g, x),
+                       rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("proxy", [None, WB], ids=["direct", "proxy-wb"])
+def test_histogram(g, proxy):
+    bins = g.n_rows // 8
+    hv = histogram_input(g, bins)
+    r = apps.histogram(hv, bins, GRID, proxy=proxy, oq_cap=32)
+    assert np.array_equal(r.values, oracles.histogram_oracle(hv, bins))
+
+
+def test_wikipedia_like_bfs():
+    g = wikipedia_like(n=512, avg_deg=12)
+    root = int(np.argmax(g.out_degree()))
+    r = apps.bfs(g, root, GRID, oq_cap=32)
+    assert np.array_equal(r.values, oracles.bfs_oracle(g, root))
+
+
+# ------------------------------------------------------------- invariants
+def test_backpressure_changes_schedule_not_result(g, root):
+    """Shrinking the OQ budget can only change scheduling (more
+    supersteps), never the fixed point."""
+    o = oracles.bfs_oracle(g, root)
+    r_small = apps.bfs(g, root, GRID, oq_cap=4)
+    r_big = apps.bfs(g, root, GRID, oq_cap=256)
+    assert np.array_equal(r_small.values, o)
+    assert np.array_equal(r_big.values, o)
+    assert r_small.run.supersteps >= r_big.run.supersteps
+
+
+def test_proxy_filters_traffic(g, root):
+    """Write-through proxy absorbs non-improving updates: the owner-side
+    delivered message count drops vs direct routing."""
+    r_d = apps.sssp(g, root, GRID, oq_cap=32)
+    r_p = apps.sssp(g, root, GRID, proxy=WT, oq_cap=32)
+    assert r_p.run.counters.filtered_at_proxy > 0
+    # records consumed at owners shrink (filter + coalesce)
+    assert (r_p.run.counters.records_consumed
+            <= r_d.run.counters.records_consumed)
+
+
+def test_iq_ratio_goldilocks_measurable(g):
+    """Different IQ:OQ ratios give different superstep counts (the knob
+    the paper tunes in Fig. 7 is live)."""
+    x = np.random.default_rng(1).random(g.n_cols).astype(np.float32)
+    steps = {r: apps.spmv(g, x, GRID, oq_cap=16, iq_ratio=r).run.supersteps
+             for r in (1, 8)}
+    assert steps[8] <= steps[1]
+
+
+def test_histogram_conservation(g):
+    """Every input element lands in exactly one bin (no loss under
+    backpressure + proxy + flush)."""
+    bins = g.n_rows // 8
+    hv = histogram_input(g, bins)
+    r = apps.histogram(hv, bins, GRID, proxy=WB, oq_cap=8)
+    assert int(r.values.sum()) == hv.shape[0]

@@ -1,0 +1,79 @@
+"""Property-based engine validation: on ARBITRARY random digraphs and
+grid/proxy geometries, the data-local engine must agree with the
+oracles — proxies and queue budgets may only change the schedule."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.proxy import ProxyConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps, oracles
+from repro.graph.csr import csr_from_edges
+
+
+def random_graph(draw):
+    n = draw(st.integers(8, 48))
+    m = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 16, m).astype(np.float32)
+    return csr_from_edges(src, dst, n, weights=w), seed
+
+
+graphs = st.composite(random_graph)
+
+
+@given(graphs(), st.sampled_from([16, 64]),
+       st.sampled_from([None, (2, 2), (4, 4)]),
+       st.sampled_from([4, 32]))
+@settings(max_examples=12, deadline=None)
+def test_bfs_any_graph_any_grid(gs, tiles, region, oq):
+    g, seed = gs
+    grid = square_grid(tiles)
+    if region and (grid.ny % region[0] or grid.nx % region[1]):
+        return
+    px = ProxyConfig(*region, slots=64) if region else None
+    root = seed % g.n_rows
+    r = apps.bfs(g, root, grid, proxy=px, oq_cap=oq)
+    assert np.array_equal(r.values, oracles.bfs_oracle(g, root))
+
+
+@given(graphs(), st.sampled_from([None, (2, 2)]), st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_sssp_any_graph(gs, region, small_q):
+    g, seed = gs
+    grid = square_grid(16)
+    px = ProxyConfig(*region, slots=64) if region else None
+    root = seed % g.n_rows
+    r = apps.sssp(g, root, grid, proxy=px, oq_cap=4 if small_q else 64)
+    assert np.allclose(r.values, oracles.sssp_oracle(g, root))
+
+
+@given(graphs(), st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_histogram_conservation_property(gs, write_back):
+    g, seed = gs
+    grid = square_grid(16)
+    bins = max(2, g.n_rows // 4)
+    vals = (np.asarray(g.col_idx) % bins).astype(np.int32)
+    px = ProxyConfig(2, 2, slots=32, write_back=True) if write_back else None
+    r = apps.histogram(vals, bins, grid, proxy=px, oq_cap=8)
+    assert int(r.values.sum()) == vals.shape[0]
+    assert np.array_equal(r.values, oracles.histogram_oracle(vals, bins))
+
+
+@given(graphs())
+@settings(max_examples=6, deadline=None)
+def test_spmv_linearity(gs):
+    """Engine SPMV is linear: A(ax + by) == a Ax + b Ay."""
+    g, seed = gs
+    grid = square_grid(16)
+    rng = np.random.default_rng(seed)
+    x = rng.random(g.n_cols).astype(np.float32)
+    y = rng.random(g.n_cols).astype(np.float32)
+    rx = apps.spmv(g, x, grid, oq_cap=32).values
+    ry = apps.spmv(g, y, grid, oq_cap=32).values
+    rxy = apps.spmv(g, 2.0 * x + 3.0 * y, grid, oq_cap=32).values
+    assert np.allclose(rxy, 2.0 * rx + 3.0 * ry, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,76 @@
+"""Trip-count-aware HLO analyzer vs closed forms on synthetic scans
+(the roofline's data source must itself be verified)."""
+import numpy as np
+import pytest
+
+from _subproc import run_devices
+
+
+def test_scan_flops_scale_with_trip_count():
+    out = run_devices("""
+import jax, jax.numpy as jnp
+from repro.launch.hloanalysis import analyze_hlo
+
+def make(n):
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    return jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((n, 128, 128), jnp.float32)).compile()
+
+for n in (2, 8):
+    a = analyze_hlo(make(n).as_text())
+    expect = n * 2 * 128**3          # n matmuls
+    ratio = a["flops"] / expect
+    assert 0.95 < ratio < 1.15, (n, ratio)   # + tanh elementwise
+    # stacked w streams through HBM once, not per trip
+    assert a["hbm_bytes"] < 3 * (n * 128 * 128 * 4 + 10 * 128 * 128 * 4), \\
+        (n, a["hbm_bytes"])
+print("OK")
+""", n=4)
+    assert "OK" in out
+
+
+def test_collectives_inside_scan_multiply():
+    out = run_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hloanalysis import analyze_hlo
+
+mesh = jax.make_mesh((4,), ("model",))
+def g(x, w):
+    def body(c, wi):
+        return jnp.tanh(c @ wi), None
+    y, _ = jax.lax.scan(body, x, w)
+    return y
+c = jax.jit(g, in_shardings=(
+    NamedSharding(mesh, P(None, "model")),
+    NamedSharding(mesh, P(None, "model", None)))).lower(
+    jax.ShapeDtypeStruct((128, 128), jnp.float32),
+    jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)).compile()
+a = analyze_hlo(c.as_text())
+counts = a["collective_counts"]
+total = sum(counts.values())
+assert total >= 8, counts            # one AR per scan step, x8 trips
+print("OK", counts)
+""", n=4)
+    assert "OK" in out
+
+
+def test_parser_handles_tuples_and_dus():
+    from repro.launch.hloanalysis import analyze_hlo
+    hlo = """
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %c = f32[8,64]{1,0} constant({...})
+  %dus = f32[64,64]{1,0} dynamic-update-slice(%p0, %c, %i, %i)
+  ROOT %ar = f32[64,64]{1,0} all-reduce(%dus), to_apply=%add
+}
+"""
+    a = analyze_hlo(hlo)
+    assert a["collective_bytes"]["all-reduce"] == 64 * 64 * 4
+    # DUS charged as slice traffic (small operand), not 2x the buffer
+    assert a["hbm_bytes"] <= 8 * 64 * 4 + 1

@@ -1,0 +1,63 @@
+"""Proxy-region mapping properties (paper Fig. 2 semantics)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.proxy import ProxyConfig, pcache_slot, proxy_tile, region_id
+from repro.core.tilegrid import TileGrid
+
+
+@given(st.integers(0, 4095), st.integers(0, 4095))
+@settings(max_examples=150, deadline=None)
+def test_proxy_in_senders_region(owner, src):
+    g = TileGrid(64, 64)
+    cfg = ProxyConfig(region_ny=16, region_nx=16)
+    p = int(proxy_tile(g, cfg, owner, src))
+    assert region_id(g, cfg, p) == region_id(g, cfg, src)
+
+
+@given(st.integers(0, 4095), st.integers(0, 4095), st.integers(0, 4095))
+@settings(max_examples=100, deadline=None)
+def test_proxy_deterministic_per_region(owner, s1, s2):
+    """Two senders in the same region proxy a given owner to the SAME
+    tile (that's what makes coalescing possible)."""
+    g = TileGrid(64, 64)
+    cfg = ProxyConfig(region_ny=16, region_nx=16)
+    if region_id(g, cfg, s1) == region_id(g, cfg, s2):
+        assert int(proxy_tile(g, cfg, owner, s1)) == \
+            int(proxy_tile(g, cfg, owner, s2))
+
+
+@given(st.integers(0, 4095), st.integers(0, 4095))
+@settings(max_examples=100, deadline=None)
+def test_proxy_distinct_owners_spread(o1, o2):
+    """Owners with different in-region coordinates map to different proxy
+    tiles (P_DIST distributes proxy ownership across the region)."""
+    g = TileGrid(64, 64)
+    cfg = ProxyConfig(region_ny=16, region_nx=16)
+    src = 0
+    oy1, ox1 = divmod(o1, 64)
+    oy2, ox2 = divmod(o2, 64)
+    if (oy1 % 16, ox1 % 16) != (oy2 % 16, ox2 % 16):
+        assert int(proxy_tile(g, cfg, o1, src)) != \
+            int(proxy_tile(g, cfg, o2, src))
+
+
+def test_proxy_reduces_hops_on_average():
+    """The point of the technique: average src->proxy distance is smaller
+    than src->owner distance for uniformly random traffic."""
+    g = TileGrid(64, 64)
+    cfg = ProxyConfig(region_ny=16, region_nx=16)
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 4096, 4000)
+    owner = rng.integers(0, 4096, 4000)
+    p = proxy_tile(g, cfg, owner, src)
+    d_direct = np.asarray(g.hops(src, owner)).mean()
+    d_proxy = np.asarray(g.hops(src, np.asarray(p))).mean()
+    assert d_proxy < d_direct * 0.55          # 16x16 region in 64x64 grid
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=50, deadline=None)
+def test_pcache_slot_in_range(idx):
+    cfg = ProxyConfig(4, 4, slots=256)
+    assert 0 <= int(pcache_slot(cfg, idx)) < 256

@@ -1,0 +1,100 @@
+"""Chunkwise-parallel == recurrent for the sequence-mixing blocks (the
+training path and the decode path must be the same function)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.ssm as ssm
+import repro.models.xlstm as xl
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    d_model: int = 32
+    n_heads: int = 2
+    norm_bias: bool = False
+    xlstm_proj: int = 2
+    ssm_expand: int = 2
+    ssm_heads: int = 2
+    ssm_head_dim: int = 32
+    ssm_state: int = 8
+
+
+CFG = Cfg()
+
+
+def _x(seq, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (2, seq, CFG.d_model)).astype(jnp.bfloat16)
+
+
+@given(st.integers(3, 40))
+@settings(max_examples=8, deadline=None)
+def test_mlstm_chunk_equals_recurrent(seq):
+    old = xl.MCHUNK
+    xl.MCHUNK = 8
+    try:
+        p = xl.mlstm_init(jax.random.PRNGKey(0), CFG)
+        x = _x(seq)
+        y_chunk, st_chunk = xl.mlstm_forward(p, x, CFG)
+        di = CFG.xlstm_proj * CFG.d_model
+        pp = di // CFG.n_heads
+        state = (jnp.zeros((2, CFG.n_heads, pp, pp)),
+                 jnp.zeros((2, CFG.n_heads, pp)),
+                 jnp.full((2, CFG.n_heads), -1e30))
+        ys = []
+        for t in range(seq):
+            yt, state = xl.mlstm_decode(p, x[:, t:t + 1], state, CFG)
+            ys.append(yt)
+        y_rec = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_chunk, np.float32), np.asarray(y_rec, np.float32),
+            rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(np.asarray(st_chunk[0]),
+                                   np.asarray(state[0]), rtol=1e-2,
+                                   atol=1e-2)
+    finally:
+        xl.MCHUNK = old
+
+
+@given(st.integers(3, 40))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunk_equals_recurrent(seq):
+    old = ssm.CHUNK
+    ssm.CHUNK = 8
+    try:
+        p = ssm.ssd_init(jax.random.PRNGKey(2), CFG)
+        x = _x(seq, seed=3)
+        y1, st1 = ssm.ssd_forward(p, x, CFG)
+        state = (jnp.zeros((2, CFG.ssm_heads, CFG.ssm_head_dim,
+                            CFG.ssm_state)),
+                 jnp.zeros((2, ssm.CONV_W - 1,
+                            CFG.ssm_expand * CFG.d_model), x.dtype))
+        ys = []
+        for t in range(seq):
+            yt, state = ssm.ssd_decode(p, x[:, t:t + 1], state, CFG)
+            ys.append(yt)
+        y2 = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+            rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(np.asarray(st1[0]), np.asarray(state[0]),
+                                   rtol=1e-2, atol=1e-2)
+    finally:
+        ssm.CHUNK = old
+
+
+def test_slstm_state_carry():
+    """sLSTM forward from state == concatenated forward."""
+    p = xl.slstm_init(jax.random.PRNGKey(4), CFG)
+    x = _x(16, seed=5)
+    y_full, st_full = xl.slstm_forward(p, x, CFG)
+    y1, st1 = xl.slstm_forward(p, x[:, :8], CFG)
+    y2, st2 = xl.slstm_forward(p, x[:, 8:], CFG, state=st1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1), np.float32),
+        np.asarray(y_full, np.float32), rtol=2e-2, atol=2e-2)

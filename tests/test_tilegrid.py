@@ -1,0 +1,70 @@
+"""Grid geometry: exact invariants + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tilegrid import TileGrid, square_grid
+
+
+def test_basic_counts():
+    g = TileGrid(64, 64)
+    assert g.num_tiles == 4096
+    assert g.dies == (4, 4)
+    assert g.packages == (1, 1)
+    g2 = TileGrid(128, 128)
+    assert g2.num_packages == 4
+
+
+def test_owner_equal_chunks():
+    g = square_grid(16)
+    n = 103
+    owners = np.asarray(g.owner(np.arange(n), n))
+    # equal chunks of ceil(103/16)=7
+    assert owners[0] == 0 and owners[-1] == g.num_tiles - 1 or owners[-1] < g.num_tiles
+    sizes = np.bincount(owners, minlength=16)
+    assert sizes.max() <= 7
+
+
+@given(st.integers(0, 63), st.integers(0, 63), st.integers(0, 63),
+       st.integers(0, 63))
+@settings(max_examples=100, deadline=None)
+def test_hops_symmetric_torus(y1, x1, y2, x2):
+    g = TileGrid(8, 8)
+    a, b = g.tid(y1 % 8, x1 % 8), g.tid(y2 % 8, x2 % 8)
+    assert int(g.hops(a, b)) == int(g.hops(b, a))
+    assert int(g.hops(a, a)) == 0
+    # torus diameter = ny/2 + nx/2
+    assert int(g.hops(a, b)) <= 8
+
+
+@given(st.integers(0, 255), st.integers(0, 255))
+@settings(max_examples=100, deadline=None)
+def test_mesh_hops_ge_torus(a, b):
+    gt = TileGrid(16, 16, torus=True)
+    gm = TileGrid(16, 16, torus=False)
+    assert int(gt.hops(a, b)) <= int(gm.hops(a, b))
+
+
+@given(st.integers(0, 4095), st.integers(0, 4095))
+@settings(max_examples=100, deadline=None)
+def test_link_levels_decompose(a, b):
+    g = TileGrid(64, 64)                      # 4x4 dies, single package
+    intra, die, pkg = g.link_levels(a, b)
+    total = int(g.hops(a, b))
+    # every hop is exactly one level; pkg crossings are 0 on one package
+    assert int(pkg) == 0
+    assert int(intra) + int(die) == total
+    assert int(intra) >= 0 and int(die) >= 0
+
+
+@given(st.integers(0, 16383), st.integers(0, 16383))
+@settings(max_examples=60, deadline=None)
+def test_link_levels_multi_package(a, b):
+    g = TileGrid(128, 128)                    # 2x2 packages
+    intra, die, pkg = g.link_levels(a, b)
+    assert int(intra) + int(die) + int(pkg) == int(g.hops(a, b))
+
+
+def test_square_grid_rejects_nonsquare():
+    with pytest.raises(ValueError):
+        square_grid(48)
