@@ -2,7 +2,13 @@
 throughput/W and throughput/$ across grid sizes (paper: 256 -> 2^20
 tiles; here 64 -> 4096 tiles at CPU-simulation scale, same trends:
 superlinear region, then utilization decay from shrinking per-tile work;
-throughput/W peaks at the smallest fitting config)."""
+throughput/W peaks at the smallest fitting config).
+
+The spmv sweep also runs with a 2-level selective cascade: as the grid
+grows, proxy-flush records cross more die boundaries on their way to the
+owners, and the region reduction tree combines them level-by-level — the
+cross-chip (inter-die) traffic reduction widens with grid size, which is
+what lets the paper scale to 256 chips / a million PUs."""
 from __future__ import annotations
 
 import numpy as np
@@ -26,9 +32,11 @@ def run(small: bool = True):
         "bfs": lambda grid, px: apps.bfs(g, root, grid, proxy=px,
                                          oq_cap=32),
         "spmv": lambda grid, px: apps.spmv(
+            g, x, grid, proxy=apps.table2_proxy(grid, "spmv"), oq_cap=32),
+        "spmv_cascade": lambda grid, px: apps.spmv(
             g, x, grid,
-            proxy=ProxyConfig(max(grid.ny // 4, 2), max(grid.nx // 4, 2),
-                              slots=512, write_back=True), oq_cap=32),
+            proxy=apps.table2_proxy(grid, "spmv", cascade_levels=2),
+            oq_cap=32),
     }.items():
         for n_tiles in sizes:
             grid = square_grid(n_tiles)
@@ -45,12 +53,17 @@ def run(small: bool = True):
             rep = price(DCRA_SRAM, grid, r.run.counters,
                         mem_bits_sram=bits,
                         per_superstep_peak=dict(time_s=t))
-            out[(app_name, n_tiles)] = dict(gteps=gteps, thr=thr)
+            out[(app_name, n_tiles)] = dict(
+                gteps=gteps, thr=thr,
+                xregion=r.run.counters.cross_region_msgs,
+                die_x=r.run.counters.inter_die_crossings)
             row(f"fig11/{app_name}/{n_tiles}tiles", t * 1e6,
                 f"gteps={gteps:.3f};ops_per_s={thr:.3g};"
                 f"membw_GBs={membw/1e9:.2f};"
                 f"thr_per_w={thr/max(rep.power_w,1e-9):.3g};"
-                f"thr_per_$={thr/rep.cost_usd:.3g}")
+                f"thr_per_$={thr/rep.cost_usd:.3g};"
+                f"xregion={r.run.counters.cross_region_msgs:.0f};"
+                f"die_crossings={r.run.counters.inter_die_crossings:.0f}")
     return out
 
 

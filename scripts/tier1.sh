@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify (see ROADMAP.md): the one command every PR must keep green.
+#   scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

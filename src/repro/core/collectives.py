@@ -38,7 +38,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
+from .compat import axis_size, shard_map
 
 
 # --------------------------------------------------------------------------
@@ -56,7 +56,7 @@ def proxy_psum(x, region_axis: str, cross_axis: str | None):
     """
     if cross_axis is None:
         return jax.lax.psum(x, region_axis)
-    region = jax.lax.axis_size(region_axis)
+    region = axis_size(region_axis)
     if x.ndim == 0 or x.shape[0] % region != 0:
         return jax.lax.psum(x, (region_axis, cross_axis))
     # 1. regional combine: each region member ends up owning 1/region of
@@ -110,7 +110,7 @@ def two_hop_all_to_all(x, region_axis: str, cross_axis: str | None):
     grouped by destination region — the proxy-region routing rule.
     """
     if cross_axis is None:
-        nr = jax.lax.axis_size(region_axis)
+        nr = axis_size(region_axis)
         shp = x.shape
         xx = x.reshape((shp[0] * shp[1],) + shp[2:])
         out = jax.lax.all_to_all(xx, region_axis, split_axis=0,
@@ -196,7 +196,7 @@ def compressed_proxy_psum(x, region_axis: str, cross_axis: str | None,
     """
     if cross_axis is None:
         return jax.lax.psum(x, region_axis)
-    region = jax.lax.axis_size(region_axis)
+    region = axis_size(region_axis)
     if x.ndim == 0 or x.shape[0] % region != 0:
         return jax.lax.psum(x, (region_axis, cross_axis))
     shard = jax.lax.psum_scatter(x, region_axis, scatter_dimension=0,

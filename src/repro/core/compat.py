@@ -1,0 +1,58 @@
+"""Version-compat shims for the jax API surface this repo targets.
+
+The code and tests are written against the jax >= 0.5 spelling
+``jax.shard_map(..., check_vma=...)``.  On older installs (0.4.x)
+``shard_map`` still lives in ``jax.experimental.shard_map`` and the
+replication-check kwarg is named ``check_rep``.  ``shard_map`` below
+resolves whichever implementation exists and translates the kwarg; it is
+also installed as ``jax.shard_map`` when missing so call sites (including
+subprocess test snippets) can use the modern spelling unconditionally.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+
+def _adapt_check_kwarg(fn):
+    """Wrap ``fn`` to translate check_vma -> check_rep when ``fn`` only
+    accepts the old spelling.  Keyed on the function's signature, not the
+    jax version: some releases export the top-level ``jax.shard_map``
+    alias while still taking ``check_rep``."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return fn
+    if "check_vma" in params or "check_rep" not in params:
+        return fn
+
+    @functools.wraps(fn)
+    def shard_map(f, *args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs.setdefault("check_rep", kwargs.pop("check_vma"))
+        return fn(f, *args, **kwargs)
+
+    return shard_map
+
+
+def _resolve_shard_map():
+    native = getattr(jax, "shard_map", None)
+    if native is None:
+        from jax.experimental.shard_map import shard_map as native
+    return _adapt_check_kwarg(native)
+
+
+shard_map = _resolve_shard_map()
+
+if getattr(jax, "shard_map", None) is not shard_map:
+    jax.shard_map = shard_map
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` fallback: on 0.4.x, psum of the constant 1
+    over a named axis constant-folds to the (static) axis size."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)

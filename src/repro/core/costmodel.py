@@ -230,8 +230,10 @@ def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
     ops = (counters.records_consumed * PU_OPS_PER_RECORD
            + counters.edges_processed * PU_OPS_PER_EDGE)
     e_pu = ops * PU_PJ_PER_OP
-    # P$ tag checks
-    e_tags = (counters.filtered_at_proxy + counters.coalesced_at_proxy) * CACHE_TAG_PJ
+    # P$ tag checks — including the combine events at intermediate proxies
+    # of the cascade reduction tree (each merge is one tag check + combine)
+    e_tags = (counters.filtered_at_proxy + counters.coalesced_at_proxy
+              + counters.cascade_combined) * CACHE_TAG_PJ
     energy_pj = e_wire + e_d2d + e_pkg + e_sram + e_hbm + e_pu + e_tags
 
     # --------------------------------------------------------------- time

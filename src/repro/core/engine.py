@@ -21,12 +21,29 @@ paper's asynchronous task pipeline — see DESIGN.md §2):
      tile in the sender's region, batch-coalesced, filtered/combined
      through a direct-mapped P$ with write-through or write-back policy,
      and only surviving records are forwarded to the true owners.
+  3b. **Cascaded drain** (if the proxy config carries a ``CascadeConfig``):
+     instead of travelling straight to the owner, every record the proxy
+     stage forwards — write-through survivors, write-back evictions and
+     whole-P$ flushes alike — climbs a *region reduction tree*: the
+     record hops from its region proxy to the proxy for the same index
+     in the enclosing super-region (base regions grouped
+     ``group_ny x group_nx`` per level), where records from sibling
+     regions bound for the same index are combined into one, then
+     onward level-by-level until the tree root forwards a single record
+     to the true owner.  Under the *selective* criterion a record whose
+     owner already lies inside its current super-region exits the tree
+     early and goes straight to the owner, and apps whose combine is not
+     profitable to merge (``AppSpec.cascade_profitable=False``) skip the
+     tree entirely.  This is the paper's scaling mechanism: owner-bound
+     updates are combined hierarchically instead of all converging on
+     one tile, so cross-chip traffic shrinks as the grid grows.
   4. **Delivery**: surviving records are combined into owner mailboxes.
 
-Every message is charged exact XY-torus hops at each leg; the BSP time
-model takes the per-superstep max over (tile compute, per-level network
-serialization, endpoint contention) — reproducing the paper's observable
-effects without per-cycle router simulation.
+Every message is charged exact XY-torus hops at each leg (including every
+cascade-tree leg); the BSP time model takes the per-superstep max over
+(tile compute, per-level network serialization, endpoint contention —
+including contention at intermediate cascade proxies) — reproducing the
+paper's observable effects without per-cycle router simulation.
 """
 from __future__ import annotations
 
@@ -43,7 +60,8 @@ from .costmodel import (CLOCK_GHZ, HBM_CHANNEL_GBS, HBM_CHANNELS,
                         PU_OPS_PER_EDGE, PU_OPS_PER_RECORD, DCRA_SRAM,
                         PackageConfig)
 from .netstats import MSG_BITS, TrafficCounters
-from .proxy import ProxyConfig, make_pcache, pcache_slot, proxy_tile
+from .proxy import (ProxyConfig, cascade_proxy_tile, make_pcache,
+                    pcache_slot, proxy_tile)
 from .tilegrid import TileGrid
 
 INF = jnp.float32(jnp.inf)
@@ -58,6 +76,12 @@ class AppSpec:
     edge_value: str          # 'add_w' | 'add_one' | 'mul_w' | 'carry' | 'one'
     reactivate: bool = True  # mailbox improvements re-activate edge cursors
     count_teps_on: str = "edges"   # what Graph500-style TEPS counts
+    # Whether merging two in-flight updates to the same index into one
+    # record is profitable for this app (true for commutative reductions
+    # like min/add).  The selective-cascading criterion consults this:
+    # with CascadeConfig(selective=True), unprofitable apps bypass the
+    # reduction tree and forward proxy output straight to the owners.
+    cascade_profitable: bool = True
 
     @property
     def identity(self) -> float:
@@ -107,9 +131,15 @@ class DataLocalEngine:
         self.Cd = cfg.chunk_dst
         self.Ns = T * self.Cs
         self.Nd = T * self.Cd
+        self._cascade_levels = 0
         if cfg.proxy is not None:
             if T * cfg.proxy.slots >= 2**31:
                 raise ValueError("T*slots must fit int32 for P$ sort keys")
+            cfg.proxy.validate(grid)
+            casc = cfg.proxy.cascade
+            if casc is not None and (not casc.selective
+                                     or app.cascade_profitable):
+                self._cascade_levels = casc.levels
         # pad per-source arrays to Ns
         self.row_lo = jnp.asarray(_pad(row_lo, self.Ns, 0), jnp.int32)
         self.row_hi = jnp.asarray(_pad(row_hi, self.Ns, 0), jnp.int32)
@@ -236,7 +266,8 @@ class DataLocalEngine:
                          consumed_per_tile * PU_OPS_PER_RECORD
                          + edges_per_tile * PU_OPS_PER_EDGE),
                      filtered_at_proxy=jnp.float32(0.0),
-                     coalesced_at_proxy=jnp.float32(0.0))
+                     coalesced_at_proxy=jnp.float32(0.0),
+                     cascade_combined=jnp.float32(0.0))
 
         p_tag = state.get("p_tag")
         p_val = state.get("p_val")
@@ -380,7 +411,8 @@ class DataLocalEngine:
         else:
             flush_dst = flush_val = flush_src = None
 
-        # charge + deliver all forwarded legs
+        # drain all forwarded legs: write-through survivors, slot-conflict
+        # bypasses, write-back evictions and whole-P$ flushes
         all_dst = [fdst, edst]
         all_val = [fval, eval_]
         all_src = [jnp.minimum(skey // S, T - 1)] * 2
@@ -392,17 +424,151 @@ class DataLocalEngine:
         cat_val = jnp.concatenate(all_val)
         cat_src = jnp.concatenate(all_src)
         cat_mask = cat_dst < self.Nd
+        rdims = (pcfg.region_ny, pcfg.region_nx)
+        ncomb = jnp.float32(0.0)
+        if self._cascade_levels:
+            # Cascaded drain: level-by-level through the region reduction
+            # tree instead of straight to the owners.  Under the selective
+            # criterion, write-back apps cascade only the dense whole-P$
+            # flush wave — sporadic slot-conflict bypasses and evictions
+            # carry too few same-index duplicates to merge profitably and
+            # go direct; write-through apps cascade their full forward set.
+            if pcfg.write_back and pcfg.cascade.selective:
+                n_direct = all_dst[0].shape[0] + all_dst[1].shape[0]
+                eligible = jnp.arange(cat_dst.shape[0]) >= n_direct
+            else:
+                eligible = jnp.ones(cat_dst.shape[0], bool)
+            (mail_val, mail_flag, leg2, owner_leg, dmax,
+             ncomb) = self._cascade_drain(
+                mail_val, mail_flag, cat_dst, cat_val, cat_src, cat_mask,
+                eligible, is_min)
+        else:
+            cat_owner = jnp.minimum(cat_dst // self.Cd, T - 1)
+            leg2 = netstats.charge(grid, cat_src, cat_owner, cat_mask,
+                                   region_dims=rdims)
+            owner_leg = leg2
+            mail_val, mail_flag, dmax = _deliver(
+                mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_owner,
+                T, self.Nd, is_min)
+        charges = dict(netstats.merge_charges(leg1, leg2),
+                       owner_msgs=owner_leg["messages"],
+                       owner_hop_msgs=owner_leg["hop_msgs"])
+        pstats = dict(filtered_at_proxy=jnp.sum(filtered).astype(jnp.float32),
+                      coalesced_at_proxy=coalesced.astype(jnp.float32),
+                      cascade_combined=ncomb)
+        return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, None
+
+    # ------------------------------------------------------- cascaded drain
+    def _cascade_drain(self, mail_val, mail_flag, dst, val, src, mask,
+                       eligible, is_min):
+        """Drain proxy-stage output through the region reduction tree.
+
+        Records climb from their region proxy to the same-index proxy of
+        the enclosing super-region at each level, merging with records
+        from sibling regions bound for the same destination; only tree
+        roots (or selective early exits) forward to the true owner.  Each
+        leg is charged exact XY hops; endpoint contention at intermediate
+        proxies feeds the BSP time model.  Records with ``eligible=False``
+        skip the tree and go straight to their owner.
+
+        Returns (mail_val, mail_flag, merged_charges, owner_leg_charge,
+        delivered_max_per_tile, n_combined).
+        """
+        cfg, grid = self.cfg, self.cfg.grid
+        pcfg = cfg.proxy
+        casc = pcfg.cascade
+        T = self.T
+        rdims = (pcfg.region_ny, pcfg.region_nx)
+
+        cur = jnp.minimum(src, T - 1)
+        alive = mask & eligible
+        owner = jnp.minimum(dst // self.Cd, T - 1)
+        legs = []
+        out_dst = [dst]
+        out_val = [val]
+        out_src = [cur]
+        out_mask = [mask & ~eligible]
+        ncomb = jnp.float32(0.0)
+        dmax = jnp.float32(0.0)
+
+        for level in range(1, self._cascade_levels + 1):
+            rny, rnx = casc.level_dims(pcfg.region_ny, pcfg.region_nx, level)
+            if casc.selective:
+                # selective exit: once the owner lies inside the record's
+                # level-`level` super-region, climbing further cannot merge
+                # it with updates from other subtrees on a shorter path —
+                # it leaves the tree and goes straight to the owner.
+                near = alive & (grid.region_id(cur, rny, rnx)
+                                == grid.region_id(owner, rny, rnx))
+                out_dst.append(dst)
+                out_val.append(val)
+                out_src.append(cur)
+                out_mask.append(near)
+                alive = alive & ~near
+            ptile = cascade_proxy_tile(grid, rny, rnx, owner, cur)
+            legs.append(netstats.charge(grid, cur, ptile, alive,
+                                        region_dims=rdims))
+            recv = jax.ops.segment_sum(alive.astype(jnp.float32),
+                                       jnp.where(alive, ptile, T),
+                                       num_segments=T + 1)[:T]
+            dmax = jnp.maximum(dmax, jnp.max(recv))
+            cur, dst, val, owner, alive, merged = self._combine_level(
+                ptile, dst, val, alive, is_min)
+            ncomb = ncomb + merged
+
+        out_dst.append(dst)
+        out_val.append(val)
+        out_src.append(cur)
+        out_mask.append(alive)
+        cat_dst = jnp.concatenate(out_dst)
+        cat_val = jnp.concatenate(out_val)
+        cat_src = jnp.concatenate(out_src)
+        cat_mask = jnp.concatenate(out_mask)
         cat_owner = jnp.minimum(cat_dst // self.Cd, T - 1)
-        leg2 = netstats.charge(grid, cat_src, cat_owner, cat_mask)
-        mail_val, mail_flag, dmax = _deliver(
+        owner_leg = netstats.charge(grid, cat_src, cat_owner, cat_mask,
+                                    region_dims=rdims)
+        legs.append(owner_leg)
+        mail_val, mail_flag, del_max = _deliver(
             mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_owner, T,
             self.Nd, is_min)
-        charges = dict(netstats.merge_charges(leg1, leg2),
-                       owner_msgs=leg2["messages"],
-                       owner_hop_msgs=leg2["hop_msgs"])
-        pstats = dict(filtered_at_proxy=jnp.sum(filtered).astype(jnp.float32),
-                      coalesced_at_proxy=coalesced.astype(jnp.float32))
-        return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, None
+        return (mail_val, mail_flag, netstats.merge_charges(*legs),
+                owner_leg, jnp.maximum(dmax, del_max), ncomb)
+
+    def _combine_level(self, ptile, dst, val, alive, is_min):
+        """Merge records that meet at the same (proxy tile, dst) of one
+        cascade level into a single combined record (leaders survive).
+
+        Same lexicographic two-argsort grouping as the P$ batch coalesce;
+        masked records carry sentinel keys and sort to the end.  Returns
+        the level's outputs in sorted order plus the merge count.
+        """
+        T = self.T
+        R = dst.shape[0]
+        tkey = jnp.where(alive, ptile, T)
+        dkey = jnp.where(alive, dst, self.Nd)
+        perm1 = jnp.argsort(dkey, stable=True)
+        t1, d1, v1, a1 = tkey[perm1], dkey[perm1], val[perm1], alive[perm1]
+        perm2 = jnp.argsort(t1, stable=True)
+        stile, sdst = t1[perm2], d1[perm2]
+        sval, salive = v1[perm2], a1[perm2]
+        first = jnp.arange(R) == 0
+        leader = salive & (first | (stile != jnp.roll(stile, 1))
+                           | (sdst != jnp.roll(sdst, 1)))
+        gid = jnp.cumsum(leader.astype(jnp.int32)) - 1
+        gid = jnp.where(salive, gid, R - 1)
+        if is_min:
+            agg = jax.ops.segment_min(jnp.where(salive, sval, INF), gid,
+                                      num_segments=R,
+                                      indices_are_sorted=True)
+        else:
+            agg = jax.ops.segment_sum(jnp.where(salive, sval, 0.0), gid,
+                                      num_segments=R,
+                                      indices_are_sorted=True)
+        nval = agg[gid]
+        merged = (jnp.sum(salive) - jnp.sum(leader)).astype(jnp.float32)
+        cur = jnp.minimum(stile, T - 1)
+        owner = jnp.minimum(sdst // self.Cd, T - 1)
+        return cur, sdst, nval, owner, leader, merged
 
     # ----------------------------------------------------------------- run
     def run(self, state, max_supersteps: Optional[int] = None,
@@ -438,6 +604,8 @@ class DataLocalEngine:
                 inter_pkg_crossings=stats["inter_pkg_crossings"],
                 filtered_at_proxy=stats["filtered_at_proxy"],
                 coalesced_at_proxy=stats["coalesced_at_proxy"],
+                cascade_combined=stats.get("cascade_combined", 0.0),
+                cross_region_msgs=stats.get("cross_region_msgs", 0.0),
                 edges_processed=stats["edges_processed"],
                 records_consumed=stats["records_consumed"], supersteps=1)
             counters.add(sc)

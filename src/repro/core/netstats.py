@@ -41,6 +41,8 @@ class TrafficCounters:
     inter_pkg_crossings: float = 0.0
     filtered_at_proxy: float = 0.0   # msgs absorbed by P$ (never forwarded)
     coalesced_at_proxy: float = 0.0  # msgs merged into an existing P$ entry
+    cascade_combined: float = 0.0    # msgs merged at cascade tree levels
+    cross_region_msgs: float = 0.0   # region-boundary crossings, msg-weighted
     dropped_backpressure: float = 0.0
     edges_processed: float = 0.0
     records_consumed: float = 0.0    # mailbox records drained by owners
@@ -65,25 +67,38 @@ class TrafficCounters:
         return self.owner_hop_msgs / max(self.owner_msgs, 1.0)
 
 
-def charge(grid: TileGrid, src_tid, dst_tid, mask):
+def charge(grid: TileGrid, src_tid, dst_tid, mask, region_dims=None):
     """Vectorised traffic charge for a batch of messages.
 
     Args:
       grid: tile grid geometry.
       src_tid, dst_tid: integer arrays of tile ids (any shape).
       mask: boolean array, True where a real message exists.
+      region_dims: optional (region_ny, region_nx) of the base proxy
+        regions; when given, each message is additionally charged its
+        region-boundary crossings along the route into
+        ``cross_region_msgs`` (the traffic class selective cascading
+        exists to shrink).
 
-    Returns a dict of scalar jnp totals (messages, hop_msgs, intra, die, pkg).
+    Returns a dict of scalar jnp totals (messages, hop_msgs, intra, die,
+    pkg, cross_region_msgs).
     """
     m = mask.astype(jnp.float32)
     hops = grid.hops(src_tid, dst_tid).astype(jnp.float32)
     intra, die, pkg = grid.link_levels(src_tid, dst_tid)
+    if region_dims is None:
+        cross_region = jnp.float32(0.0)
+    else:
+        rny, rnx = region_dims
+        crosses = grid.region_crossings(src_tid, dst_tid, rny, rnx)
+        cross_region = jnp.sum(crosses.astype(jnp.float32) * m)
     return dict(
         messages=jnp.sum(m),
         hop_msgs=jnp.sum(hops * m),
         intra_die_hops=jnp.sum(intra.astype(jnp.float32) * m),
         inter_die_crossings=jnp.sum(die.astype(jnp.float32) * m),
         inter_pkg_crossings=jnp.sum(pkg.astype(jnp.float32) * m),
+        cross_region_msgs=cross_region,
     )
 
 

@@ -1,4 +1,4 @@
-"""Proxy regions (paper §III-A): the core technique.
+"""Proxy regions (paper §III-A) and selective cascading: the core techniques.
 
 The tile grid is divided into P subgrids ("proxy regions").  Each region
 holds proxy ownership of an entire selected data array, distributed across
@@ -16,14 +16,78 @@ Policies (paper §III-A "Proxy Coherence"):
   * write-back: accumulate locally and flush on eviction / at epoch or
     kernel end (used by PageRank(BSP), SPMV, Histogram, whose updates are
     purely additive).
+
+Selective cascading (the paper's scaling mechanism; see also Tascade)
+------------------------------------------------------------------------
+Without cascading, every record a proxy forwards travels straight to the
+true owner — at large grid sizes all those updates converge on one tile
+and the owner-bound legs dominate cross-chip traffic.  ``CascadeConfig``
+instead drains proxy output through a *region reduction tree*: level-0
+regions are grouped ``group_ny x group_nx`` into level-1 super-regions,
+those again into level-2, and so on.  A record climbs from its region
+proxy to the proxy for the same index in its level-1 super-region, where
+records from sibling regions headed to the same index are combined into
+one, then to level-2, ..., and only the tree root forwards to the owner.
+Updates are thus combined hierarchically instead of all converging on the
+true owner.
+
+"Selective" is twofold:
+  * per record — a record whose owner already lies inside its current
+    super-region exits the tree and goes straight to the owner (climbing
+    further could not merge it with records from other subtrees on a
+    shorter path);
+  * per app — cascading is only applied to apps whose combine makes the
+    merge profitable (commutative reductions; ``AppSpec.cascade_profitable``),
+    when ``selective=True``.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 from .tilegrid import TileGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Region reduction-tree policy for draining proxy output.
+
+    levels:   number of tree levels above the base proxy regions.
+    group_ny, group_nx: how many child regions merge into a parent region
+              along each axis per level (the paper's reduction-tree fanin).
+    selective: apply the selective criterion (per-record early exit and
+              the per-app combine-profitability gate).
+
+    A level whose region dimensions reach the whole grid is the
+    degenerate tree root: its proxy for any index *is* the owner tile, so
+    it adds no wire traffic (and under ``selective=True`` every record
+    early-exits it).  Configs whose top level equals the grid therefore
+    have ``levels - 1`` genuinely combining sub-grid levels; size the
+    base regions (e.g. ``table2_proxy(region_div=8)``) so the top level
+    stays below the grid when deeper trees are wanted.
+    """
+
+    levels: int = 2
+    group_ny: int = 2
+    group_nx: int = 2
+    selective: bool = True
+
+    def __post_init__(self):
+        if self.levels < 1:
+            raise ValueError("cascade levels must be >= 1")
+        if self.group_ny < 1 or self.group_nx < 1:
+            raise ValueError("cascade grouping factors must be >= 1")
+        if self.group_ny * self.group_nx < 2:
+            raise ValueError(
+                "cascade grouping must merge at least 2 regions per level")
+
+    def level_dims(self, region_ny: int, region_nx: int,
+                   level: int) -> Tuple[int, int]:
+        """Region dimensions at tree level ``level`` (0 = base regions)."""
+        return (region_ny * self.group_ny ** level,
+                region_nx * self.group_nx ** level)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,16 +98,41 @@ class ProxyConfig:
     region_nx: int
     slots: int = 1024          # P$ entries per tile (direct-mapped)
     write_back: bool = False   # False => write-through
+    cascade: Optional[CascadeConfig] = None
 
     def num_regions(self, grid: TileGrid) -> int:
-        return (grid.ny // self.region_ny) * (grid.nx // self.region_nx)
+        # ceil division, consistent with TileGrid.region_id's numbering
+        # (edge regions of a non-divisible grid count as regions).
+        return (-(-grid.ny // self.region_ny)) * (-(-grid.nx // self.region_nx))
+
+    def validate(self, grid: TileGrid) -> None:
+        """Check the cascade region grouping tiles the grid exactly.
+
+        Raises ValueError on non-divisible groupings: every tree level's
+        region dimensions must divide the grid, otherwise super-regions
+        straddle the grid edge and the reduction tree is ill-formed.
+        """
+        if self.cascade is None:
+            return
+        if grid.ny % self.region_ny or grid.nx % self.region_nx:
+            raise ValueError(
+                f"proxy regions {self.region_ny}x{self.region_nx} do not "
+                f"divide the {grid.ny}x{grid.nx} grid (required for "
+                f"cascading)")
+        for level in range(1, self.cascade.levels + 1):
+            rny, rnx = self.cascade.level_dims(self.region_ny,
+                                               self.region_nx, level)
+            if grid.ny % rny or grid.nx % rnx:
+                raise ValueError(
+                    f"cascade level {level} regions {rny}x{rnx} do not "
+                    f"divide the {grid.ny}x{grid.nx} grid: grouping "
+                    f"{self.cascade.group_ny}x{self.cascade.group_nx} is "
+                    f"non-divisible at this level")
 
 
 def region_id(grid: TileGrid, cfg: ProxyConfig, tid):
     """Proxy-region id of a tile."""
-    y, x = grid.coords(tid)
-    rx = grid.nx // cfg.region_nx
-    return (y // cfg.region_ny) * rx + (x // cfg.region_nx)
+    return grid.region_id(tid, cfg.region_ny, cfg.region_nx)
 
 
 def proxy_tile(grid: TileGrid, cfg: ProxyConfig, owner_tid, src_tid):
@@ -52,12 +141,22 @@ def proxy_tile(grid: TileGrid, cfg: ProxyConfig, owner_tid, src_tid):
     The proxy lives in the sender's region, at the owner's coordinates
     modulo the region dimensions (paper Fig. 2).
     """
+    return cascade_proxy_tile(grid, cfg.region_ny, cfg.region_nx,
+                              owner_tid, src_tid)
+
+
+def cascade_proxy_tile(grid: TileGrid, region_ny: int, region_nx: int,
+                       owner_tid, src_tid):
+    """Generalized P_DIST for any region dimensions: the proxy for
+    ``owner_tid`` inside the (region_ny x region_nx) region containing
+    ``src_tid``.  With level-scaled dimensions this yields each record's
+    next hop up the reduction tree."""
     oy, ox = grid.coords(owner_tid)
     sy, sx = grid.coords(src_tid)
-    ry0 = (sy // cfg.region_ny) * cfg.region_ny
-    rx0 = (sx // cfg.region_nx) * cfg.region_nx
-    py = ry0 + oy % cfg.region_ny
-    px = rx0 + ox % cfg.region_nx
+    ry0 = (sy // region_ny) * region_ny
+    rx0 = (sx // region_nx) * region_nx
+    py = ry0 + oy % region_ny
+    px = rx0 + ox % region_nx
     return grid.tid(py, px)
 
 

@@ -69,6 +69,31 @@ class TileGrid:
     def tid(self, y, x):
         return y * self.nx + x
 
+    # -------------------------------------------------------------- regions
+    def region_id(self, tid, region_ny: int, region_nx: int):
+        """Id of the (region_ny x region_nx) region containing ``tid``.
+
+        Regions tile the grid from the origin in row-major order.  With
+        cascade-level-scaled dimensions this enumerates the nodes of one
+        level of the proxy reduction tree; two tiles share a tree node
+        iff their region ids at that level are equal.
+        """
+        y, x = self.coords(tid)
+        cols = -(-self.nx // region_nx)
+        return (y // region_ny) * cols + x // region_nx
+
+    def region_crossings(self, src_tid, dst_tid, region_ny: int,
+                         region_nx: int):
+        """Proxy-region boundary crossings along the XY route src -> dst
+        (the region-granular analogue of ``link_levels``' die/package
+        crossings).  This is the cross-region traffic unit that selective
+        cascading exists to shrink: hierarchical combining sends fewer
+        messages over each successive region boundary."""
+        sy, sx = self.coords(src_tid)
+        dy, dx = self.coords(dst_tid)
+        return (self._axis_crossings(sx, dx, self.nx, region_nx)
+                + self._axis_crossings(sy, dy, self.ny, region_ny))
+
     # ------------------------------------------------------------- partition
     def chunk_size(self, n: int) -> int:
         """Equal-chunk size for a global array of length n."""

@@ -22,19 +22,57 @@ from typing import Optional
 import numpy as np
 
 from ..core.engine import AppSpec, DataLocalEngine, EngineConfig, RunResult
-from ..core.proxy import ProxyConfig
+from ..core.proxy import CascadeConfig, ProxyConfig
 from ..core.tilegrid import TileGrid
 from .csr import CSR, transpose_csr
 
-BFS_SPEC = AppSpec("bfs", combine="min", edge_value="add_one")
-SSSP_SPEC = AppSpec("sssp", combine="min", edge_value="add_w")
-WCC_SPEC = AppSpec("wcc", combine="min", edge_value="carry")
+# Table II per-app cascade profitability (the selective criterion):
+# the add-combine accumulators drain dense write-back flushes where
+# records from sibling regions merge at every tree level, so cascading
+# strictly shrinks cross-region traffic.  The write-through min
+# propagators forward sparse improvement streams with few same-index
+# duplicates per superstep — tree detours cost more than the merges
+# save (measured; see tests/test_cascade.py) — so under
+# CascadeConfig(selective=True) they bypass the reduction tree.  Forcing
+# them through it (selective=False) stays numerically exact.
+BFS_SPEC = AppSpec("bfs", combine="min", edge_value="add_one",
+                   cascade_profitable=False)
+SSSP_SPEC = AppSpec("sssp", combine="min", edge_value="add_w",
+                    cascade_profitable=False)
+WCC_SPEC = AppSpec("wcc", combine="min", edge_value="carry",
+                   cascade_profitable=False)
 PAGERANK_SPEC = AppSpec("pagerank", combine="add", edge_value="carry",
                         reactivate=False)
 SPMV_SPEC = AppSpec("spmv", combine="add", edge_value="mul_w",
                     reactivate=False)
 HISTO_SPEC = AppSpec("histo", combine="add", edge_value="one",
                      reactivate=False)
+
+# Table II per-task proxy policy: which apps run the write-back P$.
+WRITE_BACK_APPS = frozenset({"pagerank", "spmv", "histo"})
+
+
+def table2_proxy(grid: TileGrid, app: str, *, slots: int = 512,
+                 region_div: int = 4, cascade_levels: int = 0,
+                 cascade_group: int = 2,
+                 selective: bool = True) -> ProxyConfig:
+    """Build the Table-II proxy config for ``app`` on ``grid``.
+
+    region_div: regions per grid axis (paper default: 4x4 regions).
+    cascade_levels > 0 attaches a selective-cascading reduction tree with
+    the given per-level region grouping factor.
+    """
+    cascade = None
+    if cascade_levels:
+        cascade = CascadeConfig(levels=cascade_levels,
+                                group_ny=cascade_group,
+                                group_nx=cascade_group,
+                                selective=selective)
+    return ProxyConfig(region_ny=max(grid.ny // region_div, 2),
+                       region_nx=max(grid.nx // region_div, 2),
+                       slots=slots,
+                       write_back=app in WRITE_BACK_APPS,
+                       cascade=cascade)
 
 
 @dataclasses.dataclass

@@ -52,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="lr warmup steps; 0 = auto (steps//10, capped at "
+                         "100) so short smoke runs are not spent entirely "
+                         "inside the ramp")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -66,8 +70,9 @@ def main(argv=None):
     print(f"arch={cfg.arch} family={cfg.family} ~{n_params_est/1e6:.1f}M "
           f"params, {len(jax.devices())} device(s)")
 
-    opt = adafactor(lr=args.lr) if cfg.family == "mla_moe" \
-        else adamw(lr=args.lr)
+    warmup = args.warmup or min(100, max(1, args.steps // 10))
+    opt = adafactor(lr=args.lr, warmup=warmup) if cfg.family == "mla_moe" \
+        else adamw(lr=args.lr, warmup=warmup)
     params = fam["init"](cfg, jax.random.PRNGKey(0))
     real = sum(x.size for x in jax.tree.leaves(params))
     print(f"initialized {real/1e6:.1f}M params")

@@ -27,6 +27,11 @@ class Optimizer:
 def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.1,
           warmup: int = 100) -> Optimizer:
+    """``warmup`` is a linear lr ramp from 0; callers running short smoke
+    loops must size it well below the step budget (launch/train.py does
+    this automatically) or the whole run executes at near-zero lr."""
+    warmup = max(warmup, 1)
+
     def init(params):
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -70,6 +75,7 @@ def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
               clip_threshold: float = 1.0, warmup: int = 100) -> Optimizer:
     """Factored RMS optimizer (Shazeer & Stern): O(rows+cols) state for
     matrices, O(n) for vectors; no momentum."""
+    warmup = max(warmup, 1)
 
     def init(params):
         def one(p):

@@ -10,6 +10,17 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def pytest_configure(config):
+    # The five hypothesis-based modules carry `pytestmark =
+    # pytest.mark.property` and guard their import with
+    # pytest.importorskip("hypothesis"), so environments without
+    # hypothesis still collect and run the rest of the suite, and
+    # `pytest -m property` selects exactly the property suites.
+    config.addinivalue_line(
+        "markers", "property: hypothesis property-based tests "
+                   "(skipped when hypothesis is not installed)")
+
+
 @pytest.fixture(scope="session")
 def small_graph():
     from repro.graph import rmat_edges

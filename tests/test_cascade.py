@@ -1,0 +1,183 @@
+"""Selective cascading: the region reduction tree that drains proxy
+output level-by-level (region proxy -> parent-region proxy -> owner).
+
+Invariants under test:
+  * cascading is a schedule change only — final state identical to the
+    non-cascaded engine for min- and add-combine apps;
+  * on a far-traffic reduction workload it strictly reduces cross-region
+    traffic at >= 2 cascade levels while merging records in the tree;
+  * config validation rejects non-divisible region groupings;
+  * the selective criterion gates unprofitable apps out of the tree.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import AppSpec, DataLocalEngine, EngineConfig
+from repro.core.proxy import CascadeConfig, ProxyConfig, cascade_proxy_tile
+from repro.core.tilegrid import TileGrid, square_grid
+from repro.graph import apps, oracles, rmat_edges
+from repro.graph.rmat import histogram_input
+
+GRID = square_grid(64)                                  # 8x8 tiles
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_edges(9, edge_factor=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def root(g):
+    return int(np.argmax(g.out_degree()))
+
+
+# ------------------------------------------------- (a) numerical equality
+def test_cascade_equals_direct_min_combine(g, root):
+    """SSSP (min-combine, write-through): forcing the full forward set
+    through a 2-level tree (selective=False) must not change the fixed
+    point, and must match the oracle."""
+    px0 = apps.table2_proxy(GRID, "sssp")
+    px2 = apps.table2_proxy(GRID, "sssp", cascade_levels=2,
+                            selective=False)
+    r0 = apps.sssp(g, root, GRID, proxy=px0, oq_cap=32)
+    r2 = apps.sssp(g, root, GRID, proxy=px2, oq_cap=32)
+    # min is idempotent: hierarchical combining is bitwise exact
+    assert np.array_equal(r0.values, r2.values)
+    assert np.allclose(r2.values, oracles.sssp_oracle(g, root))
+    assert r2.run.counters.cascade_combined > 0
+
+
+def test_cascade_equals_direct_add_combine(g):
+    """Histogram (add-combine, write-back): cascaded flush drain equals
+    the direct flush, exactly (integer counts)."""
+    bins = g.n_rows // 8
+    hv = histogram_input(g, bins)
+    px0 = apps.table2_proxy(GRID, "histo")
+    px2 = apps.table2_proxy(GRID, "histo", cascade_levels=2)
+    r0 = apps.histogram(hv, bins, GRID, proxy=px0, oq_cap=32)
+    r2 = apps.histogram(hv, bins, GRID, proxy=px2, oq_cap=32)
+    assert np.array_equal(r0.values, r2.values)
+    assert np.array_equal(r2.values, oracles.histogram_oracle(hv, bins))
+    assert r2.run.counters.cascade_combined > 0
+
+
+def test_cascade_equals_direct_spmv(g, rng):
+    """SPMV float accumulation: reassociation by the tree stays allclose."""
+    x = rng.random(g.n_cols).astype(np.float32)
+    r0 = apps.spmv(g, x, GRID, proxy=apps.table2_proxy(GRID, "spmv"),
+                   oq_cap=32)
+    r2 = apps.spmv(g, x, GRID,
+                   proxy=apps.table2_proxy(GRID, "spmv", cascade_levels=2),
+                   oq_cap=32)
+    assert np.allclose(r0.values, r2.values, rtol=1e-4, atol=1e-5)
+    assert np.allclose(r2.values, oracles.spmv_oracle(g, x),
+                       rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------- (b) cross-region traffic shrinks
+def test_cascade_reduces_cross_region_traffic_far_workload():
+    """Far-traffic reduction drain: every tile funnels counts into 8 hot
+    bins owned far away.  At 2 genuinely sub-grid cascade levels (16x16
+    grid, 2x2 regions -> 4x4 -> 8x8) the tree must strictly cut
+    cross-region traffic AND owner-bound messages, by merging records."""
+    grid = square_grid(256)
+    far = (np.arange(20000) % 8).astype(np.int32)
+    px0 = apps.table2_proxy(grid, "histo", slots=64, region_div=8)
+    px2 = apps.table2_proxy(grid, "histo", slots=64, region_div=8,
+                            cascade_levels=2)
+    r0 = apps.histogram(far, 64, grid, proxy=px0, oq_cap=16)
+    r2 = apps.histogram(far, 64, grid, proxy=px2, oq_cap=16)
+    assert np.array_equal(r0.values, r2.values)
+    c0, c2 = r0.run.counters, r2.run.counters
+    assert c2.cascade_combined > 0
+    assert c2.cross_region_msgs < c0.cross_region_msgs
+    assert c2.owner_msgs < c0.owner_msgs
+
+
+def test_cascade_reduces_inter_die_crossings_at_scale(g, rng):
+    """On a 32x32 grid (2x2 dies of 16x16) the write-back flush drain
+    crosses chips; the reduction tree (4x4 regions -> 8x8 -> 16x16, both
+    levels genuinely sub-grid) must cut inter-die crossings."""
+    grid = square_grid(1024)
+    x = rng.random(g.n_cols).astype(np.float32)
+    r0 = apps.spmv(g, x, grid,
+                   proxy=apps.table2_proxy(grid, "spmv", region_div=8),
+                   oq_cap=32)
+    r2 = apps.spmv(g, x, grid,
+                   proxy=apps.table2_proxy(grid, "spmv", region_div=8,
+                                           cascade_levels=2),
+                   oq_cap=32)
+    assert np.allclose(r0.values, r2.values, rtol=1e-4, atol=1e-5)
+    c0, c2 = r0.run.counters, r2.run.counters
+    assert c2.inter_die_crossings < c0.inter_die_crossings
+    assert c2.cross_region_msgs < c0.cross_region_msgs
+
+
+# ------------------------------------------------- (c) config validation
+def test_cascade_config_validation_params():
+    with pytest.raises(ValueError):
+        CascadeConfig(levels=0)
+    with pytest.raises(ValueError):
+        CascadeConfig(group_ny=0)
+    with pytest.raises(ValueError):
+        CascadeConfig(group_ny=1, group_nx=1)    # merges nothing
+
+
+def test_cascade_validation_non_divisible_grouping():
+    grid = square_grid(64)                       # 8x8
+    # level-1 regions would be 6x6 on an 8x8 grid: non-divisible
+    bad = ProxyConfig(3, 3, cascade=CascadeConfig(levels=1))
+    with pytest.raises(ValueError, match="divide"):
+        bad.validate(grid)
+    # base regions fine, level-2 regions exceed the grid non-divisibly
+    bad2 = ProxyConfig(2, 2, cascade=CascadeConfig(levels=2, group_ny=3,
+                                                   group_nx=3))
+    with pytest.raises(ValueError, match="non-divisible"):
+        bad2.validate(grid)
+    # engine construction performs the same check
+    spec = AppSpec("histo", combine="add", edge_value="one",
+                   reactivate=False)
+    cfg = EngineConfig(grid=grid, n_src=64, n_dst=64, proxy=bad)
+    with pytest.raises(ValueError, match="divide"):
+        DataLocalEngine(spec, cfg, np.zeros(64, np.int32),
+                        np.zeros(64, np.int32), np.zeros(1, np.int32))
+    # a divisible grouping passes
+    ProxyConfig(2, 2, cascade=CascadeConfig(levels=2)).validate(grid)
+
+
+# ------------------------------------------------- selective criterion
+def test_selective_criterion_gates_unprofitable_apps(g, root):
+    """BFS is marked cascade-unprofitable: under selective=True the tree
+    is bypassed entirely — traffic identical to the non-cascaded run."""
+    px0 = apps.table2_proxy(GRID, "bfs")
+    px2 = apps.table2_proxy(GRID, "bfs", cascade_levels=2)  # selective
+    r0 = apps.bfs(g, root, GRID, proxy=px0, oq_cap=32)
+    r2 = apps.bfs(g, root, GRID, proxy=px2, oq_cap=32)
+    assert np.array_equal(r0.values, r2.values)
+    c0, c2 = r0.run.counters, r2.run.counters
+    assert c2.cascade_combined == 0
+    assert c2.hop_msgs == c0.hop_msgs
+    assert c2.messages == c0.messages
+
+
+# ------------------------------------------------- tree geometry helpers
+def test_cascade_proxy_tile_stays_in_senders_super_region():
+    grid = TileGrid(16, 16)
+    rng = np.random.default_rng(0)
+    for rny, rnx in ((4, 4), (8, 8)):
+        src = rng.integers(0, 256, 200)
+        owner = rng.integers(0, 256, 200)
+        p = np.asarray(cascade_proxy_tile(grid, rny, rnx, owner, src))
+        assert np.array_equal(
+            np.asarray(grid.region_id(p, rny, rnx)),
+            np.asarray(grid.region_id(src, rny, rnx)))
+
+
+def test_region_crossings_zero_within_region():
+    grid = TileGrid(8, 8)
+    # both endpoints inside the same 4x4 region: no crossings
+    assert int(grid.region_crossings(grid.tid(0, 0), grid.tid(3, 3),
+                                     4, 4)) == 0
+    # one region boundary per axis
+    assert int(grid.region_crossings(grid.tid(3, 3), grid.tid(4, 4),
+                                     4, 4)) == 2

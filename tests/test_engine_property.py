@@ -3,6 +3,8 @@ grid/proxy geometries, the data-local engine must agree with the
 oracles — proxies and queue budgets may only change the schedule."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.property
 from hypothesis import given, settings, strategies as st
 
 from repro.core.proxy import ProxyConfig

@@ -1,5 +1,9 @@
 """Proxy-region mapping properties (paper Fig. 2 semantics)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.property
 from hypothesis import given, settings, strategies as st
 
 from repro.core.proxy import ProxyConfig, pcache_slot, proxy_tile, region_id

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.property
 from hypothesis import given, settings, strategies as st
 
 import repro.models.ssm as ssm

@@ -1,6 +1,8 @@
 """Grid geometry: exact invariants + hypothesis properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.property
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tilegrid import TileGrid, square_grid
