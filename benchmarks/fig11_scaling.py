@@ -8,7 +8,13 @@ The spmv sweep also runs with a 2-level selective cascade: as the grid
 grows, proxy-flush records cross more die boundaries on their way to the
 owners, and the region reduction tree combines them level-by-level — the
 cross-chip (inter-die) traffic reduction widens with grid size, which is
-what lets the paper scale to 256 chips / a million PUs."""
+what lets the paper scale to 256 chips / a million PUs.
+
+With ``--chips N`` (or ``run(chips=N)``) every sweep point additionally
+executes on the distributed runtime partitioned into N chips: measured
+multi-chip rows carry the off-chip traffic and its energy share next to
+the monolithic numbers.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -18,54 +24,82 @@ from common import SCALE, dataset, row
 from repro.core.costmodel import DCRA_SRAM, price
 from repro.core.netstats import MSG_BITS as _MB
 from repro.core.proxy import ProxyConfig
-from repro.core.tilegrid import square_grid
+from repro.core.tilegrid import partition_grid, square_grid
 from repro.graph import apps
 
 
-def run(small: bool = True):
+def _partitionable(grid, chips: int) -> bool:
+    try:
+        partition_grid(grid, chips)
+        return True
+    except ValueError:
+        return False
+
+
+def run(small: bool = True, chips: int = 0):
     g = dataset(12)
     root = int(np.argmax(g.out_degree()))
     x = np.random.default_rng(0).random(g.n_cols).astype(np.float32)
     sizes = (64, 256, 1024) if small else (256, 1024, 4096, 16384)
     out = {}
     for app_name, fn in {
-        "bfs": lambda grid, px: apps.bfs(g, root, grid, proxy=px,
-                                         oq_cap=32),
-        "spmv": lambda grid, px: apps.spmv(
-            g, x, grid, proxy=apps.table2_proxy(grid, "spmv"), oq_cap=32),
-        "spmv_cascade": lambda grid, px: apps.spmv(
+        "bfs": lambda grid, px, **kw: apps.bfs(g, root, grid, proxy=px,
+                                               oq_cap=32, **kw),
+        "spmv": lambda grid, px, **kw: apps.spmv(
+            g, x, grid, proxy=apps.table2_proxy(grid, "spmv"), oq_cap=32,
+            **kw),
+        "spmv_cascade": lambda grid, px, **kw: apps.spmv(
             g, x, grid,
             proxy=apps.table2_proxy(grid, "spmv", cascade_levels=2),
-            oq_cap=32),
+            oq_cap=32, **kw),
     }.items():
         for n_tiles in sizes:
             grid = square_grid(n_tiles)
             px = ProxyConfig(max(grid.ny // 4, 2), max(grid.nx // 4, 2),
                              slots=512)
-            r = fn(grid, px)
-            t = r.run.time_s
-            gteps = r.gteps
-            ops = (r.run.counters.edges_processed
-                   + r.run.counters.records_consumed)
-            thr = ops / t
-            membw = (ops * 64 + r.run.counters.hop_msgs * _MB) / t / 8
-            bits = float(g.footprint_bytes() * 8)
-            rep = price(DCRA_SRAM, grid, r.run.counters,
-                        mem_bits_sram=bits,
-                        per_superstep_peak=dict(time_s=t))
-            out[(app_name, n_tiles)] = dict(
-                gteps=gteps, thr=thr,
-                xregion=r.run.counters.cross_region_msgs,
-                die_x=r.run.counters.inter_die_crossings)
-            row(f"fig11/{app_name}/{n_tiles}tiles", t * 1e6,
-                f"gteps={gteps:.3f};ops_per_s={thr:.3g};"
-                f"membw_GBs={membw/1e9:.2f};"
-                f"thr_per_w={thr/max(rep.power_w,1e-9):.3g};"
-                f"thr_per_$={thr/rep.cost_usd:.3g};"
-                f"xregion={r.run.counters.cross_region_msgs:.0f};"
-                f"die_crossings={r.run.counters.inter_die_crossings:.0f}")
+            variants = [("", {})]
+            if chips and chips > 1:
+                if _partitionable(grid, chips):
+                    variants.append((f"/{chips}chips", dict(chips=chips)))
+                else:
+                    print(f"# fig11: skipped {app_name}/{n_tiles}tiles at "
+                          f"{chips} chips (does not partition the grid)",
+                          flush=True)
+            for suffix, kw in variants:
+                r = fn(grid, px, **kw)
+                t = r.run.time_s
+                gteps = r.gteps
+                ops = (r.run.counters.edges_processed
+                       + r.run.counters.records_consumed)
+                thr = ops / t
+                membw = (ops * 64 + r.run.counters.hop_msgs * _MB) / t / 8
+                bits = float(g.footprint_bytes() * 8)
+                rep = price(DCRA_SRAM, grid, r.run.counters,
+                            mem_bits_sram=bits,
+                            per_superstep_peak=dict(time_s=t))
+                out[(app_name + suffix, n_tiles)] = dict(
+                    gteps=gteps, thr=thr,
+                    xregion=r.run.counters.cross_region_msgs,
+                    die_x=r.run.counters.inter_die_crossings,
+                    off_chip=r.run.counters.off_chip_msgs)
+                row(f"fig11/{app_name}{suffix}/{n_tiles}tiles", t * 1e6,
+                    f"gteps={gteps:.3f};ops_per_s={thr:.3g};"
+                    f"membw_GBs={membw/1e9:.2f};"
+                    f"thr_per_w={thr/max(rep.power_w,1e-9):.3g};"
+                    f"thr_per_$={thr/rep.cost_usd:.3g};"
+                    f"xregion={r.run.counters.cross_region_msgs:.0f};"
+                    f"die_crossings={r.run.counters.inter_die_crossings:.0f};"
+                    f"off_chip_msgs={r.run.counters.off_chip_msgs:.0f};"
+                    f"off_chip_j={rep.breakdown['off_chip_j']:.3e}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", type=int, default=0,
+                    help="also run each point on the distributed runtime "
+                         "partitioned into this many chips")
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    run(small=not a.full, chips=a.chips)

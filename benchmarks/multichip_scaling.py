@@ -1,0 +1,57 @@
+"""Multi-chip weak + strong scaling on the distributed runtime.
+
+The paper's Fig. 11 multi-package regime, measured: the tile grid is
+partitioned across 1..256 emulated chips (``repro.distrib``), each chip
+runs its own engine supersteps, boundary mailbox records ride the
+off-chip network leg, and GTEPS / energy / $ come from the measured
+traffic — including the off-chip share (OFF_PKG_PJ_BIT per board hop,
+IO-die latency in the BSP time).
+
+  weak:   constant tiles + dataset per chip (the Graph500 experiment
+          shape) — the GTEPS curve should grow monotonically with chips;
+  strong: fixed grid + dataset re-partitioned across more chips — what
+          the chip boundary costs at constant total work.
+"""
+from __future__ import annotations
+
+from common import SCALE, row
+
+from repro.distrib import harness
+
+
+def _emit(kind, rows):
+    for m in rows:
+        row(f"multichip/{kind}/{m['chips']}chips", m["time_s"] * 1e6,
+            f"gteps={m['gteps']:.3f};tiles={m['tiles']};"
+            f"vertices={m['n_vertices']};supersteps={m['supersteps']};"
+            f"off_chip_msgs={m['off_chip_msgs']:.0f};"
+            f"off_chip_hops={m['off_chip_hop_msgs']:.0f};"
+            f"off_chip_j={m['off_chip_j']:.3e};energy_j={m['energy_j']:.3e};"
+            f"cost_usd={m['cost_usd']:.0f};"
+            f"gteps_per_w={m['gteps_per_w']:.3g};"
+            f"gteps_per_usd={m['gteps_per_usd']:.3g}")
+
+
+def run(small: bool = True, chips=None):
+    counts = tuple(chips) if chips else (
+        (1, 4, 16, 64) if small else (1, 4, 16, 64, 256))
+    weak = harness.weak_scaling(chip_counts=counts,
+                                tiles_per_chip=16 if small else 64,
+                                base_scale=6 if small else 8)
+    _emit("weak", weak)
+    strong = harness.strong_scaling(
+        chip_counts=tuple(c for c in counts if c <= 64),
+        n_tiles=256 if small else 4096, scale=9 if small else 12)
+    _emit("strong", strong)
+    return dict(weak=weak, strong=strong)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", type=str, default=None,
+                    help="comma-separated chip counts (e.g. 1,4,16,64,256)")
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    counts = tuple(int(c) for c in a.chips.split(",")) if a.chips else None
+    run(small=not a.full, chips=counts)

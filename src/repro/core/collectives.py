@@ -218,6 +218,25 @@ def compressed_proxy_psum(x, region_axis: str, cross_axis: str | None,
 
 
 # --------------------------------------------------------------------------
+# off-chip record exchange (the distributed tile-grid runtime's boundary leg)
+# --------------------------------------------------------------------------
+def gather_records(parts, axis: str):
+    """Exchange compact off-chip record buffers across the ``chips`` mesh
+    axis (use INSIDE shard_map).
+
+    ``parts`` is a tuple of same-length per-device record arrays (e.g.
+    dst, val, mask).  Every chip all-gathers the full record stream and
+    filters the records it owns on the receive side — an all-to-all
+    without per-destination packing, which cannot overflow a send buffer
+    no matter how skewed the destination distribution is (RMAT hubs make
+    that skew the common case, not the corner case).  Returns the
+    flattened (num_chips * R, ...) arrays in chip order.
+    """
+    return tuple(jax.lax.all_gather(p, axis, axis=0, tiled=True)
+                 for p in parts)
+
+
+# --------------------------------------------------------------------------
 # analytic byte accounting (for the roofline deltas in EXPERIMENTS.md)
 # --------------------------------------------------------------------------
 def allreduce_bytes(n_bytes: float, n_dev: int) -> float:

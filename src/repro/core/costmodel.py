@@ -67,7 +67,7 @@ SCRIBE_MM = 0.2
 # ~1% yield on a 130mm^2 die).  We use the physically sane unit.
 DEFECT_DENSITY_MM2 = 0.07 / 100.0
 HBM_USD_PER_GB = 7.5
-INTERPOSER_COST_FRac_OF_DIE = 0.20   # HBM<->DCRA silicon interposer
+INTERPOSER_COST_FRAC_OF_DIE = 0.20   # HBM<->DCRA silicon interposer
 SUBSTRATE_COST_FRAC_OF_DIE = 0.10    # organic substrate, per equal area
 BONDING_COST_FRAC = 0.05
 
@@ -189,7 +189,7 @@ def system_cost_usd(cfg: PackageConfig, grid: TileGrid) -> float:
     cost = n_dies * dcra_unit
     if cfg.has_hbm:
         cost += n_dies * cfg.hbm_gb_per_die * HBM_USD_PER_GB
-        ip = INTERPOSER_COST_FRac_OF_DIE * dcra_unit
+        ip = INTERPOSER_COST_FRAC_OF_DIE * dcra_unit
         if cfg.hbm_vertical:
             ip *= 1.05  # paper: vertical costs ~5% more than horizontal
         cost += n_dies * ip
@@ -220,6 +220,10 @@ def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
               * (NOC_WIRE_PJ_BIT_MM * TILE_WIRE_MM + NOC_ROUTER_PJ_BIT))
     e_d2d = counters.inter_die_crossings * bits * (D2D_LINK_PJ_BIT + NOC_ROUTER_PJ_BIT)
     e_pkg = counters.inter_pkg_crossings * bits * OFF_PKG_PJ_BIT
+    # board-level legs of the distributed runtime: each chip-grid hop is
+    # one IO-die SERDES Tx + board trace + Rx (charged like an off-package
+    # link crossing; the IO-die latency enters the BSP time model instead)
+    e_off_chip = counters.off_chip_hop_msgs * bits * OFF_PKG_PJ_BIT
     if cfg.has_hbm and cfg.hbm_vertical:
         # 3D stacking saves the interposer wire energy on HBM accesses.
         hbm_pj = HBM_RW_PJ_BIT * 0.72
@@ -234,7 +238,8 @@ def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
     # of the cascade reduction tree (each merge is one tag check + combine)
     e_tags = (counters.filtered_at_proxy + counters.coalesced_at_proxy
               + counters.cascade_combined) * CACHE_TAG_PJ
-    energy_pj = e_wire + e_d2d + e_pkg + e_sram + e_hbm + e_pu + e_tags
+    energy_pj = (e_wire + e_d2d + e_pkg + e_off_chip + e_sram + e_hbm
+                 + e_pu + e_tags)
 
     # --------------------------------------------------------------- time
     if per_superstep_peak is not None:
@@ -272,6 +277,7 @@ def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
         power_w=energy_j / max(time_s, 1e-12),
         breakdown=dict(
             wire_j=(e_wire + e_d2d + e_pkg) * 1e-12,
+            off_chip_j=e_off_chip * 1e-12,
             mem_j=(e_sram + e_hbm) * 1e-12,
             pu_j=e_pu * 1e-12,
             tags_j=e_tags * 1e-12,

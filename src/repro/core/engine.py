@@ -62,7 +62,7 @@ from .costmodel import (CLOCK_GHZ, HBM_CHANNEL_GBS, HBM_CHANNELS,
 from .netstats import MSG_BITS, TrafficCounters
 from .proxy import (ProxyConfig, cascade_proxy_tile, make_pcache,
                     pcache_slot, proxy_tile)
-from .tilegrid import TileGrid
+from .tilegrid import ChipPartition, TileGrid
 
 INF = jnp.float32(jnp.inf)
 
@@ -117,41 +117,75 @@ class DataLocalEngine:
     """Vectorised single-host engine: simulates the whole tile grid, with
     exact traffic accounting.  (The sharded multi-device rendering of the
     same schedule lives in ``core/collectives.py`` + ``launch/dryrun.py``.)
+
+    The superstep kernel is *window-parametric*: with the default
+    ``part=None`` the window is the whole grid (the monolithic engine);
+    with a ``ChipPartition`` the same kernel executes one chip's subgrid
+    at a time — local state, global tile ids and data indices — which is
+    how ``distrib.driver`` runs one engine superstep per chip (vmapped or
+    under ``shard_map``) and exchanges the off-window records between
+    supersteps.
     """
 
     def __init__(self, app: AppSpec, cfg: EngineConfig,
                  row_lo: np.ndarray, row_hi: np.ndarray,
-                 col_idx: np.ndarray, weights: Optional[np.ndarray] = None):
+                 col_idx: np.ndarray, weights: Optional[np.ndarray] = None,
+                 part: Optional[ChipPartition] = None):
         self.app = app
         self.cfg = cfg
         grid = cfg.grid
-        T = grid.num_tiles
+        self.part = part if part is not None else ChipPartition(grid, 1, 1)
+        self.n_chips = self.part.num_chips
+        T = self.part.tiles_per_chip      # tiles per execution window
         self.T = T
+        self.Tg = grid.num_tiles          # tiles in the whole grid
         self.Cs = cfg.chunk_src
         self.Cd = cfg.chunk_dst
-        self.Ns = T * self.Cs
+        self.Ns = T * self.Cs             # window lengths (mono: == global)
         self.Nd = T * self.Cd
+        self.Ngs = self.Tg * self.Cs      # global lengths / index sentinels
+        self.Ngd = self.Tg * self.Cd
         self._cascade_levels = 0
         if cfg.proxy is not None:
             if T * cfg.proxy.slots >= 2**31:
                 raise ValueError("T*slots must fit int32 for P$ sort keys")
-            cfg.proxy.validate(grid)
+            cfg.proxy.validate_window(self.part.sub_ny, self.part.sub_nx)
             casc = cfg.proxy.cascade
             if casc is not None and (not casc.selective
                                      or app.cascade_profitable):
                 self._cascade_levels = casc.levels
-        # pad per-source arrays to Ns
-        self.row_lo = jnp.asarray(_pad(row_lo, self.Ns, 0), jnp.int32)
-        self.row_hi = jnp.asarray(_pad(row_hi, self.Ns, 0), jnp.int32)
+        # per-source arrays padded to the *global* length; in chip mode the
+        # driver partitions these into per-window slices before stepping.
+        self.row_lo = jnp.asarray(_pad(row_lo, self.Ngs, 0), jnp.int32)
+        self.row_hi = jnp.asarray(_pad(row_hi, self.Ngs, 0), jnp.int32)
         self.col_idx = jnp.asarray(col_idx, jnp.int32)
         if weights is None:
             weights = np.ones_like(col_idx, dtype=np.float32)
         self.weights = jnp.asarray(weights, jnp.float32)
         self._superstep = jax.jit(self._superstep_impl)
 
+    def chip_superstep(self, row_lo, row_hi, state, chip_id, flush):
+        """One superstep of window ``chip_id``: pure in its array args so
+        the distributed driver can vmap / shard_map it across chips.
+        Returns (new_state, stats, off) where ``off`` is the dict of
+        off-chip records (dst, val, mask) to exchange — ``None`` for a
+        monolithic window."""
+        return self._step(row_lo, row_hi, state, chip_id, flush)
+
+    def _require_mono(self, what: str):
+        """init_state/activate_all/run build whole-grid state; with a
+        multi-chip partition the per-window shapes differ and state
+        handling lives in the driver."""
+        if self.n_chips > 1:
+            raise ValueError(
+                f"{what} is monolithic-only; with a {self.n_chips}-chip "
+                f"partition use distrib.DistributedEngine, which wraps "
+                f"this engine's chip_superstep")
+
     # ---------------------------------------------------------------- state
     def init_state(self, seed_idx=None, seed_val=None,
                    values: Optional[np.ndarray] = None):
+        self._require_mono("init_state")
         ident = jnp.float32(self.app.identity)
         st = dict(
             values=jnp.full((self.Nd,), ident) if values is None
@@ -176,6 +210,7 @@ class DataLocalEngine:
     def activate_all(self, state, cur_val):
         """Epoch-style activation (PageRank/SPMV/Histogram): every source
         item starts with its full edge range and a carried value."""
+        self._require_mono("activate_all")
         state = dict(state)
         state["cur_lo"] = self.row_lo
         state["cur_hi"] = self.row_hi
@@ -184,10 +219,18 @@ class DataLocalEngine:
 
     # ------------------------------------------------------------ superstep
     def _superstep_impl(self, state, flush: jnp.ndarray):
+        """Monolithic superstep: the whole grid as one window."""
+        new_state, stats, _ = self._step(self.row_lo, self.row_hi, state,
+                                         jnp.int32(0), flush)
+        return new_state, stats
+
+    def _step(self, row_lo, row_hi, state, chip_id, flush):
         app, cfg, grid = self.app, self.cfg, self.cfg.grid
         T, Cs, Cd = self.T, self.Cs, self.Cd
         is_min = app.combine == "min"
         ident = jnp.float32(app.identity)
+        tile_gids = self.part.global_tile(
+            chip_id, jnp.arange(T, dtype=jnp.int32))
 
         # ---- 1. IQ drain (budgeted mailbox consumption) -------------------
         flag2d = state["mail_flag"].reshape(T, Cd)
@@ -212,8 +255,8 @@ class DataLocalEngine:
             # engine's rendering of data staleness: measurable wasted work).
             re = improved[: self.Ns] if self.Nd == self.Ns else jnp.zeros(
                 (self.Ns,), jnp.bool_)
-            cur_lo = jnp.where(re, self.row_lo, cur_lo)
-            cur_hi = jnp.where(re, self.row_hi, cur_hi)
+            cur_lo = jnp.where(re, row_lo, cur_lo)
+            cur_hi = jnp.where(re, row_hi, cur_hi)
             cur_val = jnp.where(re, new_vals[: self.Ns], cur_val)
 
         # ---- 2. OQ emit (budgeted edge streaming) -------------------------
@@ -252,13 +295,13 @@ class DataLocalEngine:
         cur_lo = cur_lo + (take_v2d.reshape(-1))
         edges_per_tile = total_take
 
-        # flatten records
+        # flatten records (tile ids are global; dst indices are global)
         R = T * B
         dst = dst.reshape(R)
         cand = cand.reshape(R)
         emit_mask = emit_mask.reshape(R)
-        src_tile = jnp.repeat(jnp.arange(T, dtype=jnp.int32), B)
-        owner = jnp.minimum(dst // Cd, T - 1)
+        src_tile = jnp.repeat(tile_gids, B)
+        owner = jnp.minimum(dst // Cd, self.Tg - 1)
 
         stats = dict(edges_processed=jnp.sum(edges_per_tile),
                      records_consumed=jnp.sum(consumed_per_tile),
@@ -273,17 +316,18 @@ class DataLocalEngine:
         p_val = state.get("p_val")
 
         if cfg.proxy is None:
-            ch = netstats.charge(grid, src_tile, owner, emit_mask)
-            mail_val, mail_flag, dmax = _deliver(
-                mail_val, mail_flag, dst, cand, emit_mask, owner, T,
-                self.Nd, is_min)
-            charges = dict(ch, owner_msgs=ch["messages"],
-                           owner_hop_msgs=ch["hop_msgs"])
+            (mail_val, mail_flag, owner_leg, off_ch, dmax,
+             off) = self._drain_to_owners(
+                mail_val, mail_flag, dst, cand, emit_mask, src_tile,
+                chip_id, None, is_min)
+            charges = dict(netstats.merge_charges(owner_leg, off_ch),
+                           owner_msgs=owner_leg["messages"],
+                           owner_hop_msgs=owner_leg["hop_msgs"])
         else:
             (mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax,
-             fl_extra) = self._proxy_stage(
+             off) = self._proxy_stage(
                 mail_val, mail_flag, p_tag, p_val, dst, cand, emit_mask,
-                src_tile, owner, flush, is_min, ident)
+                src_tile, owner, flush, is_min, ident, chip_id, tile_gids)
             stats.update(pstats)
 
         # ---- P$ flush (write-back): emit all resident entries to owners --
@@ -304,11 +348,46 @@ class DataLocalEngine:
             stats["p_resident"] = jnp.int32(0)
         stats["delivered_max_per_tile"] = dmax
         stats.update({k: jnp.asarray(v, jnp.float32) for k, v in charges.items()})
-        return new_state, stats
+        return new_state, stats, off
+
+    # ------------------------------------------------------- owner delivery
+    def _drain_to_owners(self, mail_val, mail_flag, dst, val, mask, src,
+                         chip_id, region_dims, is_min):
+        """Charge the owner-bound leg, deliver on-window records into the
+        local mailboxes, and split off-window records for the exchange.
+
+        ``dst``/``src`` are global; the local mailbox index of an
+        on-window record is recovered from the owner's in-chip position.
+        Returns (mail_val, mail_flag, owner_leg_charge, off_chip_charge,
+        delivered_max_per_tile, off_records) — ``off_records`` is None
+        for a monolithic window (nothing can leave it).
+        """
+        part, Cd = self.part, self.Cd
+        owner = jnp.minimum(dst // Cd, self.Tg - 1)
+        owner_leg = netstats.charge(self.cfg.grid, src, owner, mask,
+                                    region_dims=region_dims)
+        if self.n_chips == 1:
+            mail_val, mail_flag, dmax = _deliver(
+                mail_val, mail_flag, dst, val, mask, owner, self.T,
+                self.Nd, is_min)
+            return mail_val, mail_flag, owner_leg, {}, dmax, None
+        on_chip = part.chip_of_tile(owner) == chip_id
+        on = mask & on_chip
+        off_mask = mask & ~on_chip
+        lowner = part.local_tile(owner)
+        ldst = lowner * Cd + dst % Cd
+        mail_val, mail_flag, dmax = _deliver(
+            mail_val, mail_flag, ldst, val, on, lowner, self.T, self.Nd,
+            is_min)
+        off_ch = netstats.charge_off_chip(part, src, owner, off_mask)
+        off = dict(dst=jnp.where(off_mask, dst, self.Ngd), val=val,
+                   mask=off_mask)
+        return mail_val, mail_flag, owner_leg, off_ch, dmax, off
 
     # --------------------------------------------------------- proxy stage
     def _proxy_stage(self, mail_val, mail_flag, p_tag, p_val, dst, cand,
-                     emit_mask, src_tile, owner, flush, is_min, ident):
+                     emit_mask, src_tile, owner, flush, is_min, ident,
+                     chip_id, tile_gids):
         cfg, grid = self.cfg, self.cfg.grid
         pcfg = cfg.proxy
         T = self.T
@@ -317,10 +396,13 @@ class DataLocalEngine:
 
         ptile = proxy_tile(grid, pcfg, owner, src_tile)
         leg1 = netstats.charge(grid, src_tile, ptile, emit_mask)
+        # the sender's region is window-local by construction, so the
+        # proxy tile always lies on this chip — index P$ by local tile.
+        ptile_l = self.part.local_tile(ptile)
 
         slot = pcache_slot(pcfg, dst)
-        key = jnp.where(emit_mask, ptile * S + slot, T * S)   # sentinel at end
-        dkey = jnp.where(emit_mask, dst, self.Nd)
+        key = jnp.where(emit_mask, ptile_l * S + slot, T * S)  # sentinel at end
+        dkey = jnp.where(emit_mask, dst, self.Ngd)
         # lexicographic (key, dst) via two stable argsorts
         perm1 = jnp.argsort(dkey, stable=True)
         key1, dst1 = key[perm1], dst[perm1]
@@ -382,10 +464,10 @@ class DataLocalEngine:
             fwd_now = bypass                                   # only conflicts bypass
         else:
             fwd_now = upd_hit | miss | bypass                  # write-through
-        fdst = jnp.where(fwd_now, sdst, self.Nd)
+        fdst = jnp.where(fwd_now, sdst, self.Ngd)
         fval = jnp.where(fwd_now, combined, ident)
         # evicted residents (write-back) also forward
-        edst = jnp.where(evict, cur_tag, self.Nd)
+        edst = jnp.where(evict, cur_tag, self.Ngd)
         eval_ = jnp.where(evict, cur_pv, ident)
 
         # write-back flush: when the engine signals idle, spill whole P$
@@ -405,17 +487,19 @@ class DataLocalEngine:
                 flush, flushed, not_flushed, (p_tag, p_val))
             p_tag = keep_t.reshape(T, S)
             p_val = keep_v.reshape(T, S)
-            flush_dst = jnp.where(ftags >= 0, ftags, self.Nd)
+            flush_dst = jnp.where(ftags >= 0, ftags, self.Ngd)
             flush_val = jnp.where(ftags >= 0, fvals, ident)
-            flush_src = jnp.repeat(jnp.arange(T, dtype=jnp.int32), S)
+            flush_src = jnp.repeat(tile_gids, S)
         else:
             flush_dst = flush_val = flush_src = None
 
         # drain all forwarded legs: write-through survivors, slot-conflict
         # bypasses, write-back evictions and whole-P$ flushes
+        # (sources are global tile ids — the forwarding proxy tile)
         all_dst = [fdst, edst]
         all_val = [fval, eval_]
-        all_src = [jnp.minimum(skey // S, T - 1)] * 2
+        all_src = [self.part.global_tile(
+            chip_id, jnp.minimum(skey // S, T - 1))] * 2
         if flush_dst is not None:
             all_dst.append(flush_dst)
             all_val.append(flush_val)
@@ -423,7 +507,7 @@ class DataLocalEngine:
         cat_dst = jnp.concatenate(all_dst)
         cat_val = jnp.concatenate(all_val)
         cat_src = jnp.concatenate(all_src)
-        cat_mask = cat_dst < self.Nd
+        cat_mask = cat_dst < self.Ngd
         rdims = (pcfg.region_ny, pcfg.region_nx)
         ncomb = jnp.float32(0.0)
         if self._cascade_levels:
@@ -438,29 +522,27 @@ class DataLocalEngine:
                 eligible = jnp.arange(cat_dst.shape[0]) >= n_direct
             else:
                 eligible = jnp.ones(cat_dst.shape[0], bool)
-            (mail_val, mail_flag, leg2, owner_leg, dmax,
-             ncomb) = self._cascade_drain(
+            (mail_val, mail_flag, leg2, owner_leg, dmax, ncomb,
+             off) = self._cascade_drain(
                 mail_val, mail_flag, cat_dst, cat_val, cat_src, cat_mask,
-                eligible, is_min)
+                eligible, is_min, chip_id)
         else:
-            cat_owner = jnp.minimum(cat_dst // self.Cd, T - 1)
-            leg2 = netstats.charge(grid, cat_src, cat_owner, cat_mask,
-                                   region_dims=rdims)
-            owner_leg = leg2
-            mail_val, mail_flag, dmax = _deliver(
-                mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_owner,
-                T, self.Nd, is_min)
+            (mail_val, mail_flag, owner_leg, off_ch, dmax,
+             off) = self._drain_to_owners(
+                mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_src,
+                chip_id, rdims, is_min)
+            leg2 = netstats.merge_charges(owner_leg, off_ch)
         charges = dict(netstats.merge_charges(leg1, leg2),
                        owner_msgs=owner_leg["messages"],
                        owner_hop_msgs=owner_leg["hop_msgs"])
         pstats = dict(filtered_at_proxy=jnp.sum(filtered).astype(jnp.float32),
                       coalesced_at_proxy=coalesced.astype(jnp.float32),
                       cascade_combined=ncomb)
-        return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, None
+        return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, off
 
     # ------------------------------------------------------- cascaded drain
     def _cascade_drain(self, mail_val, mail_flag, dst, val, src, mask,
-                       eligible, is_min):
+                       eligible, is_min, chip_id):
         """Drain proxy-stage output through the region reduction tree.
 
         Records climb from their region proxy to the same-index proxy of
@@ -472,7 +554,7 @@ class DataLocalEngine:
         skip the tree and go straight to their owner.
 
         Returns (mail_val, mail_flag, merged_charges, owner_leg_charge,
-        delivered_max_per_tile, n_combined).
+        delivered_max_per_tile, n_combined, off_records).
         """
         cfg, grid = self.cfg, self.cfg.grid
         pcfg = cfg.proxy
@@ -480,9 +562,9 @@ class DataLocalEngine:
         T = self.T
         rdims = (pcfg.region_ny, pcfg.region_nx)
 
-        cur = jnp.minimum(src, T - 1)
+        cur = jnp.minimum(src, self.Tg - 1)
         alive = mask & eligible
-        owner = jnp.minimum(dst // self.Cd, T - 1)
+        owner = jnp.minimum(dst // self.Cd, self.Tg - 1)
         legs = []
         out_dst = [dst]
         out_val = [val]
@@ -506,14 +588,15 @@ class DataLocalEngine:
                 out_mask.append(near)
                 alive = alive & ~near
             ptile = cascade_proxy_tile(grid, rny, rnx, owner, cur)
+            ptile_l = self.part.local_tile(ptile)
             legs.append(netstats.charge(grid, cur, ptile, alive,
                                         region_dims=rdims))
             recv = jax.ops.segment_sum(alive.astype(jnp.float32),
-                                       jnp.where(alive, ptile, T),
+                                       jnp.where(alive, ptile_l, T),
                                        num_segments=T + 1)[:T]
             dmax = jnp.maximum(dmax, jnp.max(recv))
             cur, dst, val, owner, alive, merged = self._combine_level(
-                ptile, dst, val, alive, is_min)
+                ptile_l, dst, val, alive, is_min, chip_id)
             ncomb = ncomb + merged
 
         out_dst.append(dst)
@@ -524,28 +607,29 @@ class DataLocalEngine:
         cat_val = jnp.concatenate(out_val)
         cat_src = jnp.concatenate(out_src)
         cat_mask = jnp.concatenate(out_mask)
-        cat_owner = jnp.minimum(cat_dst // self.Cd, T - 1)
-        owner_leg = netstats.charge(grid, cat_src, cat_owner, cat_mask,
-                                    region_dims=rdims)
+        (mail_val, mail_flag, owner_leg, off_ch, del_max,
+         off) = self._drain_to_owners(
+            mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_src,
+            chip_id, rdims, is_min)
         legs.append(owner_leg)
-        mail_val, mail_flag, del_max = _deliver(
-            mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_owner, T,
-            self.Nd, is_min)
+        legs.append(off_ch)
         return (mail_val, mail_flag, netstats.merge_charges(*legs),
-                owner_leg, jnp.maximum(dmax, del_max), ncomb)
+                owner_leg, jnp.maximum(dmax, del_max), ncomb, off)
 
-    def _combine_level(self, ptile, dst, val, alive, is_min):
+    def _combine_level(self, ptile_l, dst, val, alive, is_min, chip_id):
         """Merge records that meet at the same (proxy tile, dst) of one
         cascade level into a single combined record (leaders survive).
 
         Same lexicographic two-argsort grouping as the P$ batch coalesce;
-        masked records carry sentinel keys and sort to the end.  Returns
-        the level's outputs in sorted order plus the merge count.
+        masked records carry sentinel keys and sort to the end.  Grouping
+        keys use the window-local proxy tile; the surviving records'
+        source tiles are returned as global ids.  Returns the level's
+        outputs in sorted order plus the merge count.
         """
         T = self.T
         R = dst.shape[0]
-        tkey = jnp.where(alive, ptile, T)
-        dkey = jnp.where(alive, dst, self.Nd)
+        tkey = jnp.where(alive, ptile_l, T)
+        dkey = jnp.where(alive, dst, self.Ngd)
         perm1 = jnp.argsort(dkey, stable=True)
         t1, d1, v1, a1 = tkey[perm1], dkey[perm1], val[perm1], alive[perm1]
         perm2 = jnp.argsort(t1, stable=True)
@@ -566,14 +650,15 @@ class DataLocalEngine:
                                       indices_are_sorted=True)
         nval = agg[gid]
         merged = (jnp.sum(salive) - jnp.sum(leader)).astype(jnp.float32)
-        cur = jnp.minimum(stile, T - 1)
-        owner = jnp.minimum(sdst // self.Cd, T - 1)
+        cur = self.part.global_tile(chip_id, jnp.minimum(stile, T - 1))
+        owner = jnp.minimum(sdst // self.Cd, self.Tg - 1)
         return cur, sdst, nval, owner, leader, merged
 
     # ----------------------------------------------------------------- run
     def run(self, state, max_supersteps: Optional[int] = None,
             progress_every: int = 0):
         """Run supersteps until drained; returns (state, RunResult)."""
+        self._require_mono("run")
         cfg = self.cfg
         maxs = max_supersteps or cfg.max_supersteps
         counters = TrafficCounters()
@@ -581,46 +666,18 @@ class DataLocalEngine:
         write_back = cfg.proxy is not None and cfg.proxy.write_back
         steps = 0
         pkg = cfg.pkg
-        grid = cfg.grid
-        dy, dx = grid.dies
-        n_die_links = (dy * (dx - 1) + dx * (dy - 1)) * 2 * pkg.inter_die_links \
-            if dy * dx > 1 else 1
-        py, px = grid.packages
-        n_pkg_links = max(1, (py * (px - 1) + px * (py - 1)) * 2)
-        intra_links = grid.num_tiles * 4
-        diameter = (grid.ny + grid.nx) / (2 if grid.torus else 1)
+        links = link_provisioning(cfg.grid, pkg)
 
         flush_flag = jnp.asarray(False)
         while steps < maxs:
             state, stats = self._superstep(state, flush_flag)
             stats = jax.device_get(stats)
             steps += 1
-            sc = TrafficCounters(
-                messages=stats["messages"], hop_msgs=stats["hop_msgs"],
-                owner_msgs=stats["owner_msgs"],
-                owner_hop_msgs=stats["owner_hop_msgs"],
-                intra_die_hops=stats["intra_die_hops"],
-                inter_die_crossings=stats["inter_die_crossings"],
-                inter_pkg_crossings=stats["inter_pkg_crossings"],
-                filtered_at_proxy=stats["filtered_at_proxy"],
-                coalesced_at_proxy=stats["coalesced_at_proxy"],
-                cascade_combined=stats.get("cascade_combined", 0.0),
-                cross_region_msgs=stats.get("cross_region_msgs", 0.0),
-                edges_processed=stats["edges_processed"],
-                records_consumed=stats["records_consumed"], supersteps=1)
-            counters.add(sc)
+            counters.add(superstep_counters(stats))
             # ---- BSP time model for this superstep ------------------------
-            t_compute = stats["compute_per_tile_max"]          # PU ops (1/cycle)
-            bits = MSG_BITS
-            t_intra = stats["intra_die_hops"] * bits / (
-                intra_links * pkg.intra_die_link_bits)
-            t_die = stats["inter_die_crossings"] * bits / (
-                n_die_links * pkg.inter_die_link_bits)
-            t_pkg = stats["inter_pkg_crossings"] * bits / (n_pkg_links * 512.0)
-            t_end = stats["delivered_max_per_tile"] * bits / pkg.intra_die_link_bits
-            step_cycles = max(t_compute, t_intra, t_die, t_pkg, t_end)
+            step_cycles = superstep_cycles(stats, pkg, links)
             if step_cycles > 0 or stats["pending"] > 0:
-                cycles += step_cycles + diameter * 0.5         # pipeline fill
+                cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
             if flush_flag:
                 flush_flag = jnp.asarray(False)
             if stats["pending"] == 0:
@@ -646,6 +703,53 @@ class RunResult:
     cycles: float
     time_s: float
     supersteps: int
+
+
+def superstep_counters(stats) -> TrafficCounters:
+    """One superstep's measured traffic as a TrafficCounters delta.
+    Shared by the monolithic and distributed run loops so the two paths
+    cannot drift in which fields they accumulate."""
+    return TrafficCounters(
+        messages=stats["messages"], hop_msgs=stats["hop_msgs"],
+        owner_msgs=stats["owner_msgs"],
+        owner_hop_msgs=stats["owner_hop_msgs"],
+        intra_die_hops=stats["intra_die_hops"],
+        inter_die_crossings=stats["inter_die_crossings"],
+        inter_pkg_crossings=stats["inter_pkg_crossings"],
+        filtered_at_proxy=stats["filtered_at_proxy"],
+        coalesced_at_proxy=stats["coalesced_at_proxy"],
+        cascade_combined=stats.get("cascade_combined", 0.0),
+        cross_region_msgs=stats.get("cross_region_msgs", 0.0),
+        off_chip_msgs=stats.get("off_chip_msgs", 0.0),
+        off_chip_hop_msgs=stats.get("off_chip_hop_msgs", 0.0),
+        edges_processed=stats["edges_processed"],
+        records_consumed=stats["records_consumed"], supersteps=1)
+
+
+def link_provisioning(grid: TileGrid, pkg) -> dict:
+    """Per-level link counts + grid diameter for the BSP time model."""
+    dy, dx = grid.dies
+    n_die_links = (dy * (dx - 1) + dx * (dy - 1)) * 2 * pkg.inter_die_links \
+        if dy * dx > 1 else 1
+    py, px = grid.packages
+    n_pkg_links = max(1, (py * (px - 1) + px * (py - 1)) * 2)
+    return dict(intra=grid.num_tiles * 4, die=n_die_links, pkg=n_pkg_links,
+                diameter=(grid.ny + grid.nx) / (2 if grid.torus else 1))
+
+
+def superstep_cycles(stats, pkg, links: dict) -> float:
+    """BSP cycles of one superstep: max over (tile compute, per-level
+    network serialization, endpoint contention).  The distributed runtime
+    maxes the board-level leg on top of this."""
+    bits = MSG_BITS
+    t_compute = stats["compute_per_tile_max"]          # PU ops (1/cycle)
+    t_intra = stats["intra_die_hops"] * bits / (
+        links["intra"] * pkg.intra_die_link_bits)
+    t_die = stats["inter_die_crossings"] * bits / (
+        links["die"] * pkg.inter_die_link_bits)
+    t_pkg = stats["inter_pkg_crossings"] * bits / (links["pkg"] * 512.0)
+    t_end = stats["delivered_max_per_tile"] * bits / pkg.intra_die_link_bits
+    return max(t_compute, t_intra, t_die, t_pkg, t_end)
 
 
 def _deliver(mail_val, mail_flag, dst, val, mask, owner, T, Nd, is_min):

@@ -43,6 +43,8 @@ class TrafficCounters:
     coalesced_at_proxy: float = 0.0  # msgs merged into an existing P$ entry
     cascade_combined: float = 0.0    # msgs merged at cascade tree levels
     cross_region_msgs: float = 0.0   # region-boundary crossings, msg-weighted
+    off_chip_msgs: float = 0.0       # records exchanged between chips
+    off_chip_hop_msgs: float = 0.0   # their chip-grid (board-level) hops
     dropped_backpressure: float = 0.0
     edges_processed: float = 0.0
     records_consumed: float = 0.0    # mailbox records drained by owners
@@ -100,6 +102,32 @@ def charge(grid: TileGrid, src_tid, dst_tid, mask, region_dims=None):
         inter_pkg_crossings=jnp.sum(pkg.astype(jnp.float32) * m),
         cross_region_msgs=cross_region,
     )
+
+
+def charge_off_chip(part, src_tid, dst_tid, mask):
+    """Charge the off-chip network leg for records leaving their chip.
+
+    In the distributed runtime a record whose owner lives on another chip
+    rides the board-level network: out through the source chip's IO die,
+    across one board link per chip-grid hop, and in through the
+    destination chip's IO die.  The on-silicon route is already charged
+    by ``charge`` (with its inter-die / inter-package crossings); this
+    counts the *additional* board legs that only exist once the grid is
+    physically split into chips — priced at OFF_PKG_PJ_BIT per bit per
+    leg and IO-die Rx/Tx latency in the BSP time model.
+
+    Args:
+      part: a ``tilegrid.ChipPartition``.
+      src_tid, dst_tid: global tile ids of the record's final leg.
+      mask: True where a real off-chip record exists (caller pre-masks to
+        records whose source and owner chips differ).
+
+    Returns a dict(off_chip_msgs, off_chip_hop_msgs) of scalar totals.
+    """
+    m = mask.astype(jnp.float32)
+    hops = part.chip_hops(src_tid, dst_tid).astype(jnp.float32)
+    return dict(off_chip_msgs=jnp.sum(m),
+                off_chip_hop_msgs=jnp.sum(hops * m))
 
 
 def merge_charges(*charges) -> Dict[str, jnp.ndarray]:

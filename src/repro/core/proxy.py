@@ -43,6 +43,7 @@ true owner.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -112,22 +113,63 @@ class ProxyConfig:
         region dimensions must divide the grid, otherwise super-regions
         straddle the grid edge and the reduction tree is ill-formed.
         """
+        self.validate_window(grid.ny, grid.nx)
+
+    def validate_window(self, ny: int, nx: int) -> None:
+        """``validate`` against an arbitrary tile window (the whole grid
+        for the monolithic engine, one chip's subgrid for the distributed
+        runtime)."""
         if self.cascade is None:
             return
-        if grid.ny % self.region_ny or grid.nx % self.region_nx:
+        if ny % self.region_ny or nx % self.region_nx:
             raise ValueError(
                 f"proxy regions {self.region_ny}x{self.region_nx} do not "
-                f"divide the {grid.ny}x{grid.nx} grid (required for "
-                f"cascading)")
+                f"divide the {ny}x{nx} window (required for cascading)")
         for level in range(1, self.cascade.levels + 1):
             rny, rnx = self.cascade.level_dims(self.region_ny,
                                                self.region_nx, level)
-            if grid.ny % rny or grid.nx % rnx:
+            if ny % rny or nx % rnx:
                 raise ValueError(
                     f"cascade level {level} regions {rny}x{rnx} do not "
-                    f"divide the {grid.ny}x{grid.nx} grid: grouping "
+                    f"divide the {ny}x{nx} window: grouping "
                     f"{self.cascade.group_ny}x{self.cascade.group_nx} is "
                     f"non-divisible at this level")
+
+
+def chip_local_proxy(cfg: ProxyConfig, sub_ny: int, sub_nx: int) -> ProxyConfig:
+    """Adapt a proxy config to one chip's ``sub_ny x sub_nx`` tile window.
+
+    The distributed runtime runs the proxy stage chip-locally: a sender's
+    region — and every cascade tree level — must lie entirely on the
+    sender's chip, so proxy/cascade roots sit at the chip boundary and
+    anything bound further out rides the off-chip leg straight to its
+    owner.  Two adaptations follow:
+
+      * region dimensions shrink to their gcd with the chip dims, so the
+        (possibly smaller) regions tile each chip exactly;
+      * cascade levels that would outgrow the chip are truncated; if no
+        combining level fits, the cascade is dropped entirely (its
+        reduction tree would be rooted off-chip).
+
+    Both are schedule changes only: proxy filtering/coalescing and
+    hierarchical combining never change the fixed point (min) or the
+    delivered sum (add), so distributed results still match the
+    monolithic engine.
+    """
+    rny = math.gcd(cfg.region_ny, sub_ny)
+    rnx = math.gcd(cfg.region_nx, sub_nx)
+    cascade = cfg.cascade
+    if cascade is not None:
+        fit = 0
+        for level in range(1, cascade.levels + 1):
+            lny, lnx = cascade.level_dims(rny, rnx, level)
+            if sub_ny % lny or sub_nx % lnx:
+                break
+            fit = level
+        cascade = (dataclasses.replace(cascade, levels=fit) if fit
+                   else None)
+    return dataclasses.replace(cfg, region_ny=rny, region_nx=rnx,
+                               cascade=cascade)
 
 
 def region_id(grid: TileGrid, cfg: ProxyConfig, tid):

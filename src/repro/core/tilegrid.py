@@ -176,3 +176,122 @@ def square_grid(num_tiles: int, **kw) -> TileGrid:
     if side * side != num_tiles:
         raise ValueError(f"num_tiles={num_tiles} is not a perfect square")
     return TileGrid(side, side, **kw)
+
+
+# --------------------------------------------------------------------------
+# Chip partitioning (the distributed runtime's unit of execution)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChipPartition:
+    """A (chips_y x chips_x) block partition of a tile grid into chips.
+
+    Each chip is a rectangular subgrid of ``sub_ny x sub_nx`` tiles that
+    the distributed runtime executes as one independent engine instance
+    (one device under ``shard_map``, one vmap lane under emulation).
+    Tile/data placement keeps the *global* row-major ids of the
+    monolithic engine, so hop charging and numerics are unchanged; the
+    partition only decides which tiles run together and which messages
+    must ride the off-chip network leg between supersteps.
+
+    All index maps are closed-form ``jnp``-compatible arithmetic so they
+    can be traced inside jitted/vmapped supersteps.  Maps from a global
+    tile to its chip (or to its position within whatever chip holds it)
+    need no chip id; only ``global_tile`` does.
+    """
+
+    grid: TileGrid
+    chips_y: int
+    chips_x: int
+
+    def __post_init__(self):
+        if self.chips_y <= 0 or self.chips_x <= 0:
+            raise ValueError("chip grid dims must be positive")
+        if self.grid.ny % self.chips_y or self.grid.nx % self.chips_x:
+            raise ValueError(
+                f"chip grid {self.chips_y}x{self.chips_x} does not divide "
+                f"the {self.grid.ny}x{self.grid.nx} tile grid")
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def num_chips(self) -> int:
+        return self.chips_y * self.chips_x
+
+    @property
+    def sub_ny(self) -> int:
+        return self.grid.ny // self.chips_y
+
+    @property
+    def sub_nx(self) -> int:
+        return self.grid.nx // self.chips_x
+
+    @property
+    def tiles_per_chip(self) -> int:
+        return self.sub_ny * self.sub_nx
+
+    # ------------------------------------------------------------ index maps
+    def chip_of_tile(self, tid):
+        """Chip id (row-major on the chip grid) owning global tile ``tid``."""
+        y, x = self.grid.coords(tid)
+        return (y // self.sub_ny) * self.chips_x + x // self.sub_nx
+
+    def local_tile(self, tid):
+        """Row-major index of global tile ``tid`` within its own chip."""
+        y, x = self.grid.coords(tid)
+        return (y % self.sub_ny) * self.sub_nx + x % self.sub_nx
+
+    def global_tile(self, chip, ltid):
+        """Global tile id of local tile ``ltid`` on chip ``chip``."""
+        cy = chip // self.chips_x
+        cx = chip % self.chips_x
+        ly = ltid // self.sub_nx
+        lx = ltid % self.sub_nx
+        return self.grid.tid(cy * self.sub_ny + ly, cx * self.sub_nx + lx)
+
+    def chip_hops(self, src_tid, dst_tid):
+        """Manhattan hops on the chip grid for a message src -> dst —
+        the number of board-level (IO-die to IO-die) legs it traverses.
+        Wrap-around follows the tile network's torus configuration."""
+        sc = self.chip_of_tile(src_tid)
+        dc = self.chip_of_tile(dst_tid)
+        sy, sx = sc // self.chips_x, sc % self.chips_x
+        dy, dx = dc // self.chips_x, dc % self.chips_x
+        hx = jnp.abs(sx - dx)
+        hy = jnp.abs(sy - dy)
+        if self.grid.torus:
+            if self.chips_x > 1:
+                hx = jnp.minimum(hx, self.chips_x - hx)
+            if self.chips_y > 1:
+                hy = jnp.minimum(hy, self.chips_y - hy)
+        return hx + hy
+
+    # ------------------------------------------------------------- host side
+    def tile_ids(self, chip: int):
+        """Global tile ids of chip ``chip`` in local row-major order
+        (numpy, host-side; used to partition/reassemble dataset arrays)."""
+        import numpy as _np
+        return _np.asarray(self.global_tile(chip,
+                                            _np.arange(self.tiles_per_chip)))
+
+    def describe(self) -> str:
+        return (f"ChipPartition {self.chips_y}x{self.chips_x} chips of "
+                f"{self.sub_ny}x{self.sub_nx} tiles over "
+                f"{self.grid.ny}x{self.grid.nx}")
+
+
+def partition_grid(grid: TileGrid, num_chips: int) -> ChipPartition:
+    """Factor ``num_chips`` into the most square chip grid that divides
+    ``grid`` (the paper's packages-on-a-board arrangement)."""
+    best = None
+    for cy in range(1, num_chips + 1):
+        if num_chips % cy:
+            continue
+        cx = num_chips // cy
+        if grid.ny % cy or grid.nx % cx:
+            continue
+        score = abs(cy - cx)
+        if best is None or score < best[0]:
+            best = (score, cy, cx)
+    if best is None:
+        raise ValueError(
+            f"cannot partition {grid.ny}x{grid.nx} into {num_chips} chips")
+    return ChipPartition(grid, best[1], best[2])

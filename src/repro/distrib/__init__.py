@@ -1,0 +1,4 @@
+"""Distributed multi-chip runtime: chip partitioning, per-chip engine
+supersteps, boundary exchange, and the 1 -> 256-chip scaling harness."""
+from .driver import (DistributedEngine, exchange, partition,  # noqa: F401
+                     run_distributed)

@@ -1,0 +1,403 @@
+"""Distributed multi-chip runtime for the tile-grid engine (paper §V).
+
+The paper's headline numbers come from *distributed* execution: up to 256
+chips — over a million PUs — run the tile grid cooperatively, with
+owner-bound updates that leave a chip riding a board-level network
+through each package's IO die.  This module is that execution layer:
+
+  * ``partition`` splits a :class:`TileGrid` into a chip grid
+    (:class:`ChipPartition`); tile ids, data placement and hop charging
+    keep the monolithic engine's global numbering, so results are
+    directly comparable.
+  * Each chip runs one :class:`DataLocalEngine` superstep over its own
+    subgrid per global superstep (the engine kernel is window-parametric
+    — see ``core/engine.py``).  Proxy regions and cascade reduction
+    trees are adapted chip-locally (``proxy.chip_local_proxy``): the
+    cascade root sits at the chip boundary, and anything bound further
+    out goes straight to its owner over the off-chip leg.
+  * ``exchange`` delivers the boundary mailbox records between
+    supersteps.  Under ``shard_map`` over a ``chips`` mesh axis the
+    exchange is a real collective (``collectives.gather_records``); with
+    a single device the runtime falls back to a vmapped emulation whose
+    exchange is one combined scatter — numerically the same combine.
+  * Off-chip records are charged a new network leg
+    (``netstats.charge_off_chip``): OFF_PKG_PJ_BIT energy per board hop
+    and IO-die Rx/Tx latency plus board-link serialization in the BSP
+    time model.
+
+Delivery order differs from the monolithic engine only in which records
+a mailbox combines first; min-combine apps are therefore bitwise
+identical, add-combine apps identical up to f32 re-association.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import collectives, netstats
+from ..core.compat import shard_map
+from ..core.costmodel import CLOCK_GHZ, IO_DIE_RXTX_LAT_NS
+from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
+                           RunResult, _pad, link_provisioning,
+                           superstep_counters, superstep_cycles)
+from ..core.netstats import MSG_BITS, TrafficCounters
+from ..core.proxy import chip_local_proxy
+from ..core.tilegrid import ChipPartition, TileGrid, partition_grid
+
+
+def partition(grid: TileGrid, num_chips: int) -> ChipPartition:
+    """Partition ``grid`` into the most square chip grid that divides it."""
+    return partition_grid(grid, num_chips)
+
+
+# --------------------------------------------------------------------------
+# boundary exchange
+# --------------------------------------------------------------------------
+def _owner_slots(part: ChipPartition, chunk_dst: int, dst):
+    """Map global dst indices to (owner chip, owner's in-chip tile, local
+    mailbox index within that chip).  The single source of the exchanged
+    records' mailbox layout — shared by both backends' receive sides."""
+    owner = jnp.minimum(dst // chunk_dst, part.grid.num_tiles - 1)
+    chip = part.chip_of_tile(owner)
+    ltile = part.local_tile(owner)
+    return chip, ltile, ltile * chunk_dst + dst % chunk_dst
+
+
+def _combine_into_mail(mail_val, mail_flag, flat, mask, val, seg, n_seg,
+                       is_min):
+    """Scatter-combine exchanged records into a flattened mailbox pair.
+
+    ``flat`` indexes the flattened mailbox, ``seg`` the receiving tile
+    (for endpoint contention); masked-out records go to a sentinel row.
+    Shared by the emulated exchange and the shard_map receive side so
+    the two backends cannot drift.  Returns (mail_val, mail_flag,
+    recv_max).
+    """
+    n_flat = mail_val.shape[0]
+    safe = jnp.where(mask, flat, n_flat)
+    mv = jnp.concatenate([mail_val, jnp.zeros((1,), jnp.float32)])
+    mf = jnp.concatenate([mail_flag, jnp.zeros((1,), jnp.bool_)])
+    if is_min:
+        mv = mv.at[safe].min(jnp.where(mask, val, INF))
+    else:
+        mv = mv.at[safe].add(jnp.where(mask, val, 0.0))
+    mf = mf.at[safe].max(mask)
+    recv = jax.ops.segment_sum(mask.astype(jnp.float32),
+                               jnp.where(mask, seg, n_seg),
+                               num_segments=n_seg + 1)[:n_seg]
+    return mv[:n_flat], mf[:n_flat], jnp.max(recv)
+
+
+def _pending(state):
+    """Live work in a (possibly stacked) engine state — mailbox flags
+    plus unfinished edge cursors.  Must be evaluated *after* the
+    boundary exchange: a record that crossed chips this superstep is
+    pending work even when every chip's pre-exchange queues are empty."""
+    return (jnp.sum(state["mail_flag"])
+            + jnp.sum(state["cur_hi"] > state["cur_lo"]))
+
+
+def exchange(part: ChipPartition, chunk_dst: int, state, off, is_min: bool):
+    """Deliver per-chip off-chip record buffers into their owner chips'
+    mailboxes (the emulated board-level exchange; state is stacked
+    ``(chips, ...)``).
+
+    Combining into a mailbox is commutative (min / add / flag-or), so one
+    global scatter is exactly equivalent to routing each record across
+    the board and combining on arrival.  Returns (state, recv_max): the
+    per-tile maximum of received records, which feeds endpoint contention
+    in the BSP time model.
+    """
+    C = part.num_chips
+    Tl = part.tiles_per_chip
+    Nld = Tl * chunk_dst
+    dst = off["dst"].reshape(-1)
+    val = off["val"].reshape(-1)
+    mask = off["mask"].reshape(-1)
+    chip, ltile, off_idx = _owner_slots(part, chunk_dst, dst)
+    mv, mf, recv_max = _combine_into_mail(
+        state["mail_val"].reshape(-1), state["mail_flag"].reshape(-1),
+        chip * Nld + off_idx, mask, val, chip * Tl + ltile, C * Tl, is_min)
+    state = dict(state, mail_val=mv.reshape(C, Nld),
+                 mail_flag=mf.reshape(C, Nld))
+    return state, recv_max
+
+
+def _aggregate(stats, recv_max):
+    """Reduce per-chip superstep stats to grid-global ones: traffic sums,
+    bottleneck (per-tile) maxima; exchange receive contention folds into
+    the delivery max."""
+    agg = {}
+    for k, v in stats.items():
+        if k in ("compute_per_tile_max", "delivered_max_per_tile"):
+            agg[k] = jnp.max(v)
+        else:
+            agg[k] = jnp.sum(v)
+    agg["delivered_max_per_tile"] = jnp.maximum(
+        agg["delivered_max_per_tile"], recv_max)
+    return agg
+
+
+# --------------------------------------------------------------------------
+class DistributedEngine:
+    """Multi-chip rendering of :class:`DataLocalEngine`.
+
+    Mirrors the monolithic engine's interface (``init_state`` /
+    ``activate_all`` / ``run``) so the six applications run unchanged;
+    state is held stacked per chip ``(chips, local...)`` and ``run``
+    reassembles ``values`` into global order.
+    """
+
+    def __init__(self, app: AppSpec, cfg: EngineConfig,
+                 row_lo: np.ndarray, row_hi: np.ndarray,
+                 col_idx: np.ndarray, weights: Optional[np.ndarray] = None,
+                 part: Optional[ChipPartition] = None,
+                 num_chips: Optional[int] = None, backend: str = "auto"):
+        grid = cfg.grid
+        if part is None:
+            if num_chips is None:
+                raise ValueError("pass part= or num_chips=")
+            part = partition_grid(grid, num_chips)
+        if cfg.proxy is not None:
+            cfg = dataclasses.replace(
+                cfg, proxy=chip_local_proxy(cfg.proxy, part.sub_ny,
+                                            part.sub_nx))
+        self.app = app
+        self.cfg = cfg
+        self.part = part
+        self.kernel = DataLocalEngine(app, cfg, row_lo, row_hi, col_idx,
+                                      weights, part=part)
+        self.C = part.num_chips
+        self.Tl = part.tiles_per_chip
+        self.Cs, self.Cd = cfg.chunk_src, cfg.chunk_dst
+        self._is_min = app.combine == "min"
+        # (chip, local) <-> global tile permutations, host-side
+        perm = np.concatenate([part.tile_ids(c) for c in range(self.C)])
+        self._perm = perm
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.shape[0])
+        self._inv = inv
+        self._row_lo_s = self._shard(np.asarray(self.kernel.row_lo), self.Cs)
+        self._row_hi_s = self._shard(np.asarray(self.kernel.row_hi), self.Cs)
+        self._chip_ids = jnp.arange(self.C, dtype=jnp.int32)
+        if backend == "auto":
+            ndev = jax.device_count()
+            backend = ("shard_map" if ndev > 1 and self.C % ndev == 0
+                       else "vmap")
+        if self.C == 1:
+            backend = "vmap"    # 1x1 partition: no boundary to exchange
+        if backend == "shard_map" and self.C % jax.device_count():
+            raise ValueError(
+                f"{self.C} chips do not divide {jax.device_count()} devices")
+        self.backend = backend
+        self._step = None
+
+    # ----------------------------------------------------------- data moves
+    def _shard(self, a_global: np.ndarray, chunk: int) -> jnp.ndarray:
+        """Global per-index array -> stacked (chips, tiles_local*chunk)."""
+        a = np.asarray(a_global).reshape(self.part.grid.num_tiles, chunk)
+        return jnp.asarray(a[self._perm].reshape(self.C, self.Tl * chunk))
+
+    def _gather(self, a_stacked, chunk: int) -> np.ndarray:
+        """Stacked (chips, tiles_local*chunk) -> global per-index array."""
+        a = np.asarray(a_stacked).reshape(self.C * self.Tl, chunk)
+        return a[self._inv].reshape(-1)
+
+    # ---------------------------------------------------------------- state
+    def init_state(self, seed_idx=None, seed_val=None,
+                   values: Optional[np.ndarray] = None):
+        k = self.kernel
+        ident = self.app.identity
+        vals_g = (np.full((k.Ngd,), ident, np.float32) if values is None
+                  else np.asarray(_pad(np.asarray(values, np.float32),
+                                       k.Ngd, ident), np.float32))
+        mail_val_g = np.full((k.Ngd,), ident, np.float32)
+        mail_flag_g = np.zeros((k.Ngd,), bool)
+        if seed_idx is not None:
+            si = np.atleast_1d(np.asarray(seed_idx)).astype(np.int64)
+            sv = np.atleast_1d(np.asarray(seed_val)).astype(np.float32)
+            mail_val_g[si] = sv
+            mail_flag_g[si] = True
+        st = dict(
+            values=self._shard(vals_g, self.Cd),
+            mail_val=self._shard(mail_val_g, self.Cd),
+            mail_flag=self._shard(mail_flag_g, self.Cd),
+            cur_lo=jnp.zeros((self.C, k.Ns), jnp.int32),
+            cur_hi=jnp.zeros((self.C, k.Ns), jnp.int32),
+            cur_val=jnp.zeros((self.C, k.Ns), jnp.float32),
+        )
+        if self.cfg.proxy is not None:
+            S = self.cfg.proxy.slots
+            st["p_tag"] = jnp.full((self.C, self.Tl, S), -1, jnp.int32)
+            st["p_val"] = jnp.full((self.C, self.Tl, S), ident, jnp.float32)
+        return st
+
+    def activate_all(self, state, cur_val):
+        state = dict(state)
+        state["cur_lo"] = self._row_lo_s
+        state["cur_hi"] = self._row_hi_s
+        state["cur_val"] = self._shard(
+            _pad(np.asarray(cur_val, np.float32), self.kernel.Ngs, 0.0),
+            self.Cs)
+        return state
+
+    # ---------------------------------------------------------------- steps
+    def _get_step(self):
+        if self._step is None:
+            self._step = (self._make_vmap_step() if self.backend == "vmap"
+                          else self._make_shard_step())
+        return self._step
+
+    def _make_vmap_step(self):
+        kernel, part, Cd, is_min = (self.kernel, self.part, self.Cd,
+                                    self._is_min)
+        multi = self.C > 1
+
+        def step(row_lo, row_hi, state, chip_ids, flush):
+            new_state, stats, off = jax.vmap(
+                kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
+                row_lo, row_hi, state, chip_ids, flush)
+            if multi:
+                new_state, recv_max = exchange(part, Cd, new_state, off,
+                                               is_min)
+            else:                       # 1x1 partition: nothing can leave
+                recv_max = jnp.float32(0.0)
+            agg = _aggregate(stats, recv_max)
+            # pending must see the post-exchange mailboxes: a record that
+            # crossed chips this superstep is the next superstep's work
+            agg["pending"] = _pending(new_state)
+            return new_state, agg
+
+        jstep = jax.jit(step)
+        return lambda state, flush: jstep(self._row_lo_s, self._row_hi_s,
+                                          state, self._chip_ids, flush)
+
+    def _make_shard_step(self):
+        from jax.sharding import PartitionSpec as P
+        kernel, part, Cd, Tl = self.kernel, self.part, self.Cd, self.Tl
+        is_min = self._is_min
+        C = self.C
+        Nld = kernel.Nd
+        ndev = jax.device_count()
+        per = C // ndev
+        mesh = jax.make_mesh((ndev,), ("chips",))
+
+        def fn(row_lo, row_hi, state, flush):
+            cid0 = jax.lax.axis_index("chips") * per
+            chip_ids = cid0 + jnp.arange(per, dtype=jnp.int32)
+            new_state, stats, off = jax.vmap(
+                kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
+                row_lo, row_hi, state, chip_ids, flush)
+            # board-level exchange: every chip gathers the full off-chip
+            # record stream and keeps what it owns (collective all-to-all
+            # without per-destination packing, so hub skew cannot
+            # overflow a send buffer)
+            g_dst, g_val, g_mask = collectives.gather_records(
+                (off["dst"].reshape(-1), off["val"].reshape(-1),
+                 off["mask"].reshape(-1)), "chips")
+            ochip, ltile, off_idx = _owner_slots(part, Cd, g_dst)
+            mine = g_mask & (ochip // per == jax.lax.axis_index("chips"))
+            lane = ochip % per
+            mv, mf, recv_max = _combine_into_mail(
+                new_state["mail_val"].reshape(-1),
+                new_state["mail_flag"].reshape(-1),
+                lane * Nld + off_idx, mine, g_val, lane * Tl + ltile,
+                per * Tl, is_min)
+            new_state = dict(new_state,
+                             mail_val=mv.reshape(per, Nld),
+                             mail_flag=mf.reshape(per, Nld))
+            agg = {}
+            for k2, v in stats.items():
+                if k2 in ("compute_per_tile_max", "delivered_max_per_tile"):
+                    agg[k2] = jax.lax.pmax(jnp.max(v), "chips")
+                else:
+                    agg[k2] = jax.lax.psum(jnp.sum(v), "chips")
+            agg["delivered_max_per_tile"] = jnp.maximum(
+                agg["delivered_max_per_tile"],
+                jax.lax.pmax(recv_max, "chips"))
+            # post-exchange pending, globally (see _make_vmap_step)
+            agg["pending"] = jax.lax.psum(_pending(new_state), "chips")
+            return new_state, agg
+
+        jstep = jax.jit(shard_map(
+            fn, mesh=mesh, in_specs=(P("chips"), P("chips"), P("chips"), P()),
+            out_specs=(P("chips"), P()), check_vma=False))
+        return lambda state, flush: jstep(self._row_lo_s, self._row_hi_s,
+                                          state, flush)
+
+    # ------------------------------------------------------------------ run
+    def run(self, state, max_supersteps: Optional[int] = None,
+            progress_every: int = 0):
+        """Run distributed supersteps until drained; returns
+        (state-with-global-values, RunResult)."""
+        cfg, part = self.cfg, self.part
+        maxs = max_supersteps or cfg.max_supersteps
+        counters = TrafficCounters()
+        cycles = 0.0
+        write_back = cfg.proxy is not None and cfg.proxy.write_back
+        steps = 0
+        pkg = cfg.pkg
+        links = link_provisioning(cfg.grid, pkg)
+        cy, cx = part.chips_y, part.chips_x
+        n_board_links = max(1, (cy * (cx - 1) + cx * (cy - 1)) * 2)
+        io_lat_cycles = 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ   # Tx + Rx IO die
+        step_fn = self._get_step()
+
+        flush_flag = jnp.asarray(False)
+        while steps < maxs:
+            state, stats = step_fn(state, flush_flag)
+            stats = jax.device_get(stats)
+            steps += 1
+            counters.add(superstep_counters(stats))
+            # ---- BSP time model: monolithic levels + the board-level leg
+            t_board = stats.get("off_chip_hop_msgs", 0.0) * MSG_BITS / (
+                n_board_links * 512.0)
+            step_cycles = max(superstep_cycles(stats, pkg, links), t_board)
+            if step_cycles > 0 or stats["pending"] > 0:
+                cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
+                if stats.get("off_chip_msgs", 0.0) > 0:
+                    cycles += io_lat_cycles
+            if flush_flag:
+                flush_flag = jnp.asarray(False)
+            if stats["pending"] == 0:
+                if write_back and stats["p_resident"] > 0:
+                    flush_flag = jnp.asarray(True)
+                    continue
+                break
+            if progress_every and steps % progress_every == 0:
+                print(f"  [{self.app.name}/{self.C}chips] step {steps} "
+                      f"pending={stats['pending']:.0f}")
+        counters.supersteps = steps
+        time_s = cycles / (CLOCK_GHZ * 1e9)
+        out_state = dict(state)
+        out_state["values"] = self._gather(state["values"], self.Cd)
+        return out_state, RunResult(counters=counters, cycles=cycles,
+                                    time_s=time_s, supersteps=steps)
+
+
+# --------------------------------------------------------------------------
+def run_distributed(app: AppSpec, cfg: EngineConfig, row_lo, row_hi, col_idx,
+                    weights=None, *, chips: Optional[int] = None,
+                    part: Optional[ChipPartition] = None,
+                    backend: str = "auto", seed_idx=None, seed_val=None,
+                    values=None, activate=None,
+                    max_supersteps: Optional[int] = None):
+    """One-call distributed run: partition, seed/activate, run to drain.
+
+    Returns (global values array, RunResult).  ``activate`` (a global
+    per-source value array) selects epoch-style activation
+    (PageRank/SPMV/Histogram); ``seed_idx``/``seed_val`` seed mailboxes
+    (BFS/SSSP/WCC).
+    """
+    eng = DistributedEngine(app, cfg, row_lo, row_hi, col_idx, weights,
+                            part=part, num_chips=chips, backend=backend)
+    state = eng.init_state(seed_idx=seed_idx, seed_val=seed_val,
+                           values=values)
+    if activate is not None:
+        state = eng.activate_all(state, activate)
+    state, run = eng.run(state, max_supersteps)
+    return state["values"], run

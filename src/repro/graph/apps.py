@@ -91,10 +91,23 @@ def _mk_cfg(grid: TileGrid, n_src: int, n_dst: int,
     return EngineConfig(grid=grid, n_src=n_src, n_dst=n_dst, proxy=proxy, **kw)
 
 
+def _build(spec: AppSpec, cfg: EngineConfig, row_lo, row_hi, col_idx,
+           weights, chips: int, backend: str):
+    """Monolithic engine, or the distributed runtime when ``chips > 1``
+    (same init_state/activate_all/run interface either way)."""
+    if chips and chips > 1:
+        from ..distrib.driver import DistributedEngine
+        return DistributedEngine(spec, cfg, row_lo, row_hi, col_idx,
+                                 weights, num_chips=chips, backend=backend)
+    return DataLocalEngine(spec, cfg, row_lo, row_hi, col_idx, weights)
+
+
 def _engine(spec: AppSpec, g: CSR, grid: TileGrid,
-            proxy: Optional[ProxyConfig], **kw) -> DataLocalEngine:
+            proxy: Optional[ProxyConfig], chips: int = 0,
+            backend: str = "auto", **kw):
     cfg = _mk_cfg(grid, g.n_rows, g.n_cols, proxy, **kw)
-    return DataLocalEngine(spec, cfg, g.row_lo, g.row_hi, g.col_idx, g.weights)
+    return _build(spec, cfg, g.row_lo, g.row_hi, g.col_idx, g.weights,
+                  chips, backend)
 
 
 # ---------------------------------------------------------------- traversals
@@ -173,9 +186,11 @@ def spmv(a: CSR, x: np.ndarray, grid: TileGrid,
     A^T's CSR, which is A's CSC.  This is the paper's formulation: the
     reduction onto y rows is the proxied task."""
     at = transpose_csr(a)                      # rows of at = columns of a
+    chips = kw.pop("chips", 0)
+    backend = kw.pop("backend", "auto")
     cfg = _mk_cfg(grid, at.n_rows, a.n_rows, proxy, **kw)
-    eng = DataLocalEngine(SPMV_SPEC, cfg, at.row_lo, at.row_hi,
-                          at.col_idx, at.weights)
+    eng = _build(SPMV_SPEC, cfg, at.row_lo, at.row_hi, at.col_idx,
+                 at.weights, chips, backend)
     state = eng.init_state()
     state = eng.activate_all(state, np.asarray(x, np.float32))
     state, run = eng.run(state)
@@ -191,8 +206,11 @@ def histogram(values: np.ndarray, bins: int, grid: TileGrid,
     m = values.shape[0]
     row_lo = np.arange(m, dtype=np.int32)
     row_hi = row_lo + 1
+    chips = kw.pop("chips", 0)
+    backend = kw.pop("backend", "auto")
     cfg = _mk_cfg(grid, m, bins, proxy, **kw)
-    eng = DataLocalEngine(HISTO_SPEC, cfg, row_lo, row_hi, values, None)
+    eng = _build(HISTO_SPEC, cfg, row_lo, row_hi, values, None, chips,
+                 backend)
     state = eng.init_state()
     state = eng.activate_all(state, np.ones(m, np.float32))
     state, run = eng.run(state)

@@ -17,6 +17,42 @@ def test_murphy_yield_monotone():
     assert all(a >= b for a, b in zip(ys, ys[1:]))
 
 
+def test_murphy_yield_bounds_dense_sweep():
+    """murphy_yield stays in (0, 1] and strictly decreases with area
+    across the whole plausible die-size range (0 -> perfect yield)."""
+    assert murphy_yield(0.0) == 1.0
+    areas = np.linspace(1.0, 2000.0, 200)
+    ys = np.array([murphy_yield(a) for a in areas])
+    assert np.all((ys > 0) & (ys <= 1))
+    assert np.all(np.diff(ys) < 0)
+
+
+def test_dies_per_wafer_and_die_cost_monotone():
+    """Bigger dies: strictly fewer candidates per wafer, strictly higher
+    unit cost (yield superlinearity on top of area)."""
+    areas = [25, 50, 100, 200, 400, 800]
+    dpw = [dies_per_wafer(a) for a in areas]
+    assert all(d >= 1.0 for d in dpw)
+    assert all(a > b for a, b in zip(dpw, dpw[1:]))
+    costs = [die_cost(a) for a in areas]
+    assert all(c > 0 for c in costs)
+    assert all(a < b for a, b in zip(costs, costs[1:]))
+
+
+def test_price_deterministic_across_calls():
+    """price() is pure: identical inputs give bit-identical reports on
+    repeated calls (the benchmarks diff runs across commits)."""
+    g = square_grid(1024)
+    c = _counters()
+    reps = [price(DCRA_HBM_HORIZ, g, c, mem_bits_sram=1e9,
+                  mem_bits_hbm=1e10) for _ in range(3)]
+    for r in reps[1:]:
+        assert r.time_s == reps[0].time_s
+        assert r.energy_j == reps[0].energy_j
+        assert r.cost_usd == reps[0].cost_usd
+        assert r.breakdown == reps[0].breakdown
+
+
 def test_paper_die_size_yield_claim():
     """Paper §V-A: a 32x32-tile die (~27x25mm) yields far fewer good dies
     per wafer than 16x16 dies (paper: "62% less")."""
