@@ -9,6 +9,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np                                    # noqa: E402
 
+from repro.core.costmodel import D_CACHE_HIT          # noqa: E402,F401
+from repro.core.netstats import MSG_BITS              # noqa: E402,F401
+
 SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "1"))
 
 

@@ -5,14 +5,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from common import dataset, row
+from common import MSG_BITS, dataset, row
 
-from repro.core.costmodel import DCRA_HBM_HORIZ, DCRA_SRAM, price
+from repro.core.costmodel import (DCRA_HBM_HORIZ, DCRA_SRAM,
+                                  dcache_memory_bits, price)
 from repro.core.proxy import ProxyConfig
 from repro.core.tilegrid import square_grid
 from repro.graph import apps
-
-D_CACHE_HIT = 0.85
 
 
 def run(small: bool = True):
@@ -25,17 +24,12 @@ def run(small: bool = True):
         px = ProxyConfig(max(grid.ny // 4, 2), max(grid.nx // 4, 2),
                          slots=512)
         r = apps.sssp(g, root, grid, proxy=px, oq_cap=32, pkg=pkg)
-        touched = (r.run.counters.edges_processed * 64
-                   + r.run.counters.records_consumed * 64)
-        if pkg.has_hbm:
-            hbm = (1 - D_CACHE_HIT) * touched * 8
-            sram = touched
-        else:
-            hbm = 0.0
-            sram = touched
+        touched = (r.run.counters.edges_processed * MSG_BITS
+                   + r.run.counters.records_consumed * MSG_BITS)
+        sram, hbm = dcache_memory_bits(pkg, touched)
         rep = price(pkg, grid, r.run.counters, mem_bits_sram=sram,
                     mem_bits_hbm=hbm,
-                    per_superstep_peak=dict(time_s=r.run.time_s))
+                    per_superstep_peak=r.run.trace)
         tot = max(sum(v for k, v in rep.breakdown.items()
                       if k.endswith("_j")), 1e-12)
         pct = {k: 100 * v / tot for k, v in rep.breakdown.items()

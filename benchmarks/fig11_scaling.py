@@ -72,11 +72,11 @@ def run(small: bool = True, chips: int = 0):
                 ops = (r.run.counters.edges_processed
                        + r.run.counters.records_consumed)
                 thr = ops / t
-                membw = (ops * 64 + r.run.counters.hop_msgs * _MB) / t / 8
+                membw = (ops * _MB + r.run.counters.hop_msgs * _MB) / t / 8
                 bits = float(g.footprint_bytes() * 8)
                 rep = price(DCRA_SRAM, grid, r.run.counters,
                             mem_bits_sram=bits,
-                            per_superstep_peak=dict(time_s=t))
+                            per_superstep_peak=r.run.trace)
                 out[(app_name + suffix, n_tiles)] = dict(
                     gteps=gteps, thr=thr,
                     xregion=r.run.counters.cross_region_msgs,

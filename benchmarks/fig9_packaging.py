@@ -10,16 +10,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from common import dataset, row
+from common import MSG_BITS, dataset, row
 
 from repro.core.costmodel import (DALOREX, DCRA_HBM_HORIZ, DCRA_HBM_VERT,
-                                  DCRA_SRAM, HBM_CHANNELS, HBM_CHANNEL_GBS,
-                                  price)
+                                  DCRA_SRAM, dcache_memory_bits, price)
 from repro.core.proxy import ProxyConfig
 from repro.core.tilegrid import square_grid
 from repro.graph import apps
-
-D_CACHE_HIT = 0.85        # modeled D$ hit rate (paper: "high enough")
 
 
 def run(small: bool = True):
@@ -42,29 +39,25 @@ def run(small: bool = True):
     r_dal = apps.sssp(g, root, big, proxy=None, oq_cap=32, pkg=DALOREX)
     r_tiny = run_on(tiny, DCRA_HBM_HORIZ)
 
-    touched = (r_tiny.run.counters.edges_processed * 64
-               + r_tiny.run.counters.records_consumed * 64)
-    hbm_bits = (1 - D_CACHE_HIT) * touched * 8     # 512b line per miss
+    touched = (r_tiny.run.counters.edges_processed * MSG_BITS
+               + r_tiny.run.counters.records_consumed * MSG_BITS)
 
     reports = {}
     reports["dalorex"] = price(DALOREX, big, r_dal.run.counters,
                                mem_bits_sram=bits,
-                               per_superstep_peak=dict(
-                                   time_s=r_dal.run.time_s))
+                               per_superstep_peak=r_dal.run.trace)
     reports["dcra-sram"] = price(DCRA_SRAM, big, r_big.run.counters,
                                  mem_bits_sram=bits,
-                                 per_superstep_peak=dict(
-                                     time_s=r_big.run.time_s))
+                                 per_superstep_peak=r_big.run.trace)
     for name, pkg in (("dcra-hbm-horiz", DCRA_HBM_HORIZ),
                       ("dcra-hbm-vert", DCRA_HBM_VERT)):
-        dy, dx = tiny.dies
-        t_hbm = (hbm_bits / 8) / (dy * dx * HBM_CHANNELS
-                                  * HBM_CHANNEL_GBS * 1e9)
-        t = max(r_tiny.run.time_s, t_hbm)
+        # shared D$ policy; price() folds the HBM drain into the
+        # per-superstep BSP max
+        sram_bits, hbm_bits = dcache_memory_bits(pkg, touched)
         reports[name] = price(pkg, tiny, r_tiny.run.counters,
-                              mem_bits_sram=touched * (1 - 0.15),
+                              mem_bits_sram=sram_bits,
                               mem_bits_hbm=hbm_bits,
-                              per_superstep_peak=dict(time_s=t))
+                              per_superstep_peak=r_tiny.run.trace)
 
     base = reports["dalorex"]
     out = {}

@@ -1,0 +1,153 @@
+"""Package-time product search: Fig. 9/10 tradeoff curves from a swept
+design space (measure-once / price-many).
+
+Each (app, cascade level/grouping) combination runs the engine once; the
+per-superstep counter vectors are cached on disk (JSON keyed by a spec
+hash), then re-priced analytically across the packaging cross-product
+(SRAM / HBM-horiz / HBM-vert x network options a-d x SRAM-per-tile
+sizes).  Cascade legs (``cross_region_msgs``, ``cascade_combined``) are
+part of the measured traffic, so their energy and time land in every
+priced product.  The output is the Fig. 9-style product table plus the
+Pareto front and the per-objective product selection — the paper's
+claim that one silicon design yields differently-optimal chip products
+post-silicon.
+
+    --small (default)  2 apps (sssp, spmv +-cascade) at 4096 tiles
+    --full             sssp/spmv/histo at 4096 & 16384 tiles, cascade
+                       level/grouping sweep, 3 SRAM sizes
+    --smoke            tiny grid, 2 package configs, cached-counter
+                       round-trip assertion (CI)
+
+Counters are cached under ``--cache-dir`` (default
+``benchmarks/.cache/products``); delete the directory to force
+re-measurement.
+"""
+from __future__ import annotations
+
+import os
+
+from common import row
+
+from repro.core.proxy import max_cascade_levels
+from repro.core.tilegrid import square_grid
+from repro.products import (FULL_SRAM_MIB, MeasureSpec, ProductSearch,
+                            pareto_front, product_space, select_products)
+
+DEFAULT_CACHE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             ".cache", "products")
+
+
+def _cascade_sweep(app: str, tiles: int, levels, groups,
+                   region_div: int = 4):
+    """Specs for one app's cascade level/grouping sweep on ``tiles``,
+    keeping only well-formed reduction trees (plus the no-cascade base).
+    ``region_div`` must match the MeasureSpec the depths are used with
+    (same base-region formula as ``apps.table2_proxy``)."""
+    grid = square_grid(tiles)
+    region_ny = max(grid.ny // region_div, 2)
+    region_nx = max(grid.nx // region_div, 2)
+    specs = []
+    for group in groups:
+        for lv in levels:
+            if lv == 0:
+                continue
+            if lv <= max_cascade_levels(grid.ny, grid.nx, region_ny,
+                                        region_nx, group, group):
+                specs.append((lv, group))
+    return specs
+
+
+def _specs(small: bool, scale_bump: int = 0):
+    if small:
+        scale = 13 + scale_bump
+        return [
+            MeasureSpec(app="sssp", scale=scale, tiles=4096),
+            MeasureSpec(app="spmv", scale=scale, tiles=4096),
+            MeasureSpec(app="spmv", scale=scale, tiles=4096,
+                        cascade_levels=2),
+        ]
+    specs = []
+    for tiles in (4096, 16384):
+        scale = (15 if tiles == 4096 else 16) + scale_bump
+        for app in ("sssp", "spmv", "histo"):
+            specs.append(MeasureSpec(app=app, scale=scale, tiles=tiles))
+            if app in ("spmv", "histo"):     # write-back: cascade profits
+                for lv, group in _cascade_sweep(app, tiles, (1, 2), (2, 4)):
+                    specs.append(MeasureSpec(app=app, scale=scale,
+                                             tiles=tiles, cascade_levels=lv,
+                                             cascade_group=group))
+    return specs
+
+
+def _emit(rows, search: ProductSearch):
+    for r in rows:
+        row(f"product/{r['measurement']}/{r['product']}",
+            r["time_s"] * 1e6,
+            f"energy_j={r['energy_j']:.3e};cost=${r['cost_usd']:.0f};"
+            f"thr_per_$={r['thr_per_usd']:.3g};"
+            f"eff_per_$={r['eff_per_usd']:.3g};"
+            f"cascade_combined={r['cascade_combined']:.0f};"
+            f"cached={int(r['from_cache'])}")
+    by_meas = {}
+    for r in rows:
+        by_meas.setdefault(r["measurement"], []).append(r)
+    for meas, group in by_meas.items():
+        front = pareto_front(group)
+        names = "|".join(sorted(r["product"] for r in front))
+        row(f"product/pareto/{meas}", len(front), f"front={names}")
+        sel = select_products(group)
+        picks = ";".join(f"{obj}={r['product']}"
+                         for obj, r in sel.items())
+        row(f"product/select/{meas}", len(group), picks)
+    print(f"# product_search: {len(rows)} priced rows from "
+          f"{search.engine_runs} engine runs "
+          f"({len(by_meas)} measurements)", flush=True)
+
+
+def run(small: bool = True, cache_dir: str = DEFAULT_CACHE):
+    search = ProductSearch(cache_dir=cache_dir)
+    sram = (1.5,) if small else FULL_SRAM_MIB
+    configs = product_space(sram_mib=sram)
+    rows = search.sweep(_specs(small), configs)
+    _emit(rows, search)
+    return rows
+
+
+def smoke(cache_dir: str = DEFAULT_CACHE) -> None:
+    """CI smoke: tiny grid, 2 package configs, cache round-trip."""
+    search = ProductSearch(cache_dir=cache_dir)
+    specs = [MeasureSpec(app="sssp", scale=8, tiles=64),
+             MeasureSpec(app="histo", scale=8, tiles=64,
+                         cascade_levels=1)]
+    configs = product_space(memory=("sram",),
+                            network=("a_2x32_od32", "d_32+64_od64"))
+    rows1 = search.sweep(specs, configs)
+    runs_after_first = search.engine_runs
+    rows2 = search.sweep(specs, configs)    # must be pure cache hits
+    assert search.engine_runs == runs_after_first, \
+        "second sweep re-ran the engine despite cached counters"
+    assert all(r["from_cache"] for r in rows2), "cache round-trip failed"
+    for r1, r2 in zip(rows1, rows2):
+        assert r1["time_s"] == r2["time_s"], (r1, r2)
+        assert r1["energy_j"] == r2["energy_j"], (r1, r2)
+    # the re-pricing contract: option (a)'s narrower links can never beat
+    # option (d) on the same measured traffic
+    for meas in {r["measurement"] for r in rows2}:
+        t = {r["product"]: r["time_s"] for r in rows2
+             if r["measurement"] == meas}
+        assert t["sram/net-a/sram1.5"] >= t["sram/net-d/sram1.5"], t
+    _emit(rows2, search)
+    print("# product_search smoke: OK", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--cache-dir", default=DEFAULT_CACHE)
+    a = ap.parse_args()
+    if a.smoke:
+        smoke(cache_dir=a.cache_dir)
+    else:
+        run(small=not a.full, cache_dir=a.cache_dir)

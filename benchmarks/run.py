@@ -20,6 +20,7 @@ MODULES = [
     ("fig9_packaging", "Fig. 9  packaging: thr/$ & eff/$"),
     ("fig10_energy", "Fig. 10 energy breakdown"),
     ("fig11_scaling", "Fig. 11 strong scaling"),
+    ("product_search", "Package-time product search (measure-once/price-many)"),
     ("multichip_scaling", "Multi-chip weak/strong scaling (distributed)"),
     ("graph500_compare", "Graph500 BFS accounting + measured multi-chip"),
     ("kernels_bench", "Pallas kernel microbench"),

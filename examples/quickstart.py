@@ -39,8 +39,9 @@ print(f"traffic reduction: "
       f"{direct.run.counters.hop_msgs / proxy.run.counters.hop_msgs:.2f}x")
 
 for pkg in (DCRA_SRAM, DCRA_HBM_HORIZ):
+    # per-superstep trace: BSP time is recomputed under *each* package
     rep = price(pkg, grid, proxy.run.counters,
                 mem_bits_sram=graph.footprint_bytes() * 8,
-                per_superstep_peak=dict(time_s=proxy.run.time_s))
+                per_superstep_peak=proxy.run.trace)
     print(f"{pkg.name:16s} time={rep.time_s*1e6:8.1f}us "
           f"energy={rep.energy_j*1e3:7.3f}mJ cost=${rep.cost_usd:8.0f}")

@@ -19,9 +19,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Union
 
-from .netstats import MSG_BITS, TrafficCounters
+import numpy as np
+
+from .netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from .tilegrid import TileGrid
 
 # --------------------------------------------------------------------------
@@ -57,6 +59,25 @@ OFF_PKG_PJ_BIT = 1.17
 CLOCK_GHZ = 1.0
 TILE_WIRE_MM = 0.8          # wire length of one tile-to-tile NoC hop
 
+# Modeled D$ hit rate on touched dataset memory (paper: "high enough");
+# the canonical value — benchmarks and the product search import it from
+# here so the modeled rate cannot drift between figures.
+D_CACHE_HIT = 0.85
+HBM_LINE_BITS = 512         # D$ line fill per miss
+
+
+def dcache_memory_bits(cfg: "PackageConfig", touched_bits: float,
+                       hit_rate: float = D_CACHE_HIT):
+    """Split touched dataset bits into (sram_bits, hbm_bits) under the
+    modeled D$: hits are SRAM accesses; on HBM products each missed
+    record additionally fetches a full HBM line.  The single memory
+    policy every pricing site shares (Fig. 9, Fig. 10, product search).
+    """
+    if cfg.has_hbm:
+        return (touched_bits * hit_rate,
+                (1.0 - hit_rate) * touched_bits * (HBM_LINE_BITS / MSG_BITS))
+    return touched_bits, 0.0
+
 # Fabrication economics (§IV-B)
 WAFER_COST_USD = 6047.0     # 300mm, 7nm
 WAFER_DIAMETER_MM = 300.0
@@ -89,7 +110,10 @@ class PackageConfig:
     intra_die_link_bits: int = 64          # NoC link width inside a die
     inter_die_link_bits: int = 64          # substrate links between dies
     inter_die_links: int = 2               # paper's option (c): 2x32-bit
-    off_pkg_gbs_per_die_edge: float = 512.0  # I/O die budget per border die
+    # I/O-die budget per border die.  The BSP time model serializes each
+    # off-package/board link at this value in *bits per tile-clock cycle*
+    # (at 1 GHz: numerically Gbit/s per link; 512 = 64 GB/s).
+    off_pkg_gbs_per_die_edge: float = 512.0
     noc_count: int = 2                     # physical NoCs
 
     @property
@@ -201,18 +225,166 @@ def system_cost_usd(cfg: PackageConfig, grid: TileGrid) -> float:
     return cost
 
 
+# --------------------------------------------------------------------------
+# BSP time model (shared by the engine run loops and analytic re-pricing)
+# --------------------------------------------------------------------------
+def link_provisioning(grid: TileGrid, pkg: PackageConfig) -> dict:
+    """Per-level link counts + grid diameter for the BSP time model.
+
+    Intra-die capacity scales with the number of physical NoCs (the
+    paper's dual-NoC tile: ``noc_count=2`` is the default provisioning of
+    4 links/tile, so existing configs are unchanged).
+    """
+    dy, dx = grid.dies
+    n_die_links = (dy * (dx - 1) + dx * (dy - 1)) * 2 * pkg.inter_die_links \
+        if dy * dx > 1 else 1
+    py, px = grid.packages
+    n_pkg_links = max(1, (py * (px - 1) + px * (py - 1)) * 2)
+    return dict(intra=grid.num_tiles * 2 * pkg.noc_count, die=n_die_links,
+                pkg=n_pkg_links,
+                diameter=(grid.ny + grid.nx) / (2 if grid.torus else 1))
+
+
+def _off_pkg_bits_per_cycle(cfg: PackageConfig) -> float:
+    # The BSP model serializes off-package/board links at the IO-die
+    # budget expressed in bits/cycle at the 1 GHz tile clock (default 512).
+    return float(cfg.off_pkg_gbs_per_die_edge)
+
+
+def step_cycles(cfg: PackageConfig, links: dict, *, compute_ops,
+                intra_bits, die_bits, pkg_bits, endpoint_bits=0.0,
+                hbm_bits=0.0, off_chip_bits=0.0, board_links=1,
+                n_dies=1):
+    """BSP cycles of superstep(s): max over (tile compute, per-level
+    network serialization, endpoint contention, HBM drain, board leg).
+    Works elementwise on scalars or per-superstep numpy vectors."""
+    t = np.maximum(np.asarray(compute_ops, dtype=np.float64),
+                   np.asarray(intra_bits, np.float64)
+                   / (links["intra"] * cfg.intra_die_link_bits))
+    t = np.maximum(t, np.asarray(die_bits, np.float64)
+                   / (links["die"] * cfg.inter_die_link_bits))
+    t = np.maximum(t, np.asarray(pkg_bits, np.float64)
+                   / (links["pkg"] * _off_pkg_bits_per_cycle(cfg)))
+    t = np.maximum(t, np.asarray(endpoint_bits, np.float64)
+                   / cfg.intra_die_link_bits)
+    t = np.maximum(t, np.asarray(off_chip_bits, np.float64)
+                   / (max(board_links, 1) * _off_pkg_bits_per_cycle(cfg)))
+    # HBM drain: miss traffic served by the package's HBM channels,
+    # converted to tile-clock cycles.
+    hbm = np.asarray(hbm_bits, np.float64)
+    if cfg.has_hbm and np.any(hbm > 0):
+        hbm_bytes_per_cycle = (n_dies * HBM_CHANNELS * HBM_CHANNEL_GBS * 1e9
+                               / (CLOCK_GHZ * 1e9))
+        t = np.maximum(t, hbm / 8.0 / hbm_bytes_per_cycle)
+    return t
+
+
+# ``per_superstep_peak`` keys understood by :func:`price` (beyond the
+# legacy whole-run {'time_s': ...} shortcut).
+TRACE_KEYS = ("compute_ops", "intra_bits", "die_bits", "pkg_bits",
+              "hbm_bits")
+
+
+def _trace_from_peak(peak) -> tuple:
+    """Normalize price()'s per_superstep_peak argument.
+
+    Returns (trace_dict, hbm_bits_or_None) where trace_dict maps vector
+    names to numpy arrays, or (None, None) when the argument is the
+    legacy {'time_s': t} form (or None).
+    """
+    if peak is None:
+        return None, None
+    if isinstance(peak, SuperstepTrace):
+        d = peak.to_dict()
+    else:
+        d = dict(peak)
+        if not any(k in d for k in TRACE_KEYS):
+            return None, None       # legacy {'time_s': ...}
+    n = max((len(np.atleast_1d(d[k])) for k in d
+             if k in SuperstepTrace._VECTOR_FIELDS + ("hbm_bits",)),
+            default=0)
+    if n == 0:
+        return None, None
+
+    def vec(key, default=0.0):
+        v = np.atleast_1d(np.asarray(d.get(key, default), np.float64))
+        return np.broadcast_to(v, (n,)) if v.shape[0] != n else v
+
+    trace = {k: vec(k) for k in SuperstepTrace._VECTOR_FIELDS}
+    trace["board_links"] = int(d.get("board_links", 1))
+    hbm = vec("hbm_bits") if "hbm_bits" in d else None
+    return trace, hbm
+
+
+def trace_time_s(cfg: PackageConfig, grid: TileGrid, trace,
+                 mem_bits_hbm: float = 0.0) -> float:
+    """Recompute BSP time superstep-wise from recorded level traffic.
+
+    ``trace`` is a :class:`~repro.core.netstats.SuperstepTrace` or a dict
+    of per-superstep vectors (scalars broadcast).  This replays the run
+    loop's time accounting exactly — per-step level maxima, pipeline-fill
+    per active step, IO-die latency per off-chip step — but under an
+    arbitrary :class:`PackageConfig`, which is what makes a measured run
+    re-priceable across a package design space.
+    """
+    td, hbm_bits = _trace_from_peak(trace)
+    if td is None:
+        raise ValueError("trace has no per-superstep level-traffic keys")
+    return _trace_time_s_parsed(cfg, grid, td, hbm_bits, mem_bits_hbm)
+
+
+def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
+                         mem_bits_hbm: float) -> float:
+    if hbm_bits is None:
+        # Apportion the run's total HBM miss traffic across supersteps
+        # proportionally to touched dataset bits.
+        hbm_bits = np.zeros(len(td["compute_ops"]))
+        if cfg.has_hbm and mem_bits_hbm > 0:
+            touched = td["touched_bits"]
+            tot = float(np.sum(touched))
+            if tot > 0:
+                hbm_bits = mem_bits_hbm * touched / tot
+            else:
+                hbm_bits = np.full_like(touched,
+                                        mem_bits_hbm / max(len(touched), 1))
+    links = link_provisioning(grid, cfg)
+    dy, dx = grid.dies
+    t = step_cycles(cfg, links, compute_ops=td["compute_ops"],
+                    intra_bits=td["intra_bits"], die_bits=td["die_bits"],
+                    pkg_bits=td["pkg_bits"],
+                    endpoint_bits=td["endpoint_bits"], hbm_bits=hbm_bits,
+                    off_chip_bits=td["off_chip_bits"],
+                    board_links=td["board_links"], n_dies=dy * dx)
+    charged = (t > 0) | (td["pending"] > 0)
+    cycles = float(np.sum(t[charged]))
+    cycles += float(np.sum(charged)) * links["diameter"] * 0.5
+    io_steps = charged & (td["off_chip_msgs"] > 0)
+    cycles += float(np.sum(io_steps)) * 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ
+    return cycles / (CLOCK_GHZ * 1e9)
+
+
 def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
           mem_bits_sram: float = 0.0, mem_bits_hbm: float = 0.0,
-          per_superstep_peak: Dict[str, float] | None = None) -> SystemReport:
+          per_superstep_peak: Union[SuperstepTrace, Dict[str, float],
+                                    None] = None) -> SystemReport:
     """Convert measured traffic into (time, energy, $) under a package config.
 
     Args:
       counters: whole-run accumulated counters from the engine.
       mem_bits_sram / mem_bits_hbm: dataset bits read+written locally.
-      per_superstep_peak: optional dict with peak per-superstep level
-        traffic {'compute_ops', 'intra_bits', 'die_bits', 'pkg_bits',
-        'hbm_bits'}; when provided, time is summed superstep-wise by the
-        engine instead (preferred); this function then only prices energy/$.
+      per_superstep_peak: optional per-superstep level traffic — a
+        :class:`~repro.core.netstats.SuperstepTrace` (what
+        ``RunResult.trace`` carries) or a dict with vectors/scalars for
+        {'compute_ops', 'intra_bits', 'die_bits', 'pkg_bits',
+        'hbm_bits'} (plus the optional trace extras: 'endpoint_bits',
+        'off_chip_bits', 'off_chip_msgs', 'touched_bits', 'pending',
+        'board_links').  When provided, time is recomputed superstep-wise
+        under *this* config — the BSP max per superstep with this
+        config's link widths/counts, NoC count and HBM channels — so the
+        same measured run can be re-priced across package configs.  When
+        'hbm_bits' is absent it is derived from ``mem_bits_hbm``
+        apportioned over 'touched_bits'.  The legacy ``{'time_s': t}``
+        form is still accepted and uses ``t`` unchanged.
     """
     bits = MSG_BITS
     # ------------------------------------------------------------- energy
@@ -242,10 +414,20 @@ def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
                  + e_pu + e_tags)
 
     # --------------------------------------------------------------- time
-    if per_superstep_peak is not None:
+    trace_dict, hbm_vec = _trace_from_peak(per_superstep_peak)
+    time_s = None
+    if trace_dict is not None:
+        # the documented contract: recompute the BSP time superstep-wise
+        # from recorded level traffic under *this* package config
+        time_s = _trace_time_s_parsed(cfg, grid, trace_dict, hbm_vec,
+                                      mem_bits_hbm)
+    elif (per_superstep_peak is not None
+          and not isinstance(per_superstep_peak, SuperstepTrace)
+          and "time_s" in per_superstep_peak):
         time_s = per_superstep_peak["time_s"]
-    else:
-        # fall back: aggregate roofline over the whole run
+    if time_s is None:
+        # fall back: aggregate roofline over the whole run (also the
+        # path for an empty trace — a run that recorded no supersteps)
         n_tiles = grid.num_tiles
         compute_s = ops / n_tiles / (CLOCK_GHZ * 1e9)
         dy, dx = grid.dies
@@ -255,7 +437,7 @@ def price(cfg: PackageConfig, grid: TileGrid, counters: TrafficCounters,
         die_links = (dy * dx) * 2 * cfg.inter_die_links
         die_bw = cfg.inter_die_link_bits * CLOCK_GHZ * 1e9
         pkg_links = max(1, grid.num_packages) * 4
-        pkg_bw = cfg.off_pkg_gbs_per_die_edge * 8e9 / 16.0
+        pkg_bw = _off_pkg_bits_per_cycle(cfg) * CLOCK_GHZ * 1e9  # bit/s
         t_intra = counters.intra_die_hops * bits / (intra_links * intra_bw)
         t_die = counters.inter_die_crossings * bits / (max(die_links, 1) * die_bw)
         t_pkg = counters.inter_pkg_crossings * bits / (max(pkg_links, 1) * pkg_bw)

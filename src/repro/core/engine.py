@@ -58,8 +58,8 @@ import numpy as np
 from . import netstats
 from .costmodel import (CLOCK_GHZ, HBM_CHANNEL_GBS, HBM_CHANNELS,
                         PU_OPS_PER_EDGE, PU_OPS_PER_RECORD, DCRA_SRAM,
-                        PackageConfig)
-from .netstats import MSG_BITS, TrafficCounters
+                        PackageConfig, link_provisioning, step_cycles)
+from .netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from .proxy import (ProxyConfig, cascade_proxy_tile, make_pcache,
                     pcache_slot, proxy_tile)
 from .tilegrid import ChipPartition, TileGrid
@@ -662,6 +662,7 @@ class DataLocalEngine:
         cfg = self.cfg
         maxs = max_supersteps or cfg.max_supersteps
         counters = TrafficCounters()
+        trace = SuperstepTrace()
         cycles = 0.0
         write_back = cfg.proxy is not None and cfg.proxy.write_back
         steps = 0
@@ -674,6 +675,7 @@ class DataLocalEngine:
             stats = jax.device_get(stats)
             steps += 1
             counters.add(superstep_counters(stats))
+            trace.append_step(stats, element_bits=cfg.element_bits)
             # ---- BSP time model for this superstep ------------------------
             step_cycles = superstep_cycles(stats, pkg, links)
             if step_cycles > 0 or stats["pending"] > 0:
@@ -694,7 +696,7 @@ class DataLocalEngine:
         counters.supersteps = steps
         time_s = cycles / (CLOCK_GHZ * 1e9)
         return state, RunResult(counters=counters, cycles=cycles, time_s=time_s,
-                                supersteps=steps)
+                                supersteps=steps, trace=trace)
 
 
 @dataclasses.dataclass
@@ -703,6 +705,9 @@ class RunResult:
     cycles: float
     time_s: float
     supersteps: int
+    # per-superstep level-traffic record: what makes the run re-priceable
+    # under other package configs (costmodel.price(per_superstep_peak=...))
+    trace: Optional[SuperstepTrace] = None
 
 
 def superstep_counters(stats) -> TrafficCounters:
@@ -726,30 +731,20 @@ def superstep_counters(stats) -> TrafficCounters:
         records_consumed=stats["records_consumed"], supersteps=1)
 
 
-def link_provisioning(grid: TileGrid, pkg) -> dict:
-    """Per-level link counts + grid diameter for the BSP time model."""
-    dy, dx = grid.dies
-    n_die_links = (dy * (dx - 1) + dx * (dy - 1)) * 2 * pkg.inter_die_links \
-        if dy * dx > 1 else 1
-    py, px = grid.packages
-    n_pkg_links = max(1, (py * (px - 1) + px * (py - 1)) * 2)
-    return dict(intra=grid.num_tiles * 4, die=n_die_links, pkg=n_pkg_links,
-                diameter=(grid.ny + grid.nx) / (2 if grid.torus else 1))
-
-
 def superstep_cycles(stats, pkg, links: dict) -> float:
     """BSP cycles of one superstep: max over (tile compute, per-level
     network serialization, endpoint contention).  The distributed runtime
-    maxes the board-level leg on top of this."""
+    maxes the board-level leg on top of this.  (Thin wrapper around
+    ``costmodel.step_cycles`` so the run loops and analytic re-pricing
+    cannot drift; ``link_provisioning`` also lives in costmodel now.)"""
     bits = MSG_BITS
-    t_compute = stats["compute_per_tile_max"]          # PU ops (1/cycle)
-    t_intra = stats["intra_die_hops"] * bits / (
-        links["intra"] * pkg.intra_die_link_bits)
-    t_die = stats["inter_die_crossings"] * bits / (
-        links["die"] * pkg.inter_die_link_bits)
-    t_pkg = stats["inter_pkg_crossings"] * bits / (links["pkg"] * 512.0)
-    t_end = stats["delivered_max_per_tile"] * bits / pkg.intra_die_link_bits
-    return max(t_compute, t_intra, t_die, t_pkg, t_end)
+    return float(step_cycles(
+        pkg, links,
+        compute_ops=float(stats["compute_per_tile_max"]),
+        intra_bits=float(stats["intra_die_hops"]) * bits,
+        die_bits=float(stats["inter_die_crossings"]) * bits,
+        pkg_bits=float(stats["inter_pkg_crossings"]) * bits,
+        endpoint_bits=float(stats["delivered_max_per_tile"]) * bits))
 
 
 def _deliver(mail_val, mail_flag, dst, val, mask, owner, T, Nd, is_min):

@@ -16,7 +16,7 @@ arbiter.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List
 
 import jax.numpy as jnp
 import numpy as np
@@ -67,6 +67,88 @@ class TrafficCounters:
         """Average hops of the owner-bound (vertex-update) messages —
         the quantity the paper's Fig. 8 (top) plots."""
         return self.owner_hop_msgs / max(self.owner_msgs, 1.0)
+
+
+@dataclasses.dataclass
+class SuperstepTrace:
+    """Per-superstep level-traffic vectors measured by the run loop.
+
+    One entry per superstep, in execution order.  This is the record that
+    makes a run *re-priceable*: ``costmodel.price`` recomputes the BSP
+    time superstep-wise from these vectors under an arbitrary
+    :class:`~repro.core.costmodel.PackageConfig` (different link widths /
+    counts, NoC count, HBM channels), so one measured run can be priced
+    across a whole package design space (measure-once / price-many).
+
+    Vector fields (floats, one per superstep):
+      compute_ops:   max per-tile PU ops (the BSP compute leg).
+      intra_bits:    whole-grid intra-die NoC wire bits.
+      die_bits:      inter-die (on-package substrate) crossing bits.
+      pkg_bits:      off-package crossing bits.
+      endpoint_bits: max per-tile delivered bits (endpoint contention).
+      off_chip_bits: board-level hop-weighted bits (distributed runtime).
+      off_chip_msgs: records that left their chip (IO-die latency events).
+      touched_bits:  dataset bits touched (drives the D$ miss -> HBM leg).
+      pending:       live work after the superstep (idle steps charge no
+                     pipeline fill; flush-only steps still do).
+
+    ``board_links`` is the provisioned board-link count of the partition
+    the run executed on (1 for a monolithic run).
+    """
+
+    compute_ops: List[float] = dataclasses.field(default_factory=list)
+    intra_bits: List[float] = dataclasses.field(default_factory=list)
+    die_bits: List[float] = dataclasses.field(default_factory=list)
+    pkg_bits: List[float] = dataclasses.field(default_factory=list)
+    endpoint_bits: List[float] = dataclasses.field(default_factory=list)
+    off_chip_bits: List[float] = dataclasses.field(default_factory=list)
+    off_chip_msgs: List[float] = dataclasses.field(default_factory=list)
+    touched_bits: List[float] = dataclasses.field(default_factory=list)
+    pending: List[float] = dataclasses.field(default_factory=list)
+    board_links: int = 1
+
+    _VECTOR_FIELDS = ("compute_ops", "intra_bits", "die_bits", "pkg_bits",
+                      "endpoint_bits", "off_chip_bits", "off_chip_msgs",
+                      "touched_bits", "pending")
+
+    def __len__(self) -> int:
+        return len(self.compute_ops)
+
+    def append_step(self, stats, element_bits: int = MSG_BITS) -> None:
+        """Record one superstep from the run loop's device-fetched stats."""
+        self.compute_ops.append(float(stats["compute_per_tile_max"]))
+        self.intra_bits.append(float(stats["intra_die_hops"]) * MSG_BITS)
+        self.die_bits.append(float(stats["inter_die_crossings"]) * MSG_BITS)
+        self.pkg_bits.append(float(stats["inter_pkg_crossings"]) * MSG_BITS)
+        self.endpoint_bits.append(
+            float(stats["delivered_max_per_tile"]) * MSG_BITS)
+        self.off_chip_bits.append(
+            float(stats.get("off_chip_hop_msgs", 0.0)) * MSG_BITS)
+        self.off_chip_msgs.append(float(stats.get("off_chip_msgs", 0.0)))
+        self.touched_bits.append(
+            (float(stats["edges_processed"])
+             + float(stats["records_consumed"])) * element_bits)
+        self.pending.append(float(stats["pending"]))
+
+    def extend(self, other: "SuperstepTrace") -> "SuperstepTrace":
+        """Concatenate another trace (epoch-style apps accumulate runs)."""
+        for f in self._VECTOR_FIELDS:
+            getattr(self, f).extend(getattr(other, f))
+        self.board_links = max(self.board_links, other.board_links)
+        return self
+
+    def to_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {f: list(getattr(self, f))
+                                for f in self._VECTOR_FIELDS}
+        d["board_links"] = self.board_links
+        return d
+
+    @classmethod
+    def from_dict(cls, d) -> "SuperstepTrace":
+        t = cls(board_links=int(d.get("board_links", 1)))
+        for f in cls._VECTOR_FIELDS:
+            getattr(t, f).extend(float(v) for v in d.get(f, ()))
+        return t
 
 
 def charge(grid: TileGrid, src_tid, dst_tid, mask, region_dims=None):

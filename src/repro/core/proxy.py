@@ -136,6 +136,29 @@ class ProxyConfig:
                     f"non-divisible at this level")
 
 
+def max_cascade_levels(ny: int, nx: int, region_ny: int, region_nx: int,
+                       group_ny: int = 2, group_nx: int = 2) -> int:
+    """Deepest well-formed reduction tree on an ``ny x nx`` window.
+
+    Counts how many levels of ``group_ny x group_nx`` region grouping
+    divide the window exactly, stopping before a level's regions would
+    cover the whole window (such a level is the degenerate tree root —
+    its proxy *is* the owner tile, so it combines nothing).  Cascade
+    sweeps (the product search's per-app level/grouping exploration) use
+    this to enumerate only the depths ``validate_window`` would accept.
+    """
+    if ny % region_ny or nx % region_nx:
+        return 0
+    fit = 0
+    for level in range(1, 64):
+        rny = region_ny * group_ny ** level
+        rnx = region_nx * group_nx ** level
+        if ny % rny or nx % rnx or (rny >= ny and rnx >= nx):
+            break
+        fit = level
+    return fit
+
+
 def chip_local_proxy(cfg: ProxyConfig, sub_ny: int, sub_nx: int) -> ProxyConfig:
     """Adapt a proxy config to one chip's ``sub_ny x sub_nx`` tile window.
 

@@ -40,11 +40,12 @@ import numpy as np
 
 from ..core import collectives, netstats
 from ..core.compat import shard_map
-from ..core.costmodel import CLOCK_GHZ, IO_DIE_RXTX_LAT_NS
+from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
+                              _off_pkg_bits_per_cycle, link_provisioning)
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
-                           RunResult, _pad, link_provisioning,
-                           superstep_counters, superstep_cycles)
-from ..core.netstats import MSG_BITS, TrafficCounters
+                           RunResult, _pad, superstep_counters,
+                           superstep_cycles)
+from ..core.netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from ..core.proxy import chip_local_proxy
 from ..core.tilegrid import ChipPartition, TileGrid, partition_grid
 
@@ -344,6 +345,7 @@ class DistributedEngine:
         links = link_provisioning(cfg.grid, pkg)
         cy, cx = part.chips_y, part.chips_x
         n_board_links = max(1, (cy * (cx - 1) + cx * (cy - 1)) * 2)
+        trace = SuperstepTrace(board_links=n_board_links)
         io_lat_cycles = 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ   # Tx + Rx IO die
         step_fn = self._get_step()
 
@@ -353,9 +355,10 @@ class DistributedEngine:
             stats = jax.device_get(stats)
             steps += 1
             counters.add(superstep_counters(stats))
+            trace.append_step(stats, element_bits=cfg.element_bits)
             # ---- BSP time model: monolithic levels + the board-level leg
-            t_board = stats.get("off_chip_hop_msgs", 0.0) * MSG_BITS / (
-                n_board_links * 512.0)
+            t_board = float(stats.get("off_chip_hop_msgs", 0.0)) * MSG_BITS / (
+                n_board_links * _off_pkg_bits_per_cycle(pkg))
             step_cycles = max(superstep_cycles(stats, pkg, links), t_board)
             if step_cycles > 0 or stats["pending"] > 0:
                 cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
@@ -376,7 +379,8 @@ class DistributedEngine:
         out_state = dict(state)
         out_state["values"] = self._gather(state["values"], self.Cd)
         return out_state, RunResult(counters=counters, cycles=cycles,
-                                    time_s=time_s, supersteps=steps)
+                                    time_s=time_s, supersteps=steps,
+                                    trace=trace)
 
 
 # --------------------------------------------------------------------------

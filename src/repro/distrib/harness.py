@@ -53,7 +53,7 @@ def _measure(g, grid, chips: int, oq_cap: int, pkg: PackageConfig,
                  chips=chips, backend=backend)
     rep = price(pkg, grid, r.run.counters,
                 mem_bits_sram=float(g.footprint_bytes() * 8),
-                per_superstep_peak=dict(time_s=r.run.time_s))
+                per_superstep_peak=r.run.trace)
     c = r.run.counters
     return dict(chips=chips, tiles=grid.num_tiles, n_vertices=g.n_rows,
                 teps_edges=r.teps_edges, gteps=r.gteps,

@@ -232,3 +232,8 @@ def _accumulate(total: RunResult, run: RunResult) -> None:
     total.cycles += run.cycles
     total.time_s += run.time_s
     total.supersteps += run.supersteps
+    if run.trace is not None:
+        if total.trace is None:
+            from ..core.netstats import SuperstepTrace
+            total.trace = SuperstepTrace()
+        total.trace.extend(run.trace)

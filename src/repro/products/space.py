@@ -1,0 +1,52 @@
+"""The package-time product design space (paper §IV, Fig. 9/10).
+
+One silicon design — the DCRA die — becomes many chip *products* at
+packaging time: memory style (SRAM-only, interposer HBM, 3D-stacked
+HBM), the Fig. 6 network options (intra-die link width, inter-die link
+width x count), and SRAM capacity per tile.  ``product_space`` spans
+the cross-product as concrete :class:`PackageConfig` objects the cost
+model prices directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from ..core.costmodel import NETWORK_OPTIONS, PackageConfig
+
+# Memory integration styles (Fig. 5): name -> (hbm_gb_per_die, vertical)
+MEMORY_STYLES: Dict[str, tuple] = {
+    "sram": (0.0, False),
+    "hbm-horiz": (8.0, False),
+    "hbm-vert": (8.0, True),
+}
+
+DEFAULT_SRAM_MIB = (1.5,)
+FULL_SRAM_MIB = (0.75, 1.5, 3.0)
+
+
+def product_space(memory: Sequence[str] = tuple(MEMORY_STYLES),
+                  network: Sequence[str] = tuple(NETWORK_OPTIONS),
+                  sram_mib: Sequence[float] = DEFAULT_SRAM_MIB,
+                  ) -> List[PackageConfig]:
+    """Cross-product of package-time decisions as PackageConfigs.
+
+    Names encode the decisions (``hbm-vert/net-c/sram1.5``) so sweep
+    tables are self-describing.  Defaults give the 3 x 4 = 12-config
+    space of the paper's evaluation; pass ``sram_mib=FULL_SRAM_MIB`` for
+    the 36-config full sweep.
+    """
+    configs = []
+    for mem in memory:
+        hbm_gb, vertical = MEMORY_STYLES[mem]
+        for netkey in network:
+            net = NETWORK_OPTIONS[netkey]
+            for mib in sram_mib:
+                configs.append(dataclasses.replace(
+                    net,
+                    name=f"{mem}/net-{net.name}/sram{mib:g}",
+                    sram_per_tile_mib=mib,
+                    hbm_gb_per_die=hbm_gb,
+                    hbm_vertical=vertical,
+                ))
+    return configs

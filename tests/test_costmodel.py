@@ -125,3 +125,108 @@ def test_dalorex_narrower_links_slower():
     t_dal = price(DALOREX, g, c).time_s
     t_dcra = price(DCRA_SRAM, g, c).time_s
     assert t_dal >= t_dcra
+
+
+# --------------------------------------------------------------------------
+# per-superstep re-pricing contract (the measure-once / price-many fix)
+# --------------------------------------------------------------------------
+def _net_trace(steps=3):
+    """Synthetic per-superstep level traffic where the network dominates
+    compute, so link provisioning decides the BSP time."""
+    return dict(compute_ops=[1e3] * steps,
+                intra_bits=[4e8] * steps,
+                die_bits=[5e8] * steps,
+                pkg_bits=[0.0] * steps)
+
+
+def test_reprice_network_options_different_and_ordered():
+    """Regression for the broken contract: re-pricing the *same* counters
+    under option (a) vs (d) must give different — and correctly ordered —
+    times (the old code silently reused one time for every config)."""
+    g = square_grid(1024)
+    c = _counters()
+    t = {k: price(NETWORK_OPTIONS[k], g, c,
+                  per_superstep_peak=_net_trace()).time_s
+         for k in NETWORK_OPTIONS}
+    assert all(v > 0 for v in t.values())
+    # (a) halves both link widths vs (d): strictly slower, not equal
+    assert t["a_2x32_od32"] > t["d_32+64_od64"]
+    # wider intra-die links ((b) vs (a)) can never hurt
+    assert t["b_32+64_od32"] <= t["a_2x32_od32"]
+    # doubling inter-die links ((c) vs (b)) can never hurt
+    assert t["c_32+64_od2x32"] <= t["b_32+64_od32"]
+
+
+def test_reprice_noc_count_and_hbm_channels_live():
+    """The documented knobs beyond link widths: NoC count scales intra-die
+    capacity; an hbm_bits vector adds the HBM drain leg for HBM configs."""
+    import dataclasses
+    g = square_grid(1024)
+    c = _counters()
+    tr = dict(compute_ops=[0.0], intra_bits=[1e9], die_bits=[0.0],
+              pkg_bits=[0.0])
+    base = price(DCRA_SRAM, g, c, per_superstep_peak=tr).time_s
+    single_noc = dataclasses.replace(DCRA_SRAM, noc_count=1)
+    t1 = price(single_noc, g, c, per_superstep_peak=tr).time_s
+    # serialization doubles; the constant pipeline-fill term does not
+    assert 1.9 * base < t1 < 2.0 * base
+    hbm_tr = dict(tr, hbm_bits=[1e13])
+    t_hbm = price(DCRA_HBM_HORIZ, g, c, per_superstep_peak=hbm_tr).time_s
+    assert t_hbm > price(DCRA_HBM_HORIZ, g, c,
+                         per_superstep_peak=tr).time_s
+    # hbm_bits on a SRAM-only product has no HBM channels to drain into
+    assert price(DCRA_SRAM, g, c, per_superstep_peak=hbm_tr).time_s == \
+        pytest.approx(base)
+
+
+def test_reprice_legacy_time_s_still_honored():
+    g = square_grid(1024)
+    rep = price(DCRA_SRAM, g, _counters(),
+                per_superstep_peak=dict(time_s=1.25e-3))
+    assert rep.time_s == 1.25e-3
+
+
+def test_reprice_empty_trace_falls_back_to_roofline():
+    """A zero-superstep trace must not crash: it prices like no trace."""
+    from repro.core.netstats import SuperstepTrace
+    g = square_grid(1024)
+    c = _counters()
+    base = price(DCRA_SRAM, g, c).time_s
+    assert price(DCRA_SRAM, g, c,
+                 per_superstep_peak=SuperstepTrace()).time_s == base
+    assert price(DCRA_SRAM, g, c,
+                 per_superstep_peak=dict(compute_ops=[])).time_s == base
+
+
+def test_reprice_energy_legs_package_invariant():
+    """For fixed counters, energy legs that don't depend on the package
+    (wire, PU, tag) are identical across every product config; the HBM
+    refresh and interposer terms appear only for has_hbm configs."""
+    from repro.products import product_space
+    g = square_grid(1024)
+    c = _counters()
+    c.cascade_combined = 1e4
+    reps = {cfg.name: (cfg, price(cfg, g, c, mem_bits_sram=1e9,
+                                  per_superstep_peak=_net_trace()))
+            for cfg in product_space()}
+    base = next(iter(reps.values()))[1]
+    for cfg, rep in reps.values():
+        assert rep.breakdown["wire_j"] == base.breakdown["wire_j"]
+        assert rep.breakdown["pu_j"] == base.breakdown["pu_j"]
+        assert rep.breakdown["tags_j"] == base.breakdown["tags_j"]
+        assert rep.breakdown["ops"] == base.breakdown["ops"]
+    # same mem traffic, no HBM bits: only has_hbm configs pay refresh
+    # energy and interposer dollars
+    for name, (cfg, rep) in reps.items():
+        twin = next(r for n, (c2, r) in reps.items()
+                    if not c2.has_hbm
+                    and c2.intra_die_link_bits == cfg.intra_die_link_bits
+                    and c2.inter_die_link_bits == cfg.inter_die_link_bits
+                    and c2.inter_die_links == cfg.inter_die_links
+                    and c2.sram_per_tile_mib == cfg.sram_per_tile_mib)
+        if cfg.has_hbm:
+            assert rep.energy_j > twin.energy_j     # refresh
+            assert rep.cost_usd > twin.cost_usd     # HBM + interposer
+        else:
+            assert rep.energy_j == twin.energy_j
+            assert rep.cost_usd == twin.cost_usd

@@ -1,0 +1,139 @@
+"""Product-search subsystem: measure-once / price-many over the package
+design space (trace fidelity, counter cache, Pareto selection)."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import DCRA_SRAM, price
+from repro.core.netstats import SuperstepTrace
+from repro.core.proxy import max_cascade_levels
+from repro.core.tilegrid import square_grid
+from repro.products import (MeasureSpec, ProductSearch, pareto_front,
+                            product_space, select_products)
+
+SSSP = MeasureSpec(app="sssp", scale=8, tiles=64)
+HISTO = MeasureSpec(app="histo", scale=8, tiles=64, cascade_levels=1)
+
+
+@pytest.fixture(scope="module")
+def search(tmp_path_factory):
+    return ProductSearch(cache_dir=str(tmp_path_factory.mktemp("products")))
+
+
+@pytest.fixture(scope="module")
+def rows(search):
+    return search.sweep([SSSP, HISTO], product_space())
+
+
+def test_sweep_measures_once_prices_many(search, rows):
+    """2 specs x 12 configs -> 24 priced rows from exactly 2 engine runs."""
+    assert len(rows) == 2 * 12
+    assert search.engine_runs == 2
+    assert len({r["product"] for r in rows}) == 12
+
+
+def test_cache_round_trip_identical_pricing(search, rows):
+    """Reloading a measurement from its JSON cache entry reproduces the
+    live measurement's pricing bit-for-bit, without an engine run."""
+    runs_before = search.engine_runs
+    rows2 = search.sweep([SSSP, HISTO], product_space())
+    assert search.engine_runs == runs_before
+    assert all(r["from_cache"] for r in rows2)
+    for r1, r2 in zip(rows, rows2):
+        assert r1["product"] == r2["product"]
+        assert r1["time_s"] == r2["time_s"]
+        assert r1["energy_j"] == r2["energy_j"]
+        assert r1["cost_usd"] == r2["cost_usd"]
+
+
+def test_trace_json_round_trip(search):
+    m = search.measure(SSSP)
+    t2 = SuperstepTrace.from_dict(m.trace.to_dict())
+    assert len(t2) == len(m.trace) == m.supersteps
+    assert t2.to_dict() == m.trace.to_dict()
+
+
+def test_reprice_under_own_config_matches_measured_time(search):
+    """The re-pricing contract closes the loop: pricing a run's trace
+    under the config it was measured with reproduces the run loop's own
+    BSP time (monolithic and distributed)."""
+    m = search.measure(SSSP)       # measured under the default DCRA_SRAM
+    rep = price(DCRA_SRAM, m.grid, m.counters, per_superstep_peak=m.trace)
+    assert rep.time_s == pytest.approx(m.time_s, rel=1e-9)
+
+
+def test_reprice_distributed_trace_matches_measured_time(search):
+    spec = MeasureSpec(app="sssp", scale=8, tiles=64, chips=4)
+    m = search.measure(spec)
+    assert m.trace.board_links > 1
+    assert m.counters.off_chip_msgs > 0
+    rep = price(DCRA_SRAM, m.grid, m.counters, per_superstep_peak=m.trace)
+    assert rep.time_s == pytest.approx(m.time_s, rel=1e-9)
+
+
+def test_pareto_front_no_selected_product_dominated(rows):
+    for meas in {r["measurement"] for r in rows}:
+        group = [r for r in rows if r["measurement"] == meas]
+        front = pareto_front(group)
+        assert front
+        for f in front:
+            for r in group:
+                dominates = (r["thr_per_usd"] >= f["thr_per_usd"]
+                             and r["eff_per_usd"] >= f["eff_per_usd"]
+                             and (r["thr_per_usd"] > f["thr_per_usd"]
+                                  or r["eff_per_usd"] > f["eff_per_usd"]))
+                assert not dominates, (f, r)
+
+
+def test_select_products_optimal_per_objective(rows):
+    group = [r for r in rows if r["measurement"] == SSSP.label]
+    sel = select_products(group)
+    assert sel["time"]["time_s"] == min(r["time_s"] for r in group)
+    assert sel["energy"]["energy_j"] == min(r["energy_j"] for r in group)
+    assert sel["cost"]["cost_usd"] == min(r["cost_usd"] for r in group)
+    assert sel["throughput_per_dollar"]["thr_per_usd"] == \
+        max(r["thr_per_usd"] for r in group)
+    assert sel["efficiency_per_dollar"]["eff_per_usd"] == \
+        max(r["eff_per_usd"] for r in group)
+
+
+def test_cascade_legs_priced_into_products(search, rows):
+    """The cascade measurement's combine events reach the priced rows
+    (tag-energy leg), closing the ROADMAP's fold-into-Fig.9/10 item."""
+    casc = [r for r in rows if r["measurement"] == HISTO.label]
+    assert all(r["cascade_combined"] > 0 for r in casc)
+    m = search.measure(HISTO)
+    no_casc = search.measure(MeasureSpec(app="histo", scale=8, tiles=64))
+    assert m.counters.cascade_combined > 0
+    assert no_casc.counters.cascade_combined == 0
+
+
+def test_corrupt_cache_entry_is_a_miss(tmp_path):
+    ps = ProductSearch(cache_dir=str(tmp_path))
+    spec = MeasureSpec(app="histo", scale=7, tiles=16)
+    m = ps.measure(spec)
+    assert not m.from_cache
+    path = ps.cache.path(spec.key())
+    with open(path, "w") as f:
+        f.write("{not json")
+    m2 = ps.measure(spec)
+    assert not m2.from_cache          # re-measured, not crashed
+    assert ps.engine_runs == 2
+    assert ps.measure(spec).from_cache
+
+
+def test_max_cascade_levels():
+    # 8x8 window, 2x2 base regions, 2x2 grouping: level 1 = 4x4 fits;
+    # level 2 = 8x8 is the degenerate whole-window root -> depth 1
+    assert max_cascade_levels(8, 8, 2, 2) == 1
+    assert max_cascade_levels(16, 16, 2, 2) == 2
+    assert max_cascade_levels(16, 16, 2, 2, 4, 4) == 1
+    assert max_cascade_levels(8, 8, 3, 3) == 0    # regions don't divide
+    assert max_cascade_levels(8, 8, 2, 2, 8, 8) == 0
+
+
+def test_histogram_measurement_values_sane(search):
+    m = search.measure(HISTO)
+    assert m.supersteps == len(m.trace)
+    assert m.counters.edges_processed > 0
+    assert m.touched_bits > 0 and m.dataset_bits > 0
+    assert np.isfinite(m.time_s) and m.time_s > 0
