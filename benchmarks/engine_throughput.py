@@ -1,0 +1,192 @@
+"""Engine run-loop throughput: device-resident (chunked) vs legacy loop.
+
+Measures wall-clock supersteps/sec and simulated-GTEPS-per-wall-second
+for BFS/SSSP/PageRank at 1024 (and, with --full, 4096) tiles, comparing
+the legacy per-superstep dispatch loop (``run(chunk=0)``: one jitted
+step + one host sync per superstep — the seed engine's behavior) against
+the scan-chunked device-resident loop (``run(chunk=K)``: K supersteps
+per dispatch, one host sync per chunk).  Both loops produce bit-identical
+``TrafficCounters`` and ``SuperstepTrace`` — asserted on every row — so
+the comparison is pure wall-clock.
+
+Rows sweep ``oq_cap``: small OQ budgets mean many cheap supersteps (the
+dispatch/sync-bound regime the chunked loop exists for — the paper's
+runs take hundreds of thousands of such steps); large budgets mean fewer,
+compute-heavy steps where the loop overhead is already amortized.  On a
+CPU-only container the XLA superstep itself executes synchronously, so
+the measured speedup is bounded by the step's own execution time; on an
+async-dispatch accelerator backend the per-step host round-trip the
+chunked loop eliminates is the dominant term.  ``host_syncs`` records
+the exactly-measured O(supersteps) -> O(supersteps/K) sync reduction.
+
+Emits BENCH_engine.json (list of per-config rows) for the perf
+trajectory; --smoke runs one tiny config, asserts counter/trace
+equality, and still writes the JSON (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from common import row, timed  # noqa: F401  (path bootstrap)
+
+import numpy as np
+
+from repro.core.engine import DataLocalEngine, EngineConfig
+from repro.core.tilegrid import square_grid
+from repro.graph import apps, rmat_edges
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_engine.json")
+
+
+def _mk_engine(app_name: str, g, grid, oq_cap: int, use_proxy: bool):
+    spec = {"bfs": apps.BFS_SPEC, "sssp": apps.SSSP_SPEC,
+            "pagerank": apps.PAGERANK_SPEC}[app_name]
+    proxy = apps.table2_proxy(grid, app_name) if use_proxy else None
+    cfg = EngineConfig(grid=grid, n_src=g.n_rows, n_dst=g.n_cols,
+                       oq_cap=oq_cap, proxy=proxy)
+    return spec, DataLocalEngine(spec, cfg, g.row_lo, g.row_hi, g.col_idx,
+                                 g.weights)
+
+
+def _init(app_name: str, eng, g, root):
+    if app_name == "pagerank":
+        deg = np.maximum(g.out_degree(), 1).astype(np.float32)
+        contrib = 0.85 / g.n_rows / deg
+        state = eng.init_state()
+        return eng.activate_all(state, contrib)
+    return eng.init_state(seed_idx=root, seed_val=0.0)
+
+
+def _run_mode(app_name, eng, g, root, chunk, repeats: int):
+    """Best-of-N wall clock of a full drained run (compile excluded:
+    the first run warms the jit cache)."""
+    eng.run(_init(app_name, eng, g, root), chunk=chunk)      # warm/compile
+    best, result = float("inf"), None
+    for _ in range(repeats):
+        state = _init(app_name, eng, g, root)
+        t0 = time.time()
+        _, r = eng.run(state, chunk=chunk)
+        best = min(best, time.time() - t0)
+        result = r
+    return best, result
+
+
+def bench_config(app_name: str, tiles: int, scale: int, oq_cap: int,
+                 chunk: int, use_proxy: bool = False,
+                 repeats: int = 3) -> dict:
+    """One benchmark row: legacy (chunk=0) vs chunked loop on the same
+    engine, with bit-identity of counters/trace asserted."""
+    g = rmat_edges(scale, edge_factor=8, seed=1)
+    grid = square_grid(tiles)
+    root = int(np.argmax(g.out_degree()))
+    _, eng = _mk_engine(app_name, g, grid, oq_cap, use_proxy)
+    t_legacy, r_legacy = _run_mode(app_name, eng, g, root, 0, repeats)
+    t_chunk, r_chunk = _run_mode(app_name, eng, g, root, chunk, repeats)
+
+    counters_equal = (r_legacy.counters.as_dict()
+                      == r_chunk.counters.as_dict())
+    trace_equal = r_legacy.trace.to_dict() == r_chunk.trace.to_dict()
+    assert counters_equal, f"{app_name}: chunked counters diverged"
+    assert trace_equal, f"{app_name}: chunked trace diverged"
+    steps = r_chunk.supersteps
+    teps = float(g.nnz)          # simulated edges traversed (upper bound)
+    out = dict(
+        app=app_name, tiles=tiles, scale=scale, oq_cap=oq_cap,
+        proxy=use_proxy, chunk=chunk, supersteps=steps,
+        wall_s_legacy=t_legacy, wall_s_chunked=t_chunk,
+        steps_per_s_legacy=steps / t_legacy,
+        steps_per_s_chunked=steps / t_chunk,
+        speedup=t_legacy / t_chunk,
+        host_syncs_legacy=steps,
+        host_syncs_chunked=-(-steps // chunk),
+        sim_time_s=r_chunk.time_s,
+        sim_gteps_per_wall_s_legacy=teps / r_chunk.time_s / 1e9 / t_legacy,
+        sim_gteps_per_wall_s_chunked=teps / r_chunk.time_s / 1e9 / t_chunk,
+        counters_equal=counters_equal, trace_equal=trace_equal,
+    )
+    row(f"engine_throughput/{app_name}-{tiles}t-oq{oq_cap}"
+        f"{'-proxy' if use_proxy else ''}",
+        t_chunk * 1e6,
+        f"speedup={out['speedup']:.2f}x "
+        f"steps/s {out['steps_per_s_legacy']:.0f}->"
+        f"{out['steps_per_s_chunked']:.0f} "
+        f"syncs {steps}->{out['host_syncs_chunked']}")
+    return out
+
+
+# (app, oq_cap, chunk, use_proxy): the dispatch-bound small-OQ regimes the
+# chunked loop targets plus one compute-heavy point per app for contrast.
+CONFIGS_1024 = [
+    ("bfs", 1, 128, False),
+    ("bfs", 8, 32, False),
+    ("bfs", 1, 128, True),
+    ("sssp", 1, 128, False),
+    ("sssp", 8, 32, True),
+    ("pagerank", 4, 64, True),
+]
+CONFIGS_4096 = [
+    ("bfs", 1, 128, False),
+    ("sssp", 4, 64, True),
+    ("pagerank", 4, 64, True),
+]
+
+
+def run(small: bool = True, out_path: str = DEFAULT_OUT) -> list:
+    rows = []
+    for app_name, oq, chunk, px in CONFIGS_1024:
+        rows.append(bench_config(app_name, 1024, 11, oq, chunk, px))
+    if not small:
+        for app_name, oq, chunk, px in CONFIGS_4096:
+            rows.append(bench_config(app_name, 4096, 13, oq, chunk, px))
+    _write(rows, out_path)
+    return rows
+
+
+def smoke(out_path: str = DEFAULT_OUT) -> None:
+    """CI gate: tiny grid, asserts chunked == legacy counters/trace for a
+    write-through and a write-back app, writes the JSON artifact."""
+    rows = [bench_config("bfs", 64, 9, 4, 16, False, repeats=1),
+            bench_config("pagerank", 64, 9, 8, 16, True, repeats=1)]
+    for r in rows:
+        assert r["counters_equal"] and r["trace_equal"]
+        assert r["host_syncs_chunked"] < r["host_syncs_legacy"]
+    _write(rows, out_path)
+    print(f"# smoke OK -> {out_path}")
+
+
+def _write(rows: list, out_path: str) -> None:
+    payload = dict(
+        benchmark="engine_throughput",
+        description="device-resident (scan-chunked) run loop vs legacy "
+                    "per-superstep dispatch; bit-identical counters/trace",
+        rows=rows,
+        best_speedup=max((r["speedup"] for r in rows), default=0.0),
+        note="CPU-only container: speedup bounded by the XLA superstep's "
+             "own synchronous execution time; on async-dispatch "
+             "accelerator backends the eliminated per-step host sync is "
+             "the dominant term. host_syncs_* records the exact "
+             "O(supersteps) -> O(supersteps/K) reduction.",
+    )
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out_path} (best speedup "
+          f"{payload['best_speedup']:.2f}x)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config, asserts bit-identity")
+    ap.add_argument("--full", action="store_true",
+                    help="include the 4096-tile grids")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="output JSON path")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.out)
+    else:
+        run(small=not args.full, out_path=args.out)

@@ -14,6 +14,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 MODULES = [
+    ("engine_throughput", "Run-loop throughput: chunked vs legacy loop"),
     ("fig6_network", "Fig. 6  network link-width options"),
     ("fig7_queues", "Fig. 7  IQ:OQ ratio (Goldilocks)"),
     ("fig8_proxy", "Fig. 8  proxies vs Dalorex"),

@@ -44,6 +44,36 @@ cascade-tree leg); the BSP time model takes the per-superstep max over
 (tile compute, per-level network serialization, endpoint contention —
 including contention at intermediate cascade proxies) — reproducing the
 paper's observable effects without per-cycle router simulation.
+
+Device-resident run loop
+------------------------
+The paper's runs take hundreds of thousands of supersteps, so the run
+loop must not pay a host round-trip per superstep.  ``run`` therefore
+executes ``EngineConfig.run_chunk`` supersteps per device dispatch with
+``jax.lax.scan``: the engine state, the write-back flush flag and the
+drained/budget flags ride the scan carry entirely on device, each
+superstep's fixed-shape stats are stacked into a ``(K, ...)`` trace
+buffer, and the host fetches that buffer — and checks ``pending`` /
+``p_resident`` — once per chunk instead of once per step.  Flush
+triggering and termination are decided *inside* the scan body (the same
+rules the legacy loop applied between dispatches), and supersteps past
+the stop point are masked no-ops, so counters and traces are
+bit-identical to the per-step loop while host syncs drop from
+O(supersteps) to O(supersteps / K).  ``run(chunk=0)`` keeps the legacy
+per-step loop (the benchmark baseline); larger ``run_chunk`` amortizes
+dispatch further at the cost of up to K-1 wasted (masked) supersteps in
+the final chunk — ``benchmarks/engine_throughput.py`` measures the
+tradeoff.  Per-superstep traces are reassembled on the host from the
+stacked chunk stats (``SuperstepTrace.append_chunk``), in execution
+order, exactly as the per-step loop appended them.
+
+Hot-spot kernels: with ``EngineConfig.backend="pallas"`` the engine's
+combine/drain hot spots — the IQ-drain relax, the P$ / cascade segment
+min/add, and the owner-mailbox delivery — run through the Pallas kernels
+in ``kernels/`` (``relax_min``, ``segment_combine``, ``histogram_bin``);
+the default ``"jnp"`` path is the numerical oracle the Pallas path is
+tested against (bitwise for min-combine apps, up to f32 re-association
+for add).
 """
 from __future__ import annotations
 
@@ -99,6 +129,12 @@ class EngineConfig:
     pkg: PackageConfig = DCRA_SRAM
     max_supersteps: int = 200_000
     element_bits: int = 64           # index+value footprint per dataset element
+    # Supersteps per device dispatch: the run loop scans this many
+    # supersteps on device between host syncs (0 = legacy per-step loop).
+    run_chunk: int = 16
+    # 'jnp' (oracle) or 'pallas': which implementation the combine/drain
+    # hot spots (IQ drain, segment min/add, owner delivery) run through.
+    backend: str = "jnp"
 
     @property
     def iq_cap(self) -> int:
@@ -131,6 +167,8 @@ class DataLocalEngine:
                  row_lo: np.ndarray, row_hi: np.ndarray,
                  col_idx: np.ndarray, weights: Optional[np.ndarray] = None,
                  part: Optional[ChipPartition] = None):
+        if cfg.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown engine backend {cfg.backend!r}")
         self.app = app
         self.cfg = cfg
         grid = cfg.grid
@@ -163,6 +201,8 @@ class DataLocalEngine:
             weights = np.ones_like(col_idx, dtype=np.float32)
         self.weights = jnp.asarray(weights, jnp.float32)
         self._superstep = jax.jit(self._superstep_impl)
+        self._chunk = jax.jit(self._chunk_impl, static_argnames=("length",))
+        self._stat_names = None        # packed-stat layout, cached per engine
 
     def chip_superstep(self, row_lo, row_hi, state, chip_id, flush):
         """One superstep of window ``chip_id``: pure in its array args so
@@ -238,7 +278,13 @@ class DataLocalEngine:
         take2d = flag2d & (csum <= cfg.iq_cap)
         take = take2d.reshape(-1)
         mval, vals = state["mail_val"], state["values"]
-        if is_min:
+        if cfg.backend == "pallas":
+            # fused relax kernel: combine + improvement detection in one
+            # VMEM pass (same formulas as the jnp oracle below)
+            from ..kernels import ops as kops
+            new_vals, imp8 = kops.relax(vals, mval, take, combine=app.combine)
+            improved = imp8.astype(bool)
+        elif is_min:
             improved = take & (mval < vals)
             new_vals = jnp.where(improved, mval, vals)
         else:
@@ -316,10 +362,11 @@ class DataLocalEngine:
         p_val = state.get("p_val")
 
         if cfg.proxy is None:
-            (mail_val, mail_flag, owner_leg, off_ch, dmax,
+            (mail_val, mail_flag, owner_leg, off_ch, per_tile,
              off) = self._drain_to_owners(
                 mail_val, mail_flag, dst, cand, emit_mask, src_tile,
                 chip_id, None, is_min)
+            dmax = jnp.max(per_tile)
             charges = dict(netstats.merge_charges(owner_leg, off_ch),
                            owner_msgs=owner_leg["messages"],
                            owner_hop_msgs=owner_leg["hop_msgs"])
@@ -359,30 +406,33 @@ class DataLocalEngine:
         ``dst``/``src`` are global; the local mailbox index of an
         on-window record is recovered from the owner's in-chip position.
         Returns (mail_val, mail_flag, owner_leg_charge, off_chip_charge,
-        delivered_max_per_tile, off_records) — ``off_records`` is None
-        for a monolithic window (nothing can leave it).
+        delivered_per_tile, off_records) — ``delivered_per_tile`` is the
+        (T,) count vector (callers max it into endpoint contention, or
+        sum it across delivery legs of the same superstep first);
+        ``off_records`` is None for a monolithic window (nothing can
+        leave it).
         """
         part, Cd = self.part, self.Cd
         owner = jnp.minimum(dst // Cd, self.Tg - 1)
         owner_leg = netstats.charge(self.cfg.grid, src, owner, mask,
                                     region_dims=region_dims)
         if self.n_chips == 1:
-            mail_val, mail_flag, dmax = _deliver(
+            mail_val, mail_flag, per_tile = _deliver(
                 mail_val, mail_flag, dst, val, mask, owner, self.T,
-                self.Nd, is_min)
-            return mail_val, mail_flag, owner_leg, {}, dmax, None
+                self.Nd, is_min, backend=self.cfg.backend)
+            return mail_val, mail_flag, owner_leg, {}, per_tile, None
         on_chip = part.chip_of_tile(owner) == chip_id
         on = mask & on_chip
         off_mask = mask & ~on_chip
         lowner = part.local_tile(owner)
         ldst = lowner * Cd + dst % Cd
-        mail_val, mail_flag, dmax = _deliver(
+        mail_val, mail_flag, per_tile = _deliver(
             mail_val, mail_flag, ldst, val, on, lowner, self.T, self.Nd,
-            is_min)
+            is_min, backend=self.cfg.backend)
         off_ch = netstats.charge_off_chip(part, src, owner, off_mask)
         off = dict(dst=jnp.where(off_mask, dst, self.Ngd), val=val,
                    mask=off_mask)
-        return mail_val, mail_flag, owner_leg, off_ch, dmax, off
+        return mail_val, mail_flag, owner_leg, off_ch, per_tile, off
 
     # --------------------------------------------------------- proxy stage
     def _proxy_stage(self, mail_val, mail_flag, p_tag, p_val, dst, cand,
@@ -403,25 +453,9 @@ class DataLocalEngine:
         slot = pcache_slot(pcfg, dst)
         key = jnp.where(emit_mask, ptile_l * S + slot, T * S)  # sentinel at end
         dkey = jnp.where(emit_mask, dst, self.Ngd)
-        # lexicographic (key, dst) via two stable argsorts
-        perm1 = jnp.argsort(dkey, stable=True)
-        key1, dst1 = key[perm1], dst[perm1]
-        cand1, mask1 = cand[perm1], emit_mask[perm1]
-        perm2 = jnp.argsort(key1, stable=True)
-        skey, sdst = key1[perm2], dst1[perm2]
-        scand, smask = cand1[perm2], mask1[perm2]
-
-        first = jnp.arange(R) == 0
-        new_slot = smask & (first | (skey != jnp.roll(skey, 1)))
-        new_dst = smask & (new_slot | (sdst != jnp.roll(sdst, 1)))
-        gid = jnp.cumsum(new_dst.astype(jnp.int32)) - 1
-        gid = jnp.where(smask, gid, R - 1)
-        if is_min:
-            gagg = jax.ops.segment_min(jnp.where(smask, scand, INF), gid,
-                                       num_segments=R, indices_are_sorted=True)
-        else:
-            gagg = jax.ops.segment_sum(jnp.where(smask, scand, 0.0), gid,
-                                       num_segments=R, indices_are_sorted=True)
+        (skey, sdst, smask, (scand,),
+         new_slot, new_dst, gid) = _lex_group(key, dkey, emit_mask, cand)
+        gagg = self._segment_reduce(scand, smask, gid, is_min)
         combined = gagg[gid]                                   # per-record view
         n_leaders = jnp.sum(new_dst)
         coalesced = jnp.sum(smask) - n_leaders
@@ -451,13 +485,13 @@ class DataLocalEngine:
         do_write = upd_hit | miss
         # Scatter P$ updates.  Only winner records write, and there is at
         # most one winner per (tile, slot) per superstep; non-writers are
-        # redirected to a padding row so no duplicate index can clobber a
-        # winner's write (XLA scatter order with dupes is undefined).
+        # redirected one row past the end and dropped at the scatter
+        # (mode="drop"), so no duplicate index can clobber a winner's
+        # write (XLA scatter order with dupes is undefined) and the P$ is
+        # never copy-padded.
         wtile_safe = jnp.where(do_write, wtile, T)
-        p_tag = jnp.concatenate([p_tag, jnp.zeros((1, S), p_tag.dtype)]) \
-            .at[wtile_safe, wslot].set(sdst)[:T]
-        p_val = jnp.concatenate([p_val, jnp.zeros((1, S), p_val.dtype)]) \
-            .at[wtile_safe, wslot].set(inst_val)[:T]
+        p_tag = p_tag.at[wtile_safe, wslot].set(sdst, mode="drop")
+        p_val = p_val.at[wtile_safe, wslot].set(inst_val, mode="drop")
 
         # forwarding set
         if pcfg.write_back:
@@ -470,68 +504,83 @@ class DataLocalEngine:
         edst = jnp.where(evict, cur_tag, self.Ngd)
         eval_ = jnp.where(evict, cur_pv, ident)
 
-        # write-back flush: when the engine signals idle, spill whole P$
-        def flushed(args):
-            p_tag_, p_val_ = args
-            ft = p_tag_.reshape(-1)
-            fv = p_val_.reshape(-1)
-            return ft, fv, jnp.full_like(ft, -1), jnp.full(fv.shape, ident)
+        rdims = (pcfg.region_ny, pcfg.region_nx)
+        ncomb = jnp.float32(0.0)
+        proxy_src = self.part.global_tile(chip_id,
+                                          jnp.minimum(skey // S, T - 1))
+        # The whole-P$ flush wave travels with the direct legs only when
+        # a non-selective cascade must merge them in one tree walk; in
+        # every other mode the flush drain runs in its own lax.cond leg
+        # (_flush_drain) so the frequent non-flush supersteps never touch
+        # the (T*S,) flush-shaped arrays — on write-back apps those
+        # masked no-op legs dominated the superstep.
+        split_flush = pcfg.write_back and (
+            self._cascade_levels == 0 or pcfg.cascade.selective)
 
-        def not_flushed(args):
-            p_tag_, p_val_ = args
-            z = jnp.full((T * S,), -1, jnp.int32)
-            return z, jnp.full((T * S,), ident), p_tag_.reshape(-1), p_val_.reshape(-1)
+        all_dst = [fdst, edst]
+        all_val = [fval, eval_]
+        all_src = [proxy_src] * 2
+        if pcfg.write_back and not split_flush:
+            # non-selective cascade: flush records climb the reduction
+            # tree together with the direct legs (they may merge), so
+            # they stay in the shared cat, masked on non-flush steps
+            def flushed(args):
+                p_tag_, p_val_ = args
+                ft = p_tag_.reshape(-1)
+                fv = p_val_.reshape(-1)
+                return ft, fv, jnp.full_like(ft, -1), jnp.full(fv.shape,
+                                                               ident)
 
-        if pcfg.write_back:
+            def not_flushed(args):
+                p_tag_, p_val_ = args
+                z = jnp.full((T * S,), -1, jnp.int32)
+                return (z, jnp.full((T * S,), ident), p_tag_.reshape(-1),
+                        p_val_.reshape(-1))
+
             ftags, fvals, keep_t, keep_v = jax.lax.cond(
                 flush, flushed, not_flushed, (p_tag, p_val))
             p_tag = keep_t.reshape(T, S)
             p_val = keep_v.reshape(T, S)
-            flush_dst = jnp.where(ftags >= 0, ftags, self.Ngd)
-            flush_val = jnp.where(ftags >= 0, fvals, ident)
-            flush_src = jnp.repeat(tile_gids, S)
-        else:
-            flush_dst = flush_val = flush_src = None
-
-        # drain all forwarded legs: write-through survivors, slot-conflict
-        # bypasses, write-back evictions and whole-P$ flushes
-        # (sources are global tile ids — the forwarding proxy tile)
-        all_dst = [fdst, edst]
-        all_val = [fval, eval_]
-        all_src = [self.part.global_tile(
-            chip_id, jnp.minimum(skey // S, T - 1))] * 2
-        if flush_dst is not None:
-            all_dst.append(flush_dst)
-            all_val.append(flush_val)
-            all_src.append(flush_src)
+            all_dst.append(jnp.where(ftags >= 0, ftags, self.Ngd))
+            all_val.append(jnp.where(ftags >= 0, fvals, ident))
+            all_src.append(jnp.repeat(tile_gids, S))
         cat_dst = jnp.concatenate(all_dst)
         cat_val = jnp.concatenate(all_val)
         cat_src = jnp.concatenate(all_src)
         cat_mask = cat_dst < self.Ngd
-        rdims = (pcfg.region_ny, pcfg.region_nx)
-        ncomb = jnp.float32(0.0)
-        if self._cascade_levels:
+
+        lvl_max = jnp.float32(0.0)
+        if self._cascade_levels and not split_flush:
             # Cascaded drain: level-by-level through the region reduction
-            # tree instead of straight to the owners.  Under the selective
-            # criterion, write-back apps cascade only the dense whole-P$
-            # flush wave — sporadic slot-conflict bypasses and evictions
-            # carry too few same-index duplicates to merge profitably and
-            # go direct; write-through apps cascade their full forward set.
-            if pcfg.write_back and pcfg.cascade.selective:
-                n_direct = all_dst[0].shape[0] + all_dst[1].shape[0]
-                eligible = jnp.arange(cat_dst.shape[0]) >= n_direct
-            else:
-                eligible = jnp.ones(cat_dst.shape[0], bool)
-            (mail_val, mail_flag, leg2, owner_leg, dmax, ncomb,
-             off) = self._cascade_drain(
+            # tree instead of straight to the owners (write-through apps
+            # cascade their full forward set; non-selective write-back
+            # cascades direct legs + flush wave together).
+            eligible = jnp.ones(cat_dst.shape[0], bool)
+            (mail_val, mail_flag, leg2, owner_leg, per_tile, lvl_max,
+             ncomb, off) = self._cascade_drain(
                 mail_val, mail_flag, cat_dst, cat_val, cat_src, cat_mask,
                 eligible, is_min, chip_id)
         else:
-            (mail_val, mail_flag, owner_leg, off_ch, dmax,
+            (mail_val, mail_flag, owner_leg, off_ch, per_tile,
              off) = self._drain_to_owners(
                 mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_src,
                 chip_id, rdims, is_min)
             leg2 = netstats.merge_charges(owner_leg, off_ch)
+
+        if split_flush:
+            (p_tag, p_val, mail_val, mail_flag, flush_leg, f_owner_leg,
+             f_per_tile, f_lvl_max, f_ncomb, f_off) = self._flush_drain(
+                flush, p_tag, p_val, mail_val, mail_flag, tile_gids,
+                ident, is_min, chip_id, rdims)
+            leg2 = netstats.merge_charges(leg2, flush_leg)
+            owner_leg = netstats.merge_charges(owner_leg, f_owner_leg)
+            per_tile = per_tile + f_per_tile     # same-phase deliveries sum
+            lvl_max = jnp.maximum(lvl_max, f_lvl_max)
+            ncomb = ncomb + f_ncomb
+            if off is not None:
+                off = {k: jnp.concatenate([off[k], f_off[k]]) for k in off}
+
+        dmax = jnp.maximum(jnp.max(per_tile), lvl_max)
         charges = dict(netstats.merge_charges(leg1, leg2),
                        owner_msgs=owner_leg["messages"],
                        owner_hop_msgs=owner_leg["hop_msgs"])
@@ -539,6 +588,86 @@ class DataLocalEngine:
                       coalesced_at_proxy=coalesced.astype(jnp.float32),
                       cascade_combined=ncomb)
         return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, off
+
+    # --------------------------------------------------------- flush drain
+    def _flush_drain(self, flush, p_tag, p_val, mail_val, mail_flag,
+                     tile_gids, ident, is_min, chip_id, rdims):
+        """Write-back whole-P$ spill as its own ``lax.cond`` leg.
+
+        Only actual flush supersteps execute the (T*S,) record drain
+        (charge + cascade/deliver + P$ clear); the common non-flush
+        superstep takes the no-op branch.  Counter/trace effects are
+        identical to draining masked flush arrays every step — a fully
+        masked leg charges zero and delivers nothing — so this is pure
+        superstep-time savings on write-back apps.  Returns
+        (p_tag, p_val, mail_val, mail_flag, merged_leg, owner_leg,
+        per_tile, level_max, n_combined, off_records).
+        """
+        T, S = self.T, self.cfg.proxy.slots
+        multi = self.n_chips > 1
+        charge_keys = ("messages", "hop_msgs", "intra_die_hops",
+                       "inter_die_crossings", "inter_pkg_crossings",
+                       "cross_region_msgs")
+
+        def zero_leg(with_off):
+            z = {k: jnp.float32(0.0) for k in charge_keys}
+            if with_off and multi:
+                z["off_chip_msgs"] = jnp.float32(0.0)
+                z["off_chip_hop_msgs"] = jnp.float32(0.0)
+            return z
+
+        def do_flush(p_tag, p_val, mail_val, mail_flag):
+            ft = p_tag.reshape(-1)
+            fv = p_val.reshape(-1)
+            fmask = ft >= 0
+            fdst = jnp.where(fmask, ft, self.Ngd)
+            fval = jnp.where(fmask, fv, ident)
+            fsrc = jnp.repeat(tile_gids, S)
+            cleared_t = jnp.full_like(p_tag, -1)
+            cleared_v = jnp.full_like(p_val, ident)
+            if self._cascade_levels:
+                # selective write-back: the dense flush wave is exactly
+                # the record set that profits from the reduction tree
+                (mail_val, mail_flag, leg, owner_leg, per_tile, lvl_max,
+                 ncomb, off) = self._cascade_drain(
+                    mail_val, mail_flag, fdst, fval, fsrc, fmask,
+                    jnp.ones_like(fmask), is_min, chip_id)
+            else:
+                (mail_val, mail_flag, owner_leg, off_ch, per_tile,
+                 off) = self._drain_to_owners(
+                    mail_val, mail_flag, fdst, fval, fmask, fsrc,
+                    chip_id, rdims, is_min)
+                leg = netstats.merge_charges(owner_leg, off_ch)
+                lvl_max = jnp.float32(0.0)
+                ncomb = jnp.float32(0.0)
+            return (cleared_t, cleared_v, mail_val, mail_flag, leg,
+                    owner_leg, per_tile.astype(jnp.float32), lvl_max,
+                    ncomb, off)
+
+        def no_flush(p_tag, p_val, mail_val, mail_flag):
+            off = None if self.n_chips == 1 else dict(
+                dst=jnp.full((self._flush_off_len(),), self.Ngd,
+                             jnp.int32),
+                val=jnp.full((self._flush_off_len(),), ident, jnp.float32),
+                mask=jnp.zeros((self._flush_off_len(),), bool))
+            return (p_tag, p_val, mail_val, mail_flag,
+                    zero_leg(with_off=True), zero_leg(with_off=False),
+                    jnp.zeros((T,), jnp.float32), jnp.float32(0.0),
+                    jnp.float32(0.0), off)
+
+        out = jax.lax.cond(flush, do_flush, no_flush,
+                           p_tag, p_val, mail_val, mail_flag)
+        return out
+
+    def _flush_off_len(self) -> int:
+        """Length of the flush leg's off-chip record buffer: the T*S
+        flush wave, replicated per cascade output leg (the direct copy,
+        one selective early-exit copy per level, and the tree-root exit —
+        matching _cascade_drain's concatenation)."""
+        base = self.T * self.cfg.proxy.slots
+        if not self._cascade_levels:
+            return base
+        return base * (2 + self._cascade_levels)
 
     # ------------------------------------------------------- cascaded drain
     def _cascade_drain(self, mail_val, mail_flag, dst, val, src, mask,
@@ -554,7 +683,11 @@ class DataLocalEngine:
         skip the tree and go straight to their owner.
 
         Returns (mail_val, mail_flag, merged_charges, owner_leg_charge,
-        delivered_max_per_tile, n_combined, off_records).
+        delivered_per_tile, level_recv_max, n_combined, off_records) —
+        ``delivered_per_tile`` is the final owner-delivery count vector
+        (summable with other same-superstep delivery legs before the
+        max); ``level_recv_max`` the per-proxy receive contention of the
+        tree levels.
         """
         cfg, grid = self.cfg, self.cfg.grid
         pcfg = cfg.proxy
@@ -571,7 +704,7 @@ class DataLocalEngine:
         out_src = [cur]
         out_mask = [mask & ~eligible]
         ncomb = jnp.float32(0.0)
-        dmax = jnp.float32(0.0)
+        lvl_max = jnp.float32(0.0)
 
         for level in range(1, self._cascade_levels + 1):
             rny, rnx = casc.level_dims(pcfg.region_ny, pcfg.region_nx, level)
@@ -594,7 +727,7 @@ class DataLocalEngine:
             recv = jax.ops.segment_sum(alive.astype(jnp.float32),
                                        jnp.where(alive, ptile_l, T),
                                        num_segments=T + 1)[:T]
-            dmax = jnp.maximum(dmax, jnp.max(recv))
+            lvl_max = jnp.maximum(lvl_max, jnp.max(recv))
             cur, dst, val, owner, alive, merged = self._combine_level(
                 ptile_l, dst, val, alive, is_min, chip_id)
             ncomb = ncomb + merged
@@ -607,79 +740,147 @@ class DataLocalEngine:
         cat_val = jnp.concatenate(out_val)
         cat_src = jnp.concatenate(out_src)
         cat_mask = jnp.concatenate(out_mask)
-        (mail_val, mail_flag, owner_leg, off_ch, del_max,
+        (mail_val, mail_flag, owner_leg, off_ch, per_tile,
          off) = self._drain_to_owners(
             mail_val, mail_flag, cat_dst, cat_val, cat_mask, cat_src,
             chip_id, rdims, is_min)
         legs.append(owner_leg)
         legs.append(off_ch)
         return (mail_val, mail_flag, netstats.merge_charges(*legs),
-                owner_leg, jnp.maximum(dmax, del_max), ncomb, off)
+                owner_leg, per_tile, lvl_max, ncomb, off)
 
     def _combine_level(self, ptile_l, dst, val, alive, is_min, chip_id):
         """Merge records that meet at the same (proxy tile, dst) of one
         cascade level into a single combined record (leaders survive).
 
-        Same lexicographic two-argsort grouping as the P$ batch coalesce;
-        masked records carry sentinel keys and sort to the end.  Grouping
-        keys use the window-local proxy tile; the surviving records'
-        source tiles are returned as global ids.  Returns the level's
-        outputs in sorted order plus the merge count.
+        Same single-sort lexicographic grouping (``_lex_group``) as the
+        P$ batch coalesce; masked records carry sentinel keys and sort to
+        the end.  Grouping keys use the window-local proxy tile; the
+        surviving records' source tiles are returned as global ids.
+        Returns the level's outputs in sorted order plus the merge count.
         """
         T = self.T
-        R = dst.shape[0]
         tkey = jnp.where(alive, ptile_l, T)
         dkey = jnp.where(alive, dst, self.Ngd)
-        perm1 = jnp.argsort(dkey, stable=True)
-        t1, d1, v1, a1 = tkey[perm1], dkey[perm1], val[perm1], alive[perm1]
-        perm2 = jnp.argsort(t1, stable=True)
-        stile, sdst = t1[perm2], d1[perm2]
-        sval, salive = v1[perm2], a1[perm2]
-        first = jnp.arange(R) == 0
-        leader = salive & (first | (stile != jnp.roll(stile, 1))
-                           | (sdst != jnp.roll(sdst, 1)))
-        gid = jnp.cumsum(leader.astype(jnp.int32)) - 1
-        gid = jnp.where(salive, gid, R - 1)
-        if is_min:
-            agg = jax.ops.segment_min(jnp.where(salive, sval, INF), gid,
-                                      num_segments=R,
-                                      indices_are_sorted=True)
-        else:
-            agg = jax.ops.segment_sum(jnp.where(salive, sval, 0.0), gid,
-                                      num_segments=R,
-                                      indices_are_sorted=True)
+        (stile, sdst, salive, (sval,),
+         _, leader, gid) = _lex_group(tkey, dkey, alive, val)
+        agg = self._segment_reduce(sval, salive, gid, is_min)
         nval = agg[gid]
         merged = (jnp.sum(salive) - jnp.sum(leader)).astype(jnp.float32)
         cur = self.part.global_tile(chip_id, jnp.minimum(stile, T - 1))
         owner = jnp.minimum(sdst // self.Cd, self.Tg - 1)
         return cur, sdst, nval, owner, leader, merged
 
+    def _segment_reduce(self, sval, smask, gid, is_min):
+        """Combine same-group record values (``gid`` sorted ascending,
+        from ``_lex_group``) into one value per group.  The jnp path is
+        the oracle; ``backend='pallas'`` routes through the dense
+        ``segment_combine`` kernel (masked records become padding)."""
+        R = gid.shape[0]
+        if self.cfg.backend == "pallas":
+            from ..kernels import ops as kops
+            return kops.segment_combine(jnp.where(smask, gid, -1), sval, R,
+                                        combine="min" if is_min else "add")
+        if is_min:
+            return jax.ops.segment_min(jnp.where(smask, sval, INF), gid,
+                                       num_segments=R,
+                                       indices_are_sorted=True)
+        return jax.ops.segment_sum(jnp.where(smask, sval, 0.0), gid,
+                                   num_segments=R, indices_are_sorted=True)
+
+    # ------------------------------------------------------- chunked stepping
+    def _chunk_step_one(self, st, fl):
+        """One monolithic superstep as a (state, stats) pair — the scan
+        body unit of the chunked run loop."""
+        new_state, stats, _ = self._step(self.row_lo, self.row_hi, st,
+                                         jnp.int32(0), fl)
+        return new_state, stats
+
+    def _chunk_impl(self, state, flush, done, steps_left, *, length: int):
+        """Scan ``length`` monolithic supersteps in one device dispatch
+        (see :func:`_scan_steps` for the carry/termination contract)."""
+        write_back = self.cfg.proxy is not None and self.cfg.proxy.write_back
+        return _scan_steps(self._chunk_step_one, state, flush, done,
+                           steps_left, length, write_back)
+
     # ----------------------------------------------------------------- run
     def run(self, state, max_supersteps: Optional[int] = None,
-            progress_every: int = 0):
-        """Run supersteps until drained; returns (state, RunResult)."""
+            progress_every: int = 0, chunk: Optional[int] = None):
+        """Run supersteps until drained; returns (state, RunResult).
+
+        ``chunk`` overrides ``EngineConfig.run_chunk``: supersteps per
+        device dispatch.  ``chunk=0`` selects the legacy per-step loop
+        (one host sync per superstep — the benchmark baseline); any K>=1
+        scans K supersteps per dispatch with identical results.
+        ``progress_every`` reports at chunk granularity: the first chunk
+        boundary at or past each multiple prints the true executed
+        superstep count."""
         self._require_mono("run")
         cfg = self.cfg
         maxs = max_supersteps or cfg.max_supersteps
+        K = cfg.run_chunk if chunk is None else int(chunk)
         counters = TrafficCounters()
         trace = SuperstepTrace()
         cycles = 0.0
-        write_back = cfg.proxy is not None and cfg.proxy.write_back
         steps = 0
         pkg = cfg.pkg
         links = link_provisioning(cfg.grid, pkg)
 
+        def account(stats):
+            """Legacy-loop per-superstep accounting.  The chunked branch
+            uses the vectorized twin (chunk_counters / append_chunk /
+            add_chunk_cycles below) — edit BOTH in lockstep; the
+            bit-identity tests in tests/test_chunked.py are the gate."""
+            nonlocal cycles
+            counters.add(superstep_counters(stats))
+            trace.append_step(stats, element_bits=cfg.element_bits)
+            # ---- BSP time model for this superstep ----------------------
+            step_cycles = superstep_cycles(stats, pkg, links)
+            if step_cycles > 0 or stats["pending"] > 0:
+                cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
+
+        if K <= 0:
+            state, steps = self._run_legacy(state, maxs, progress_every,
+                                            account)
+        else:
+            progress = _ProgressReporter(self.app.name, progress_every)
+            fill = links["diameter"] * 0.5
+            if self._stat_names is None:   # one abstract trace per engine
+                self._stat_names = _stat_keys(self._chunk_step_one, state,
+                                              jnp.zeros((), jnp.bool_))
+
+            def add_chunk_cycles(stacked, n_act, cycles):
+                # vectorized BSP terms, accumulated in execution order —
+                # bit-identical to account() per step
+                sc = chunk_cycles(stacked, n_act, pkg, links)
+                pend = np.asarray(stacked["pending"][:n_act])
+                for s, p in zip(sc.tolist(), pend.tolist()):
+                    if s > 0 or p > 0:
+                        cycles += s + fill
+                return cycles
+
+            chunk_fn = functools.partial(self._chunk, length=K)
+            state, steps, cycles = _drain_chunked(
+                chunk_fn, state, maxs, self._stat_names, counters, trace,
+                cfg.element_bits, progress, add_chunk_cycles, cycles)
+        counters.supersteps = steps
+        time_s = cycles / (CLOCK_GHZ * 1e9)
+        return state, RunResult(counters=counters, cycles=cycles, time_s=time_s,
+                                supersteps=steps, trace=trace)
+
+    def _run_legacy(self, state, maxs, progress_every, account):
+        """The seed per-step loop: one dispatch + one host sync per
+        superstep.  Kept as the measured baseline for the chunked loop
+        (``benchmarks/engine_throughput.py``) and its bit-identity tests."""
+        cfg = self.cfg
+        write_back = cfg.proxy is not None and cfg.proxy.write_back
+        steps = 0
         flush_flag = jnp.asarray(False)
         while steps < maxs:
             state, stats = self._superstep(state, flush_flag)
             stats = jax.device_get(stats)
             steps += 1
-            counters.add(superstep_counters(stats))
-            trace.append_step(stats, element_bits=cfg.element_bits)
-            # ---- BSP time model for this superstep ------------------------
-            step_cycles = superstep_cycles(stats, pkg, links)
-            if step_cycles > 0 or stats["pending"] > 0:
-                cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
+            account(stats)
             if flush_flag:
                 flush_flag = jnp.asarray(False)
             if stats["pending"] == 0:
@@ -693,10 +894,7 @@ class DataLocalEngine:
                 break
             if progress_every and steps % progress_every == 0:
                 print(f"  [{self.app.name}] step {steps} pending={stats['pending']:.0f}")
-        counters.supersteps = steps
-        time_s = cycles / (CLOCK_GHZ * 1e9)
-        return state, RunResult(counters=counters, cycles=cycles, time_s=time_s,
-                                supersteps=steps, trace=trace)
+        return state, steps
 
 
 @dataclasses.dataclass
@@ -747,20 +945,282 @@ def superstep_cycles(stats, pkg, links: dict) -> float:
         endpoint_bits=float(stats["delivered_max_per_tile"]) * bits))
 
 
-def _deliver(mail_val, mail_flag, dst, val, mask, owner, T, Nd, is_min):
-    """Combine records into owner mailboxes; returns endpoint-contention max."""
+def chunk_counters(stacked, n_active: int) -> TrafficCounters:
+    """One chunk's accumulated traffic as a TrafficCounters delta.
+
+    The chunked-loop rendering of :func:`superstep_counters`: one numpy
+    reduction per field per chunk instead of a python accumulation per
+    superstep (per-step host accounting would eat the chunked loop's
+    dispatch savings).  Bit-identical to per-step accumulation because
+    every counter is an integer-valued count: float64 sums of integers
+    below 2**53 are exact under any association.
+    """
+    n = int(n_active)
+
+    def tot(key):
+        a = stacked.get(key)
+        if a is None:
+            return 0.0
+        return float(np.sum(np.asarray(a[:n], dtype=np.float64)))
+
+    return TrafficCounters(
+        messages=tot("messages"), hop_msgs=tot("hop_msgs"),
+        owner_msgs=tot("owner_msgs"),
+        owner_hop_msgs=tot("owner_hop_msgs"),
+        intra_die_hops=tot("intra_die_hops"),
+        inter_die_crossings=tot("inter_die_crossings"),
+        inter_pkg_crossings=tot("inter_pkg_crossings"),
+        filtered_at_proxy=tot("filtered_at_proxy"),
+        coalesced_at_proxy=tot("coalesced_at_proxy"),
+        cascade_combined=tot("cascade_combined"),
+        cross_region_msgs=tot("cross_region_msgs"),
+        off_chip_msgs=tot("off_chip_msgs"),
+        off_chip_hop_msgs=tot("off_chip_hop_msgs"),
+        edges_processed=tot("edges_processed"),
+        records_consumed=tot("records_consumed"), supersteps=n)
+
+
+def chunk_cycles(stacked, n_active: int, pkg, links: dict) -> np.ndarray:
+    """Vectorized :func:`superstep_cycles` over a chunk's stacked stats:
+    one ``costmodel.step_cycles`` call on ``(n_active,)`` float64 vectors
+    (elementwise identical to the per-step scalar calls)."""
+    n = int(n_active)
+    bits = MSG_BITS
+
+    def vec(key):
+        return np.asarray(stacked[key][:n], dtype=np.float64)
+
+    return np.atleast_1d(step_cycles(
+        pkg, links,
+        compute_ops=vec("compute_per_tile_max"),
+        intra_bits=vec("intra_die_hops") * bits,
+        die_bits=vec("inter_die_crossings") * bits,
+        pkg_bits=vec("inter_pkg_crossings") * bits,
+        endpoint_bits=vec("delivered_max_per_tile") * bits))
+
+
+# int32 per-superstep stats that can exceed f32's exact-integer range at
+# paper-scale runs; _scan_steps carries them on an exact int32 side
+# channel next to the packed f32 rows (order matters — see packed_step).
+_EXACT_INT_STATS = ("pending", "edges_processed", "records_consumed")
+
+
+def _stat_keys(step_one, state, flush):
+    """Stat names of ``step_one``'s stats dict in the packed-vector order
+    ``_scan_steps`` emits (sorted, with ``active`` appended), via an
+    abstract trace — no device computation."""
+    stats_shape = jax.eval_shape(step_one, state, flush)[1]
+    return sorted(stats_shape.keys()) + ["active"]
+
+
+def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
+                   element_bits, progress, add_chunk_cycles, cycles):
+    """The host side of the chunked run loop, shared verbatim by the
+    monolithic and distributed engines (so chunk unpacking, accounting
+    and termination cannot drift between them).
+
+    Per chunk: one device dispatch (``chunk_fn``), one host sync, then
+    vectorized accounting — ``chunk_counters`` into ``counters``,
+    ``SuperstepTrace.append_chunk`` into ``trace``, and the caller's
+    ``add_chunk_cycles(stacked, n_act, cycles) -> cycles`` closure for
+    the BSP time model (it accumulates sequentially, preserving the
+    legacy loop's float-addition order).  Returns (state, steps, cycles).
+    """
+    steps = 0
+    flush = jnp.zeros((), jnp.bool_)
+    done = jnp.zeros((), jnp.bool_)
+    while steps < maxs:
+        (state, flush, done, _), (packed, ints) = chunk_fn(
+            state, flush, done, jnp.int32(maxs - steps))
+        # the single host sync of this chunk:
+        host_done, packed, ints = jax.device_get((done, packed, ints))
+        stacked = {k: packed[:, i] for i, k in enumerate(keys)}
+        for i, k in enumerate(_EXACT_INT_STATS):
+            stacked[k] = ints[:, i]          # exact int32, not the f32 row
+        n_act = int(np.sum(stacked["active"]))
+        if n_act:
+            counters.add(chunk_counters(stacked, n_act))
+            trace.append_chunk(stacked, n_act, element_bits=element_bits)
+            cycles = add_chunk_cycles(stacked, n_act, cycles)
+        steps += n_act
+        progress.report(steps, stacked, n_act)
+        if host_done or n_act == 0:
+            break
+    return state, steps, cycles
+
+
+def _scan_steps(step_one, state, flush, done, steps_left, length: int,
+                write_back: bool):
+    """Scan ``length`` supersteps in one device dispatch.
+
+    ``step_one(state, flush) -> (new_state, stats)`` is one engine
+    superstep (monolithic, or a whole distributed superstep including
+    the boundary exchange).  The carry holds the engine state, the
+    write-back flush flag, the drained flag and the remaining superstep
+    budget — all on device.  Each iteration applies the same post-step
+    rules the legacy host loop applied between dispatches: a just-drained
+    engine with write-back P$ residue schedules a flush superstep; a
+    drained engine without residue stops.  Iterations past the stop point
+    (or past the budget) skip the superstep entirely (``lax.cond``) and
+    emit a zeroed row with ``active=0``.  Shared by the monolithic and
+    distributed chunked run loops so the two cannot drift in
+    flush/termination semantics.
+
+    The per-step stats are packed into ONE ``(n_stats,)`` f32 vector (in
+    :func:`_stat_keys` order) so the scan stacks a single ``(length,
+    n_stats)`` buffer instead of one buffer per stat — a large share of
+    the per-iteration overhead at small grid sizes.  The int32 stats
+    that can outgrow f32's 2**24 integer range at paper-scale runs
+    (``pending``, ``edges_processed``, ``records_consumed`` — see
+    ``_EXACT_INT_STATS``) additionally ride an exact int32 side channel;
+    every other stat is f32 on device already or a count far below
+    2**24, so the packing loses nothing.  The flush/termination
+    decisions read the exact pre-packing integers.
+
+    Returns ((state, flush, done, steps_left), (stacked, stacked_ints))
+    with shapes ``(length, n_stats)`` f32 and ``(length, 3)`` int32.
+    """
+    keys = _stat_keys(step_one, state, flush)[:-1]
+
+    def packed_step(st, fl):
+        new_state, stats = step_one(st, fl)
+        vec = jnp.stack([stats[k].astype(jnp.float32) for k in keys])
+        ints = jnp.stack([stats[k].astype(jnp.int32)
+                          for k in _EXACT_INT_STATS])
+        return (new_state, vec, ints,
+                stats["p_resident"] if write_back else jnp.int32(0))
+
+    def idle_step(st, _fl):
+        return (st, jnp.zeros((len(keys),), jnp.float32),
+                jnp.array([1, 0, 0], jnp.int32), jnp.int32(0))
+
+    def body(carry, _):
+        state, flush, done, left = carry
+        active = jnp.logical_and(~done, left > 0)
+        # cond, not select: iterations past the stop point skip the
+        # superstep entirely instead of computing and discarding it
+        new_state, vec, ints, p_res = jax.lax.cond(
+            active, packed_step, idle_step, state, flush)
+        drained = active & (ints[0] == 0)
+        if write_back:
+            flush_next = drained & (p_res > 0)
+        else:
+            flush_next = jnp.zeros((), jnp.bool_)
+        done_next = done | (drained & ~flush_next)
+        row = jnp.concatenate([vec, active.astype(jnp.float32)[None]])
+        return (new_state, flush_next, done_next,
+                left - active.astype(left.dtype)), (row, ints)
+
+    return jax.lax.scan(body, (state, flush, done, steps_left), None,
+                        length=length)
+
+
+def _lex_group(key, sub, mask, *vals):
+    """Single-sort lexicographic (key, sub) record grouping.
+
+    One fused stable ``lax.sort`` with ``num_keys=2`` orders records by
+    the (key, sub) composite — the sort the two-stable-argsort idiom
+    (argsort by sub, then by key) and a packed ``(key << k) | sub``
+    key both express, but with one sort pass, no gathers, and no int64
+    requirement — carrying ``mask`` and ``vals`` along as passengers.
+    Masked records must hold sentinel keys that order after all live
+    ones.  Ties in (key, sub) keep arrival order (stability), so
+    downstream f32 segment sums accumulate in the same order as the
+    two-argsort formulation: bit-identical results.
+
+    Returns (skey, ssub, smask, svals, new_key, new_pair, gid):
+      new_key:  sorted-order mask of the first live record of each key;
+      new_pair: first live record of each (key, sub) group — the group
+                leaders; gid numbers the groups (masked rows -> last id).
+    """
+    R = key.shape[0]
+    skey, ssub, smask, *svals = jax.lax.sort(
+        (key, sub, mask) + tuple(vals), num_keys=2, is_stable=True)
+    first = jnp.arange(R) == 0
+    new_key = smask & (first | (skey != jnp.roll(skey, 1)))
+    new_pair = smask & (new_key | (ssub != jnp.roll(ssub, 1)))
+    gid = jnp.cumsum(new_pair.astype(jnp.int32)) - 1
+    gid = jnp.where(smask, gid, R - 1)
+    return skey, ssub, smask, tuple(svals), new_key, new_pair, gid
+
+
+class _ProgressReporter:
+    """Chunk-granularity progress for the scanned run loops: reports the
+    true executed superstep count at the first chunk boundary at or past
+    each ``every`` multiple (the per-step loop's ``steps % every == 0``
+    would silently skip multiples that fall inside a chunk)."""
+
+    def __init__(self, name: str, every: int):
+        self.name = name
+        self.every = every
+        self._next = every
+
+    def report(self, steps: int, stacked, n_act: int) -> None:
+        if not self.every or n_act == 0 or steps < self._next:
+            return
+        pending = float(stacked["pending"][n_act - 1])
+        print(f"  [{self.name}] step {steps} (chunk of {n_act}) "
+              f"pending={pending:.0f}")
+        while self._next <= steps:
+            self._next += self.every
+
+
+def _deliver(mail_val, mail_flag, dst, val, mask, owner, T, Nd, is_min,
+             backend: str = "jnp"):
+    """Combine records into owner mailboxes; returns the (T,) per-tile
+    delivered-record counts (endpoint contention before the max).
+
+    Two scatters instead of the seed's three: one combines the arriving
+    values per mailbox index, one counts arrivals per index — and the
+    count vector then yields both the flag update (``count > 0`` ==
+    scatter-max of the mask) and the per-tile endpoint contention
+    (mailbox indices of one tile are contiguous, so per-tile delivered
+    records are a reshape-sum of the counts).  XLA CPU serializes
+    scatters per update row, so every scatter removed is the single
+    biggest superstep saving; counts are integers, so the derived values
+    are bit-identical to the scatter-max/segment-sum formulation.  min
+    combines are order-independent (bitwise identical to the seed); add
+    combines apply ``mail + sum(arrivals)`` instead of the seed's
+    sequential scatter order — equal up to f32 re-association.
+    """
+    if backend == "pallas":
+        return _deliver_pallas(mail_val, mail_flag, dst, val, mask, owner,
+                               T, Nd, is_min)
+    # masked records point one past the end; mode="drop" discards them at
+    # the scatter itself — no padded copy of the mailbox per superstep
     safe_dst = jnp.where(mask, dst, Nd)
-    mv = jnp.concatenate([mail_val, jnp.zeros((1,), mail_val.dtype)])
-    mf = jnp.concatenate([mail_flag, jnp.zeros((1,), jnp.bool_)])
+    cnt = jnp.zeros((Nd,), jnp.int32).at[safe_dst].add(
+        mask.astype(jnp.int32), mode="drop")
     if is_min:
-        mv = mv.at[safe_dst].min(jnp.where(mask, val, INF))
+        inc = jnp.full((Nd,), INF).at[safe_dst].min(
+            jnp.where(mask, val, INF), mode="drop")
+        mv = jnp.minimum(mail_val, inc)
     else:
-        mv = mv.at[safe_dst].add(jnp.where(mask, val, 0.0))
-    mf = mf.at[safe_dst].max(mask)
-    per_tile = jax.ops.segment_sum(mask.astype(jnp.float32),
-                                   jnp.where(mask, owner, T),
-                                   num_segments=T + 1)[:T]
-    return mv[:Nd], mf[:Nd], jnp.max(per_tile)
+        inc = jnp.zeros((Nd,), jnp.float32).at[safe_dst].add(
+            jnp.where(mask, val, 0.0), mode="drop")
+        mv = mail_val + inc
+    mf = mail_flag | (cnt > 0)
+    per_tile = jnp.sum(cnt.reshape(T, Nd // T), axis=1)
+    return mv, mf, per_tile.astype(jnp.float32)
+
+
+def _deliver_pallas(mail_val, mail_flag, dst, val, mask, owner, T, Nd,
+                    is_min):
+    """Pallas rendering of the owner delivery: the scatter-combine is a
+    dense segment reduction over mailbox indices (``segment_combine``),
+    arrivals-per-index and per-tile endpoint contention are histogram
+    kernels, and folding the combined arrivals into the mailbox is the
+    fused relax kernel (min: combine-if-improving == scatter-min; add:
+    accumulate — equal to the jnp oracle up to f32 re-association)."""
+    from ..kernels import ops as kops
+    comb = "min" if is_min else "add"
+    seg = jnp.where(mask, dst, -1)                 # negative = padding
+    incoming = kops.segment_combine(seg, val, Nd, combine=comb)
+    present = kops.histogram(seg, Nd) > 0
+    mv, _ = kops.relax(mail_val, incoming, present, combine=comb)
+    mf = mail_flag | present
+    per_tile = kops.histogram(jnp.where(mask, owner, -1), T)
+    return mv, mf, per_tile
 
 
 def _pad(a: np.ndarray, n: int, fill) -> np.ndarray:

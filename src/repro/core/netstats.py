@@ -130,6 +130,42 @@ class SuperstepTrace:
              + float(stats["records_consumed"])) * element_bits)
         self.pending.append(float(stats["pending"]))
 
+    def append_chunk(self, stacked, n_active: int,
+                     element_bits: int = MSG_BITS) -> None:
+        """Append the first ``n_active`` supersteps of a stacked chunk.
+
+        ``stacked`` is the chunked run loop's device-fetched stats dict:
+        every value is a ``(K,)`` array whose row ``i`` holds superstep
+        ``i`` of the chunk (rows past ``n_active`` are masked no-op
+        padding).  Appending is vectorized (one numpy pass per field per
+        chunk, not per step — per-step python accounting would eat the
+        chunked loop's dispatch savings) yet bit-identical to per-step
+        :meth:`append_step` calls: every source stat is an integer-valued
+        count, so the float64 convert-and-scale is exact in either
+        formulation.
+        """
+        n = int(n_active)
+        if n == 0:
+            return
+
+        def vec(key, scale=1.0):
+            a = stacked.get(key)
+            if a is None:                    # e.g. off-chip legs, monolithic
+                return [0.0] * n
+            return (np.asarray(a[:n], np.float64) * scale).tolist()
+
+        self.compute_ops.extend(vec("compute_per_tile_max"))
+        self.intra_bits.extend(vec("intra_die_hops", MSG_BITS))
+        self.die_bits.extend(vec("inter_die_crossings", MSG_BITS))
+        self.pkg_bits.extend(vec("inter_pkg_crossings", MSG_BITS))
+        self.endpoint_bits.extend(vec("delivered_max_per_tile", MSG_BITS))
+        self.off_chip_bits.extend(vec("off_chip_hop_msgs", MSG_BITS))
+        self.off_chip_msgs.extend(vec("off_chip_msgs"))
+        touched = (np.asarray(stacked["edges_processed"][:n], np.float64)
+                   + np.asarray(stacked["records_consumed"][:n], np.float64))
+        self.touched_bits.extend((touched * element_bits).tolist())
+        self.pending.extend(vec("pending"))
+
     def extend(self, other: "SuperstepTrace") -> "SuperstepTrace":
         """Concatenate another trace (epoch-style apps accumulate runs)."""
         for f in self._VECTOR_FIELDS:
@@ -167,22 +203,28 @@ def charge(grid: TileGrid, src_tid, dst_tid, mask, region_dims=None):
     Returns a dict of scalar jnp totals (messages, hop_msgs, intra, die,
     pkg, cross_region_msgs).
     """
-    m = mask.astype(jnp.float32)
-    hops = grid.hops(src_tid, dst_tid).astype(jnp.float32)
+    m = mask.astype(jnp.float32).reshape(-1)
+    hops = grid.hops(src_tid, dst_tid).astype(jnp.float32).reshape(-1)
     intra, die, pkg = grid.link_levels(src_tid, dst_tid)
-    if region_dims is None:
-        cross_region = jnp.float32(0.0)
-    else:
+    rows = [m, hops * m, intra.astype(jnp.float32).reshape(-1) * m,
+            die.astype(jnp.float32).reshape(-1) * m,
+            pkg.astype(jnp.float32).reshape(-1) * m]
+    if region_dims is not None:
         rny, rnx = region_dims
         crosses = grid.region_crossings(src_tid, dst_tid, rny, rnx)
-        cross_region = jnp.sum(crosses.astype(jnp.float32) * m)
+        rows.append(crosses.astype(jnp.float32).reshape(-1) * m)
+    # one fused reduction over all traffic classes (the run loop executes
+    # this once per leg per superstep — separate sums were a measurable
+    # share of the device-resident step)
+    sums = jnp.sum(jnp.stack(rows), axis=1)
     return dict(
-        messages=jnp.sum(m),
-        hop_msgs=jnp.sum(hops * m),
-        intra_die_hops=jnp.sum(intra.astype(jnp.float32) * m),
-        inter_die_crossings=jnp.sum(die.astype(jnp.float32) * m),
-        inter_pkg_crossings=jnp.sum(pkg.astype(jnp.float32) * m),
-        cross_region_msgs=cross_region,
+        messages=sums[0],
+        hop_msgs=sums[1],
+        intra_die_hops=sums[2],
+        inter_die_crossings=sums[3],
+        inter_pkg_crossings=sums[4],
+        cross_region_msgs=(sums[5] if region_dims is not None
+                           else jnp.float32(0.0)),
     )
 
 

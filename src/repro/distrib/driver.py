@@ -28,6 +28,14 @@ through each package's IO die.  This module is that execution layer:
 Delivery order differs from the monolithic engine only in which records
 a mailbox combines first; min-combine apps are therefore bitwise
 identical, add-combine apps identical up to f32 re-association.
+
+Like the monolithic engine, the run loop is device-resident: ``run``
+scans ``EngineConfig.run_chunk`` whole distributed supersteps (chip
+superstep + boundary exchange + stat aggregation) per dispatch — under
+``shard_map`` the scan lives *inside* the sharded region, so state
+stays device-sharded across the chunk and each iteration's collective
+exchange executes on device — and the host checks pending/p_resident
+once per chunk (``run(chunk=0)`` keeps the per-step dispatch).
 """
 from __future__ import annotations
 
@@ -43,8 +51,10 @@ from ..core.compat import shard_map
 from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
                               _off_pkg_bits_per_cycle, link_provisioning)
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
-                           RunResult, _pad, superstep_counters,
-                           superstep_cycles)
+                           RunResult, _drain_chunked, _pad,
+                           _ProgressReporter, _scan_steps, _stat_keys,
+                           chunk_counters, chunk_cycles,
+                           superstep_counters, superstep_cycles)
 from ..core.netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from ..core.proxy import chip_local_proxy
 from ..core.tilegrid import ChipPartition, TileGrid, partition_grid
@@ -79,18 +89,18 @@ def _combine_into_mail(mail_val, mail_flag, flat, mask, val, seg, n_seg,
     recv_max).
     """
     n_flat = mail_val.shape[0]
+    # masked records index one past the end; mode="drop" discards them at
+    # the scatter (no padded mailbox copy — see engine._deliver)
     safe = jnp.where(mask, flat, n_flat)
-    mv = jnp.concatenate([mail_val, jnp.zeros((1,), jnp.float32)])
-    mf = jnp.concatenate([mail_flag, jnp.zeros((1,), jnp.bool_)])
     if is_min:
-        mv = mv.at[safe].min(jnp.where(mask, val, INF))
+        mv = mail_val.at[safe].min(jnp.where(mask, val, INF), mode="drop")
     else:
-        mv = mv.at[safe].add(jnp.where(mask, val, 0.0))
-    mf = mf.at[safe].max(mask)
+        mv = mail_val.at[safe].add(jnp.where(mask, val, 0.0), mode="drop")
+    mf = mail_flag.at[safe].max(mask, mode="drop")
     recv = jax.ops.segment_sum(mask.astype(jnp.float32),
                                jnp.where(mask, seg, n_seg),
                                num_segments=n_seg + 1)[:n_seg]
-    return mv[:n_flat], mf[:n_flat], jnp.max(recv)
+    return mv, mf, jnp.max(recv)
 
 
 def _pending(state):
@@ -167,6 +177,11 @@ class DistributedEngine:
             cfg = dataclasses.replace(
                 cfg, proxy=chip_local_proxy(cfg.proxy, part.sub_ny,
                                             part.sub_nx))
+        if cfg.backend != "jnp":
+            raise ValueError(
+                "EngineConfig.backend='pallas' (kernel hot spots) is "
+                "monolithic-only; the distributed runtime vmaps the "
+                "superstep across chips")
         self.app = app
         self.cfg = cfg
         self.part = part
@@ -196,6 +211,8 @@ class DistributedEngine:
                 f"{self.C} chips do not divide {jax.device_count()} devices")
         self.backend = backend
         self._step = None
+        self._chunk_fns = {}
+        self._stat_names = None        # packed-stat layout, cached
 
     # ----------------------------------------------------------- data moves
     def _shard(self, a_global: np.ndarray, chunk: int) -> jnp.ndarray:
@@ -253,7 +270,23 @@ class DistributedEngine:
                           else self._make_shard_step())
         return self._step
 
-    def _make_vmap_step(self):
+    def _get_chunk_fn(self, length: int):
+        """Chunked (scan-of-supersteps) dispatch for this backend; one
+        compiled function per chunk length, cached."""
+        if length not in self._chunk_fns:
+            make = (self._make_vmap_chunk if self.backend == "vmap"
+                    else self._make_shard_chunk)
+            self._chunk_fns[length] = make(length)
+        return self._chunk_fns[length]
+
+    @property
+    def _write_back(self) -> bool:
+        return self.cfg.proxy is not None and self.cfg.proxy.write_back
+
+    def _raw_vmap_step(self):
+        """One whole distributed superstep (vmapped chips + emulated
+        exchange + stat aggregation), unjitted — the body both the
+        legacy per-step dispatch and the scanned chunk share."""
         kernel, part, Cd, is_min = (self.kernel, self.part, self.Cd,
                                     self._is_min)
         multi = self.C > 1
@@ -273,23 +306,37 @@ class DistributedEngine:
             agg["pending"] = _pending(new_state)
             return new_state, agg
 
-        jstep = jax.jit(step)
+        return step
+
+    def _make_vmap_step(self):
+        jstep = jax.jit(self._raw_vmap_step())
         return lambda state, flush: jstep(self._row_lo_s, self._row_hi_s,
                                           state, self._chip_ids, flush)
 
-    def _make_shard_step(self):
-        from jax.sharding import PartitionSpec as P
+    def _make_vmap_chunk(self, length: int):
+        step = self._raw_vmap_step()
+        write_back = self._write_back
+
+        def chunk(row_lo, row_hi, state, chip_ids, flush, done, left):
+            return _scan_steps(
+                lambda st, fl: step(row_lo, row_hi, st, chip_ids, fl),
+                state, flush, done, left, length, write_back)
+
+        jchunk = jax.jit(chunk)
+        return lambda state, flush, done, left: jchunk(
+            self._row_lo_s, self._row_hi_s, state, self._chip_ids, flush,
+            done, left)
+
+    def _raw_shard_step(self, per: int):
+        """One whole distributed superstep under ``shard_map`` (vmapped
+        chips per device + collective exchange + psum/pmax aggregation);
+        must execute inside a ``chips`` mesh axis.  Shared by the legacy
+        and chunked shard_map dispatches."""
         kernel, part, Cd, Tl = self.kernel, self.part, self.Cd, self.Tl
         is_min = self._is_min
-        C = self.C
         Nld = kernel.Nd
-        ndev = jax.device_count()
-        per = C // ndev
-        mesh = jax.make_mesh((ndev,), ("chips",))
 
-        def fn(row_lo, row_hi, state, flush):
-            cid0 = jax.lax.axis_index("chips") * per
-            chip_ids = cid0 + jnp.arange(per, dtype=jnp.int32)
+        def step(row_lo, row_hi, state, chip_ids, flush):
             new_state, stats, off = jax.vmap(
                 kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
                 row_lo, row_hi, state, chip_ids, flush)
@@ -320,9 +367,23 @@ class DistributedEngine:
             agg["delivered_max_per_tile"] = jnp.maximum(
                 agg["delivered_max_per_tile"],
                 jax.lax.pmax(recv_max, "chips"))
-            # post-exchange pending, globally (see _make_vmap_step)
+            # post-exchange pending, globally (see _raw_vmap_step)
             agg["pending"] = jax.lax.psum(_pending(new_state), "chips")
             return new_state, agg
+
+        return step
+
+    def _make_shard_step(self):
+        from jax.sharding import PartitionSpec as P
+        ndev = jax.device_count()
+        per = self.C // ndev
+        mesh = jax.make_mesh((ndev,), ("chips",))
+        step = self._raw_shard_step(per)
+
+        def fn(row_lo, row_hi, state, flush):
+            cid0 = jax.lax.axis_index("chips") * per
+            chip_ids = cid0 + jnp.arange(per, dtype=jnp.int32)
+            return step(row_lo, row_hi, state, chip_ids, flush)
 
         jstep = jax.jit(shard_map(
             fn, mesh=mesh, in_specs=(P("chips"), P("chips"), P("chips"), P()),
@@ -330,16 +391,49 @@ class DistributedEngine:
         return lambda state, flush: jstep(self._row_lo_s, self._row_hi_s,
                                           state, flush)
 
+    def _make_shard_chunk(self, length: int):
+        from jax.sharding import PartitionSpec as P
+        ndev = jax.device_count()
+        per = self.C // ndev
+        mesh = jax.make_mesh((ndev,), ("chips",))
+        step = self._raw_shard_step(per)
+        write_back = self._write_back
+
+        def fn(row_lo, row_hi, state, flush, done, left):
+            # the scan lives *inside* the shard_map region: state stays
+            # device-sharded across the whole chunk and each iteration's
+            # collective exchange/psum executes on device — the host only
+            # sees the per-chunk carry and the stacked (replicated) stats
+            cid0 = jax.lax.axis_index("chips") * per
+            chip_ids = cid0 + jnp.arange(per, dtype=jnp.int32)
+            return _scan_steps(
+                lambda st, fl: step(row_lo, row_hi, st, chip_ids, fl),
+                state, flush, done, left, length, write_back)
+
+        jchunk = jax.jit(shard_map(
+            fn, mesh=mesh,
+            in_specs=(P("chips"), P("chips"), P("chips"), P(), P(), P()),
+            out_specs=((P("chips"), P(), P(), P()), P()), check_vma=False))
+        return lambda state, flush, done, left: jchunk(
+            self._row_lo_s, self._row_hi_s, state, flush, done, left)
+
     # ------------------------------------------------------------------ run
     def run(self, state, max_supersteps: Optional[int] = None,
-            progress_every: int = 0):
+            progress_every: int = 0, chunk: Optional[int] = None):
         """Run distributed supersteps until drained; returns
-        (state-with-global-values, RunResult)."""
+        (state-with-global-values, RunResult).
+
+        Like the monolithic engine, the loop is device-resident:
+        ``chunk`` supersteps (default ``EngineConfig.run_chunk``) run per
+        dispatch — each including its boundary exchange — and the host
+        checks pending/p_resident once per chunk.  ``chunk=0`` keeps the
+        legacy per-superstep dispatch.  ``progress_every`` reports at
+        chunk granularity with true executed superstep counts."""
         cfg, part = self.cfg, self.part
         maxs = max_supersteps or cfg.max_supersteps
+        K = cfg.run_chunk if chunk is None else int(chunk)
         counters = TrafficCounters()
         cycles = 0.0
-        write_back = cfg.proxy is not None and cfg.proxy.write_back
         steps = 0
         pkg = cfg.pkg
         links = link_provisioning(cfg.grid, pkg)
@@ -347,13 +441,13 @@ class DistributedEngine:
         n_board_links = max(1, (cy * (cx - 1) + cx * (cy - 1)) * 2)
         trace = SuperstepTrace(board_links=n_board_links)
         io_lat_cycles = 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ   # Tx + Rx IO die
-        step_fn = self._get_step()
 
-        flush_flag = jnp.asarray(False)
-        while steps < maxs:
-            state, stats = step_fn(state, flush_flag)
-            stats = jax.device_get(stats)
-            steps += 1
+        def account(stats):
+            """Legacy-loop per-superstep accounting.  The chunked branch
+            uses the vectorized twin (add_chunk_cycles below with
+            chunk_counters/append_chunk in _drain_chunked) — edit BOTH
+            in lockstep; tests/test_chunked.py is the bit-identity gate."""
+            nonlocal cycles
             counters.add(superstep_counters(stats))
             trace.append_step(stats, element_bits=cfg.element_bits)
             # ---- BSP time model: monolithic levels + the board-level leg
@@ -364,6 +458,69 @@ class DistributedEngine:
                 cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
                 if stats.get("off_chip_msgs", 0.0) > 0:
                     cycles += io_lat_cycles
+
+        if K <= 0:
+            state, steps = self._run_legacy(state, maxs, progress_every,
+                                            account)
+        else:
+            chunk_fn = self._get_chunk_fn(K)
+            progress = _ProgressReporter(f"{self.app.name}/{self.C}chips",
+                                         progress_every)
+            fill = links["diameter"] * 0.5
+            board_div = n_board_links * _off_pkg_bits_per_cycle(pkg)
+            # stat layout of the packed scan rows (the vmapped step's agg
+            # carries the same keys the shard_map rendering emits)
+            if self._stat_names is None:   # one abstract trace per engine
+                raw = self._raw_vmap_step()
+                self._stat_names = _stat_keys(
+                    lambda st, fl: raw(self._row_lo_s, self._row_hi_s, st,
+                                       self._chip_ids, fl),
+                    state, jnp.zeros((), jnp.bool_))
+            def add_chunk_cycles(stacked, n_act, cycles):
+                # monolithic BSP terms maxed with the board leg, plus
+                # IO-die latency on supersteps with off-chip records --
+                # accumulated in execution order like the legacy loop
+                def offvec(key):           # absent on a 1x1 partition
+                    a = stacked.get(key)
+                    return (np.asarray(a[:n_act], np.float64)
+                            if a is not None else np.zeros(n_act))
+
+                t_board = offvec("off_chip_hop_msgs") * MSG_BITS / board_div
+                sc = np.maximum(
+                    chunk_cycles(stacked, n_act, pkg, links), t_board)
+                pend = np.asarray(stacked["pending"][:n_act])
+                offm = offvec("off_chip_msgs")
+                for s, p, o in zip(sc.tolist(), pend.tolist(),
+                                   offm.tolist()):
+                    if s > 0 or p > 0:
+                        cycles += s + fill
+                        if o > 0:
+                            cycles += io_lat_cycles
+                return cycles
+
+            state, steps, cycles = _drain_chunked(
+                chunk_fn, state, maxs, self._stat_names, counters, trace,
+                cfg.element_bits, progress, add_chunk_cycles, cycles)
+        counters.supersteps = steps
+        time_s = cycles / (CLOCK_GHZ * 1e9)
+        out_state = dict(state)
+        out_state["values"] = self._gather(state["values"], self.Cd)
+        return out_state, RunResult(counters=counters, cycles=cycles,
+                                    time_s=time_s, supersteps=steps,
+                                    trace=trace)
+
+    def _run_legacy(self, state, maxs, progress_every, account):
+        """The seed per-superstep dispatch loop (one host sync per
+        superstep) — the measured baseline for the chunked loop."""
+        write_back = self._write_back
+        step_fn = self._get_step()
+        steps = 0
+        flush_flag = jnp.asarray(False)
+        while steps < maxs:
+            state, stats = step_fn(state, flush_flag)
+            stats = jax.device_get(stats)
+            steps += 1
+            account(stats)
             if flush_flag:
                 flush_flag = jnp.asarray(False)
             if stats["pending"] == 0:
@@ -374,13 +531,7 @@ class DistributedEngine:
             if progress_every and steps % progress_every == 0:
                 print(f"  [{self.app.name}/{self.C}chips] step {steps} "
                       f"pending={stats['pending']:.0f}")
-        counters.supersteps = steps
-        time_s = cycles / (CLOCK_GHZ * 1e9)
-        out_state = dict(state)
-        out_state["values"] = self._gather(state["values"], self.Cd)
-        return out_state, RunResult(counters=counters, cycles=cycles,
-                                    time_s=time_s, supersteps=steps,
-                                    trace=trace)
+        return state, steps
 
 
 # --------------------------------------------------------------------------

@@ -45,12 +45,14 @@ def chip_grid(chips: int, tiles_per_chip: int) -> TileGrid:
 
 
 def _measure(g, grid, chips: int, oq_cap: int, pkg: PackageConfig,
-             backend: str, use_proxy: bool) -> Dict[str, float]:
+             backend: str, use_proxy: bool,
+             run_chunk: Optional[int] = None) -> Dict[str, float]:
     from ..graph import apps
     root = int(np.argmax(g.out_degree()))
     proxy = apps.table2_proxy(grid, "bfs") if use_proxy else None
+    kw = {} if run_chunk is None else dict(run_chunk=run_chunk)
     r = apps.bfs(g, root, grid, proxy=proxy, oq_cap=oq_cap,
-                 chips=chips, backend=backend)
+                 chips=chips, backend=backend, **kw)
     rep = price(pkg, grid, r.run.counters,
                 mem_bits_sram=float(g.footprint_bytes() * 8),
                 per_superstep_peak=r.run.trace)
@@ -71,19 +73,21 @@ def weak_scaling(chip_counts: Sequence[int] = WEAK_CHIP_COUNTS,
                  tiles_per_chip: int = 16, base_scale: int = 6,
                  edge_factor: int = 8, oq_cap: int = 16,
                  pkg: PackageConfig = DCRA_SRAM, seed: int = 1,
-                 backend: str = "auto",
-                 use_proxy: bool = True) -> List[Dict[str, float]]:
+                 backend: str = "auto", use_proxy: bool = True,
+                 run_chunk: Optional[int] = None) -> List[Dict[str, float]]:
     """Constant work per chip: RMAT scale and tile count grow with the
     chip count.  Returns one measurement dict per chip count; the GTEPS
     column is the measured multi-chip curve (monotone when the runtime
-    scales, which is the property tests/test_distrib.py asserts)."""
+    scales, which is the property tests/test_distrib.py asserts).
+    ``run_chunk`` overrides the engine's supersteps-per-dispatch (0 =
+    legacy per-step loop)."""
     rows = []
     for chips in chip_counts:
         grid = chip_grid(chips, tiles_per_chip)
         scale = base_scale + int(round(math.log2(chips)))
         g = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
         rows.append(_measure(g, grid, chips, oq_cap, pkg, backend,
-                             use_proxy))
+                             use_proxy, run_chunk))
     return rows
 
 
@@ -91,8 +95,8 @@ def strong_scaling(chip_counts: Sequence[int] = (1, 4, 16, 64),
                    n_tiles: int = 1024, scale: int = 10,
                    edge_factor: int = 8, oq_cap: int = 16,
                    pkg: PackageConfig = DCRA_SRAM, seed: int = 1,
-                   backend: str = "auto",
-                   use_proxy: bool = True) -> List[Dict[str, float]]:
+                   backend: str = "auto", use_proxy: bool = True,
+                   run_chunk: Optional[int] = None) -> List[Dict[str, float]]:
     """Fixed grid and dataset, re-partitioned across more chips: isolates
     what the off-chip boundary costs at constant total work."""
     g = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
@@ -106,7 +110,7 @@ def strong_scaling(chip_counts: Sequence[int] = (1, 4, 16, 64),
                   f"(does not partition the {grid.ny}x{grid.nx} grid)")
             continue
         rows.append(_measure(g, grid, chips, oq_cap, pkg, backend,
-                             use_proxy))
+                             use_proxy, run_chunk))
     return rows
 
 

@@ -91,6 +91,18 @@ def _mk_cfg(grid: TileGrid, n_src: int, n_dst: int,
     return EngineConfig(grid=grid, n_src=n_src, n_dst=n_dst, proxy=proxy, **kw)
 
 
+def _split_backends(backend: str, kw: dict):
+    """The apps-level ``backend=`` kw selects either the distributed
+    execution backend ('auto' / 'vmap' / 'shard_map') or — when given a
+    kernel-backend name ('jnp' / 'pallas') — the
+    ``EngineConfig.backend`` hot-spot implementation.  The two value
+    sets are disjoint, so one kw serves both."""
+    if backend in ("jnp", "pallas"):
+        kw = dict(kw, backend=backend)
+        backend = "auto"
+    return backend, kw
+
+
 def _build(spec: AppSpec, cfg: EngineConfig, row_lo, row_hi, col_idx,
            weights, chips: int, backend: str):
     """Monolithic engine, or the distributed runtime when ``chips > 1``
@@ -105,6 +117,7 @@ def _build(spec: AppSpec, cfg: EngineConfig, row_lo, row_hi, col_idx,
 def _engine(spec: AppSpec, g: CSR, grid: TileGrid,
             proxy: Optional[ProxyConfig], chips: int = 0,
             backend: str = "auto", **kw):
+    backend, kw = _split_backends(backend, kw)
     cfg = _mk_cfg(grid, g.n_rows, g.n_cols, proxy, **kw)
     return _build(spec, cfg, g.row_lo, g.row_hi, g.col_idx, g.weights,
                   chips, backend)
@@ -187,7 +200,7 @@ def spmv(a: CSR, x: np.ndarray, grid: TileGrid,
     reduction onto y rows is the proxied task."""
     at = transpose_csr(a)                      # rows of at = columns of a
     chips = kw.pop("chips", 0)
-    backend = kw.pop("backend", "auto")
+    backend, kw = _split_backends(kw.pop("backend", "auto"), kw)
     cfg = _mk_cfg(grid, at.n_rows, a.n_rows, proxy, **kw)
     eng = _build(SPMV_SPEC, cfg, at.row_lo, at.row_hi, at.col_idx,
                  at.weights, chips, backend)
@@ -207,7 +220,7 @@ def histogram(values: np.ndarray, bins: int, grid: TileGrid,
     row_lo = np.arange(m, dtype=np.int32)
     row_hi = row_lo + 1
     chips = kw.pop("chips", 0)
-    backend = kw.pop("backend", "auto")
+    backend, kw = _split_backends(kw.pop("backend", "auto"), kw)
     cfg = _mk_cfg(grid, m, bins, proxy, **kw)
     eng = _build(HISTO_SPEC, cfg, row_lo, row_hi, values, None, chips,
                  backend)

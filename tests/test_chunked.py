@@ -1,0 +1,219 @@
+"""Device-resident (scan-chunked) run loop vs the legacy per-step loop.
+
+Acceptance properties of the chunked execution path:
+  * identical ``TrafficCounters``, ``SuperstepTrace``, BSP cycles, final
+    values and superstep counts vs the per-step loop for all six apps,
+    monolithic and 4-chip distributed, write-back flush included;
+  * the superstep budget (``max_supersteps``) truncates both loops at
+    the same step;
+  * trace assembly from stacked chunk arrays (``append_chunk`` /
+    ``chunk_counters``) is bit-identical to per-step appends;
+  * ``progress_every`` reports true executed superstep counts at chunk
+    granularity;
+  * the Pallas kernel backend (``EngineConfig.backend='pallas'``,
+    interpret mode on CPU) matches the jnp oracle path.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import chunk_counters, superstep_counters
+from repro.core.netstats import SuperstepTrace
+from repro.core.tilegrid import square_grid
+from repro.graph import apps, oracles, rmat_edges
+from repro.graph.rmat import histogram_input
+
+GRID = square_grid(16)
+CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_edges(8, edge_factor=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def root(g):
+    return int(np.argmax(g.out_degree()))
+
+
+def _assert_identical(r_legacy, r_chunked, exact_values=True):
+    if exact_values:
+        assert np.array_equal(r_legacy.values, r_chunked.values)
+    else:
+        assert np.allclose(r_legacy.values, r_chunked.values,
+                           rtol=1e-5, atol=1e-6)
+    dl = r_legacy.run.counters.as_dict()
+    dc = r_chunked.run.counters.as_dict()
+    assert dl == dc, {k: (dl[k], dc[k]) for k in dl if dl[k] != dc[k]}
+    assert r_legacy.run.trace.to_dict() == r_chunked.run.trace.to_dict()
+    assert r_legacy.run.cycles == r_chunked.run.cycles
+    assert r_legacy.run.supersteps == r_chunked.run.supersteps
+
+
+def _run_pair(fn, *args, chips=0, **kw):
+    if chips:
+        kw["chips"] = chips
+    rl = fn(*args, run_chunk=0, **kw)
+    rc = fn(*args, run_chunk=CHUNK, **kw)
+    return rl, rc
+
+
+def _app_runs(name, g, root, chips=0):
+    """One (legacy, chunked) pair per app, Table-II proxy policy."""
+    if name == "bfs":      # direct routing (no proxy leg)
+        return _run_pair(apps.bfs, g, root, GRID, oq_cap=16, chips=chips)
+    px = apps.table2_proxy(GRID, name)
+    if name == "sssp":
+        return _run_pair(apps.sssp, g, root, GRID, proxy=px, oq_cap=16,
+                         chips=chips)
+    if name == "wcc":
+        return _run_pair(apps.wcc, g, GRID, proxy=px, oq_cap=16,
+                         chips=chips)
+    if name == "pagerank":
+        return _run_pair(apps.pagerank, g, GRID, proxy=px, epochs=2,
+                         oq_cap=16, chips=chips)
+    if name == "spmv":
+        x = np.random.default_rng(3).random(g.n_cols).astype(np.float32)
+        px = apps.table2_proxy(GRID, "spmv", cascade_levels=1)
+        return _run_pair(apps.spmv, g, x, GRID, proxy=px, oq_cap=16,
+                         chips=chips)
+    if name == "histo":
+        bins = g.n_rows // 8
+        hv = histogram_input(g, bins)
+        return _run_pair(apps.histogram, hv, bins, GRID, proxy=px,
+                         oq_cap=8, chips=chips)
+    raise ValueError(name)
+
+
+ALL_APPS = ("bfs", "sssp", "wcc", "pagerank", "spmv", "histo")
+
+
+@pytest.mark.parametrize("name", ALL_APPS)
+def test_chunked_identical_monolithic(name, g, root):
+    rl, rc = _app_runs(name, g, root)
+    _assert_identical(rl, rc)
+
+
+@pytest.mark.parametrize("name", ("bfs", "sssp", "histo", "spmv"))
+def test_chunked_identical_4chip(name, g, root):
+    rl, rc = _app_runs(name, g, root, chips=4)
+    _assert_identical(rl, rc)
+
+
+def test_chunked_respects_superstep_budget(g, root):
+    """max_supersteps truncates the chunked loop at the same step as the
+    legacy loop, even when the budget is not a chunk multiple."""
+    from repro.core.engine import DataLocalEngine, EngineConfig
+    cfg = EngineConfig(grid=GRID, n_src=g.n_rows, n_dst=g.n_cols, oq_cap=8)
+    eng = DataLocalEngine(apps.BFS_SPEC, cfg, g.row_lo, g.row_hi,
+                          g.col_idx, g.weights)
+    _, rl = eng.run(eng.init_state(seed_idx=root, seed_val=0.0),
+                    max_supersteps=7, chunk=0)
+    _, rc = eng.run(eng.init_state(seed_idx=root, seed_val=0.0),
+                    max_supersteps=7, chunk=4)
+    assert rl.supersteps == rc.supersteps == 7
+    assert rl.counters.as_dict() == rc.counters.as_dict()
+    assert rl.trace.to_dict() == rc.trace.to_dict()
+
+
+def test_chunk_of_one_equals_legacy(g, root):
+    rl = apps.bfs(g, root, GRID, oq_cap=16, run_chunk=0)
+    r1 = apps.bfs(g, root, GRID, oq_cap=16, run_chunk=1)
+    _assert_identical(rl, r1)
+
+
+# ----------------------------------------------------- chunk-array assembly
+def _fake_stacked(n, rng):
+    keys = ("messages", "hop_msgs", "owner_msgs", "owner_hop_msgs",
+            "intra_die_hops", "inter_die_crossings", "inter_pkg_crossings",
+            "filtered_at_proxy", "coalesced_at_proxy", "cascade_combined",
+            "cross_region_msgs", "edges_processed", "records_consumed",
+            "compute_per_tile_max", "delivered_max_per_tile", "pending",
+            "p_resident")
+    return {k: rng.integers(0, 1000, n).astype(np.float32) for k in keys}
+
+
+def test_append_chunk_matches_per_step(rng):
+    stacked = _fake_stacked(12, rng)
+    t_chunk = SuperstepTrace()
+    t_chunk.append_chunk(stacked, 9, element_bits=64)
+    t_step = SuperstepTrace()
+    for i in range(9):
+        t_step.append_step({k: v[i] for k, v in stacked.items()},
+                           element_bits=64)
+    assert t_chunk.to_dict() == t_step.to_dict()
+    assert len(t_chunk) == 9
+
+
+def test_chunk_counters_match_per_step(rng):
+    stacked = _fake_stacked(16, rng)
+    via_chunk = chunk_counters(stacked, 11)
+    from repro.core.netstats import TrafficCounters
+    via_steps = TrafficCounters()
+    for i in range(11):
+        via_steps.add(superstep_counters(
+            {k: v[i] for k, v in stacked.items()}))
+    assert via_chunk.as_dict() == via_steps.as_dict()
+
+
+# --------------------------------------------------------------- progress
+def test_progress_reports_true_step_counts(g, root, capsys):
+    apps.bfs(g, root, GRID, oq_cap=8, run_chunk=4)
+    capsys.readouterr()
+    from repro.core.engine import DataLocalEngine, EngineConfig
+    cfg = EngineConfig(grid=GRID, n_src=g.n_rows, n_dst=g.n_cols, oq_cap=8)
+    eng = DataLocalEngine(apps.BFS_SPEC, cfg, g.row_lo, g.row_hi,
+                          g.col_idx, g.weights)
+    _, r = eng.run(eng.init_state(seed_idx=root, seed_val=0.0),
+                   progress_every=5, chunk=4)
+    lines = [ln for ln in capsys.readouterr().out.splitlines()
+             if "step " in ln]
+    assert lines, "progress_every printed nothing"
+    steps = [int(ln.split("step ")[1].split()[0]) for ln in lines]
+    # true executed counts: chunk multiples, strictly increasing, within
+    # the run, and every progress_every window hit at most once per chunk
+    assert steps == sorted(set(steps))
+    assert all(0 < s <= r.supersteps for s in steps)
+    assert all(s % 4 == 0 or s == r.supersteps for s in steps)
+
+
+# ------------------------------------------------------------ pallas paths
+@pytest.mark.parametrize("name", ("bfs", "sssp", "histo"))
+def test_pallas_backend_matches_jnp_oracle(name):
+    g = rmat_edges(7, edge_factor=6, seed=1)
+    root = int(np.argmax(g.out_degree()))
+    if name == "bfs":
+        rj = apps.bfs(g, root, GRID, oq_cap=16)
+        rp = apps.bfs(g, root, GRID, oq_cap=16, backend="pallas")
+        assert np.array_equal(rj.values, rp.values)
+        assert np.array_equal(rj.values, oracles.bfs_oracle(g, root))
+    elif name == "sssp":
+        px = apps.table2_proxy(GRID, "sssp")
+        rj = apps.sssp(g, root, GRID, proxy=px, oq_cap=16)
+        rp = apps.sssp(g, root, GRID, proxy=px, oq_cap=16,
+                       backend="pallas")
+        assert np.array_equal(rj.values, rp.values)
+    else:
+        bins = g.n_rows // 8
+        hv = histogram_input(g, bins)
+        px = apps.table2_proxy(GRID, "histo")
+        rj = apps.histogram(hv, bins, GRID, proxy=px, oq_cap=8)
+        rp = apps.histogram(hv, bins, GRID, proxy=px, oq_cap=8,
+                            backend="pallas")
+        # integer counts: exact even under add re-association
+        assert np.array_equal(rj.values, rp.values)
+    # network accounting is shared by both backends
+    assert (rj.run.counters.as_dict() == rp.run.counters.as_dict())
+
+
+def test_pallas_backend_rejected_distributed(g, root):
+    with pytest.raises(ValueError, match="monolithic-only"):
+        apps.bfs(g, root, GRID, oq_cap=16, chips=4, backend="pallas")
+
+
+def test_unknown_backend_rejected(g):
+    from repro.core.engine import DataLocalEngine, EngineConfig
+    cfg = EngineConfig(grid=GRID, n_src=g.n_rows, n_dst=g.n_cols,
+                       backend="tpu")
+    with pytest.raises(ValueError, match="unknown engine backend"):
+        DataLocalEngine(apps.BFS_SPEC, cfg, g.row_lo, g.row_hi, g.col_idx)
