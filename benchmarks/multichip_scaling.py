@@ -21,6 +21,10 @@ from repro.distrib import harness
 
 def _emit(kind, rows):
     for m in rows:
+        # re-pricing cross-check: the analytic board-level pricing of the
+        # measured trace must match the directly measured N-chip run
+        assert abs(m["reprice_ratio"] - 1.0) < 1e-9, \
+            (kind, m["chips"], m["reprice_time_s"], m["time_s"])
         row(f"multichip/{kind}/{m['chips']}chips", m["time_s"] * 1e6,
             f"gteps={m['gteps']:.3f};tiles={m['tiles']};"
             f"vertices={m['n_vertices']};supersteps={m['supersteps']};"
@@ -29,7 +33,8 @@ def _emit(kind, rows):
             f"off_chip_j={m['off_chip_j']:.3e};energy_j={m['energy_j']:.3e};"
             f"cost_usd={m['cost_usd']:.0f};"
             f"gteps_per_w={m['gteps_per_w']:.3g};"
-            f"gteps_per_usd={m['gteps_per_usd']:.3g}")
+            f"gteps_per_usd={m['gteps_per_usd']:.3g};"
+            f"reprice_ratio={m['reprice_ratio']:.12f}")
 
 
 def run(small: bool = True, chips=None):

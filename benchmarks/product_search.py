@@ -15,8 +15,16 @@ post-silicon.
     --small (default)  2 apps (sssp, spmv +-cascade) at 4096 tiles
     --full             sssp/spmv/histo at 4096 & 16384 tiles, cascade
                        level/grouping sweep, 3 SRAM sizes
+    --chips 1,4,16     chip partitioning as a packaging axis: each chip
+                       count is measured once on the distributed runtime
+                       (board-level trace cached), priced across the
+                       board-link provisioning sweep, and Pareto-ranked
+                       against the other counts — Fig. 9/10 curves with
+                       chip count on the front
     --smoke            tiny grid, 2 package configs, cached-counter
-                       round-trip assertion (CI)
+                       round-trip assertion (CI); with --chips N it
+                       additionally asserts the re-pricing contract on a
+                       measured N-chip trace
 
 Counters are cached under ``--cache-dir`` (default
 ``benchmarks/.cache/products``); delete the directory to force
@@ -24,14 +32,17 @@ re-measurement.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 
 from common import row
 
+from repro.core.costmodel import DCRA_SRAM
 from repro.core.proxy import max_cascade_levels
 from repro.core.tilegrid import square_grid
 from repro.products import (FULL_SRAM_MIB, MeasureSpec, ProductSearch,
-                            pareto_front, product_space, select_products)
+                            chip_counts_for, pareto_front, product_space,
+                            select_products)
 
 DEFAULT_CACHE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              ".cache", "products")
@@ -113,6 +124,50 @@ def run(small: bool = True, cache_dir: str = DEFAULT_CACHE):
     return rows
 
 
+def run_chips(chip_counts, small: bool = True,
+              cache_dir: str = DEFAULT_CACHE):
+    """Chip partitioning as a packaging axis: measure each (app, chips)
+    once on the distributed runtime, price across the board-link
+    provisioning sweep, and put chip count on the Pareto front."""
+    search = ProductSearch(cache_dir=cache_dir)
+    tiles = 1024 if small else 4096
+    scale = 11 if small else 13
+    counts = chip_counts_for(tiles, chip_counts)
+    for n in chip_counts:
+        if max(n, 1) not in counts:
+            print(f"# product_search: skipped chips={n} (cannot "
+                  f"block-partition the {tiles}-tile grid)", flush=True)
+    if not counts:
+        raise SystemExit(
+            f"--chips {','.join(map(str, chip_counts))}: no requested "
+            f"count can partition the {tiles}-tile grid")
+    specs = [MeasureSpec(app="sssp", scale=scale, tiles=tiles),
+             MeasureSpec(app="histo", scale=scale, tiles=tiles)]
+    rows = []
+    for n in counts:
+        configs = product_space(
+            memory=("sram", "hbm-horiz"),
+            network=("a_2x32_od32", "d_32+64_od64"),
+            chips=(n,), board_links=(1, 2, 4) if n > 1 else (2,))
+        rows.extend(search.sweep(specs, configs))
+    _emit(rows, search)
+    # chip count on the Pareto front: rank every chip count's products
+    # together, per app, and name the per-objective winner at each scale
+    for app in sorted({r["app"] for r in rows}):
+        group = [r for r in rows if r["app"] == app]
+        front = pareto_front(group)
+        chips_on_front = sorted({r["chips"] for r in front})
+        row(f"product/chips-pareto/{app}", len(front),
+            "front_chips=" + ",".join(str(c) for c in chips_on_front))
+        for n in counts:
+            sub = [r for r in group if r["chips"] == n]
+            sel = select_products(sub, ("time", "energy", "cost"))
+            picks = ";".join(f"{obj}={r['product']}"
+                             for obj, r in sel.items())
+            row(f"product/chips-select/{app}/{n}chips", len(sub), picks)
+    return rows
+
+
 def smoke(cache_dir: str = DEFAULT_CACHE) -> None:
     """CI smoke: tiny grid, 2 package configs, cache round-trip."""
     search = ProductSearch(cache_dir=cache_dir)
@@ -140,14 +195,76 @@ def smoke(cache_dir: str = DEFAULT_CACHE) -> None:
     print("# product_search smoke: OK", flush=True)
 
 
+def smoke_chips(chips: int, cache_dir: str = DEFAULT_CACHE) -> None:
+    """CI smoke for the chips axis: a tiny N-chip measurement on the
+    distributed runtime round-trips through the cache, and re-pricing the
+    cached board-level trace under its measured PackageConfig reproduces
+    the directly measured ``run.time_s`` (the acceptance contract)."""
+    if chips <= 1:
+        raise SystemExit(
+            "--smoke --chips needs a chip count > 1: the contract under "
+            "test is the board leg, which only exists on a real partition")
+    search = ProductSearch(cache_dir=cache_dir)
+    spec = MeasureSpec(app="sssp", scale=8, tiles=64)
+    configs = product_space(memory=("sram",),
+                            network=("a_2x32_od32", "d_32+64_od64"),
+                            chips=(chips,), board_links=(1, 2))
+    rows1 = search.sweep([spec], configs)
+    runs_after_first = search.engine_runs
+    rows2 = search.sweep([spec], configs)   # must be pure cache hits
+    assert search.engine_runs == runs_after_first, \
+        "second sweep re-ran the engine despite a cached N-chip trace"
+    assert all(r["from_cache"] and r["chips"] == chips for r in rows2)
+    for r1, r2 in zip(rows1, rows2):
+        assert r1["time_s"] == r2["time_s"], (r1, r2)
+        assert r1["cost_usd"] == r2["cost_usd"], (r1, r2)
+    # the re-pricing contract on the measured partition: the cached
+    # N-chip trace priced under its measured config reproduces the
+    # directly measured run time
+    m = search.measure(dataclasses.replace(spec, chips=chips))
+    assert m.from_cache and m.trace.chips_y * m.trace.chips_x == chips
+    rep = search.price_product(m, dataclasses.replace(DCRA_SRAM,
+                                                      chips=chips))
+    assert abs(rep.time_s - m.time_s) <= 1e-12 * m.time_s, \
+        (rep.time_s, m.time_s)
+    # board-link provisioning is live and monotone: halving the links
+    # can never make the same measured traffic faster
+    for meas in {r["measurement"] for r in rows2}:
+        t = {r["product"]: r["time_s"] for r in rows2
+             if r["measurement"] == meas}
+        for netname in ("a", "d"):
+            assert t[f"sram/net-{netname}/sram1.5/c{chips}/bl1"] >= \
+                t[f"sram/net-{netname}/sram1.5/c{chips}"], t
+    _emit(rows2, search)
+    print(f"# product_search smoke --chips {chips}: OK "
+          f"(reprice == measured at {m.time_s:.3e}s)", flush=True)
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--chips", type=str, default=None,
+                    help="comma-separated chip counts for the chip-"
+                         "partitioning axis (e.g. 1,4,16); with --smoke, "
+                         "a single count > 1 for the CI contract check")
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE)
     a = ap.parse_args()
-    if a.smoke:
+    if a.chips:
+        try:
+            counts = tuple(int(c) for c in a.chips.split(","))
+        except ValueError:
+            raise SystemExit(f"--chips {a.chips!r}: expected an integer "
+                             f"or comma-separated integers")
+    if a.smoke and a.chips:
+        if len(counts) != 1:
+            raise SystemExit(f"--smoke --chips {a.chips!r}: the CI "
+                             f"contract check takes a single count > 1")
+        smoke_chips(counts[0], cache_dir=a.cache_dir)
+    elif a.smoke:
         smoke(cache_dir=a.cache_dir)
+    elif a.chips:
+        run_chips(counts, small=not a.full, cache_dir=a.cache_dir)
     else:
         run(small=not a.full, cache_dir=a.cache_dir)

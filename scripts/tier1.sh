@@ -1,7 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md): the one command every PR must keep green.
-#   scripts/tier1.sh [extra pytest args]
+#   scripts/tier1.sh [extra pytest args]   # per-PR lane: -m "not slow"
+#   scripts/tier1.sh --full [args]         # nightly lane: whole suite,
+#                                          # including slow property sweeps
+# (--full must be the first argument; pytest keeps only the last -m, so
+# passing your own -m in the per-PR lane replaces the "not slow" filter)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+if [[ "${1:-}" == "--full" ]]; then
+  shift
+  exec python -m pytest -x -q "$@"
+fi
+exec python -m pytest -x -q -m "not slow" "$@"

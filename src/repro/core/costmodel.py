@@ -92,6 +92,16 @@ INTERPOSER_COST_FRAC_OF_DIE = 0.20   # HBM<->DCRA silicon interposer
 SUBSTRATE_COST_FRAC_OF_DIE = 0.10    # organic substrate, per equal area
 BONDING_COST_FRAC = 0.05
 
+# Board-level packaging economics (the chip-partitioning axis): a chip
+# product built as N separately packaged chips pays per-chip IO dies,
+# board sockets/traces per chip site, a per-link SERDES+trace cost, and
+# a known-good-assembly yield per bonded die (more dies in one package
+# -> lower assembly yield; splitting into more chips trades that against
+# extra IO dies and board links).
+BOARD_LINK_USD = 3.0                 # SERDES lanes + board traces per link
+BOARD_USD_PER_CHIP = 25.0            # socket/site + assembly per chip
+CHIP_ASSEMBLY_YIELD_PER_DIE = 0.995  # multi-die package assembly yield/die
+
 # PU model: simple in-order core, ~instructions per task-record / per edge.
 PU_PJ_PER_OP = 2.0          # 7nm in-order RISC-V class energy/op (refs [90],[93])
 PU_OPS_PER_RECORD = 8.0     # drain+compare+update per mailbox record
@@ -115,6 +125,16 @@ class PackageConfig:
     # (at 1 GHz: numerically Gbit/s per link; 512 = 64 GB/s).
     off_pkg_gbs_per_die_edge: float = 512.0
     noc_count: int = 2                     # physical NoCs
+    # Chip partitioning as a packaging decision (paper's multi-node
+    # regime): ``chips`` is how many separately packaged chips the tile
+    # grid is split into at board level (0 = unpartitioned / inherit the
+    # measurement's partition), and ``board_links_y`` / ``board_links_x``
+    # are the per-axis board-link provisioning — links laid between each
+    # adjacent chip pair along that axis of the chip grid (the default 2
+    # reproduces the distributed runtime's historical provisioning).
+    chips: int = 0
+    board_links_y: int = 2
+    board_links_x: int = 2
 
     @property
     def has_hbm(self) -> bool:
@@ -205,7 +225,17 @@ class SystemReport:
 
 
 def system_cost_usd(cfg: PackageConfig, grid: TileGrid) -> float:
-    """Dollar cost of the grid: DCRA dies + HBM + interposer/substrate/bonding."""
+    """Dollar cost of the grid: DCRA dies + HBM + interposer/substrate/bonding.
+
+    When ``cfg.chips >= 1`` the grid is priced as a *board-level product*
+    of that many separately packaged chips: the same silicon, but each
+    chip pays its own IO dies and board site, the board pays per-link
+    provisioning (``board_link_provisioning``), and package assembly
+    yield degrades with the number of dies bonded into one chip
+    (``CHIP_ASSEMBLY_YIELD_PER_DIE``).  ``cfg.chips == 0`` keeps the
+    legacy monolithic-assembly model (one IO-die pair per package, no
+    board terms) so unpartitioned pricing is unchanged.
+    """
     die_a = dcra_die_area_mm2(cfg, grid)
     dcra_unit = die_cost(die_a)
     dy, dx = grid.dies
@@ -220,8 +250,21 @@ def system_cost_usd(cfg: PackageConfig, grid: TileGrid) -> float:
     # organic substrate (10% of equal-area die cost) + bonding 5%/die
     cost += n_dies * SUBSTRATE_COST_FRAC_OF_DIE * dcra_unit
     cost *= (1.0 + BONDING_COST_FRAC)
-    # I/O dies: one per package edge, small 16-tile-edge die, cheap node
-    cost += grid.num_packages * 2 * die_cost(30.0)
+    if cfg.chips >= 1:
+        cy, cx = chip_partition_dims(cfg, grid)
+        n_chips = cy * cx
+        # known-good-die assembly: every die bonded into a chip must
+        # survive assembly for the chip to ship
+        assembly_yield = CHIP_ASSEMBLY_YIELD_PER_DIE ** (n_dies / n_chips)
+        cost /= assembly_yield
+        # IO dies per chip (board-network ingress/egress) + board terms
+        cost += n_chips * 2 * die_cost(30.0)
+        cost += n_chips * BOARD_USD_PER_CHIP
+        if n_chips > 1:
+            cost += board_link_provisioning(cfg, cy, cx) * BOARD_LINK_USD
+    else:
+        # I/O dies: one per package edge, small 16-tile-edge die, cheap node
+        cost += grid.num_packages * 2 * die_cost(30.0)
     return cost
 
 
@@ -243,6 +286,30 @@ def link_provisioning(grid: TileGrid, pkg: PackageConfig) -> dict:
     return dict(intra=grid.num_tiles * 2 * pkg.noc_count, die=n_die_links,
                 pkg=n_pkg_links,
                 diameter=(grid.ny + grid.nx) / (2 if grid.torus else 1))
+
+
+def board_link_provisioning(cfg: PackageConfig, chips_y: int,
+                            chips_x: int) -> int:
+    """Total board links provisioned for a (chips_y x chips_x) chip grid
+    under ``cfg``'s per-axis knobs: ``board_links_x`` links between each
+    horizontally adjacent chip pair, ``board_links_y`` vertically.  The
+    single formula the distributed run loop and analytic re-pricing share
+    — re-pricing a measured trace under its own config must reproduce the
+    run loop's board serialization exactly."""
+    return max(1, chips_y * (chips_x - 1) * cfg.board_links_x
+               + chips_x * (chips_y - 1) * cfg.board_links_y)
+
+
+def chip_partition_dims(cfg: PackageConfig, grid: TileGrid):
+    """(chips_y, chips_x) of the board partition ``cfg.chips`` selects on
+    ``grid`` (the most square dividing chip grid, same rule as
+    ``tilegrid.partition_grid``).  Returns (1, 1) for unpartitioned
+    products; raises ValueError when the count cannot partition the grid."""
+    if cfg.chips <= 1:
+        return 1, 1
+    from .tilegrid import partition_grid
+    part = partition_grid(grid, cfg.chips)
+    return part.chips_y, part.chips_x
 
 
 def _off_pkg_bits_per_cycle(cfg: PackageConfig) -> float:
@@ -312,6 +379,8 @@ def _trace_from_peak(peak) -> tuple:
 
     trace = {k: vec(k) for k in SuperstepTrace._VECTOR_FIELDS}
     trace["board_links"] = int(d.get("board_links", 1))
+    trace["chips_y"] = int(d.get("chips_y", 1))
+    trace["chips_x"] = int(d.get("chips_x", 1))
     hbm = vec("hbm_bits") if "hbm_bits" in d else None
     return trace, hbm
 
@@ -331,6 +400,32 @@ def trace_time_s(cfg: PackageConfig, grid: TileGrid, trace,
     if td is None:
         raise ValueError("trace has no per-superstep level-traffic keys")
     return _trace_time_s_parsed(cfg, grid, td, hbm_bits, mem_bits_hbm)
+
+
+def _board_links_for(cfg: PackageConfig, td) -> int:
+    """Board-link count the BSP board leg serializes over.
+
+    A trace that recorded its chip-partition geometry is re-provisioned
+    under *this* config's per-axis board-link knobs — the rescaling that
+    makes board-link provisioning a packaging axis.  Traces without
+    geometry (legacy dicts, monolithic runs) keep their recorded count.
+    A config that names a chip count different from the measured
+    partition is rejected: the off-chip traffic in the trace is a
+    property of the partition it ran on, so cross-chip-count re-pricing
+    needs a new measurement, not a rescale (``ProductSearch.sweep``
+    re-measures per chip count).
+    """
+    cy, cx = int(td["chips_y"]), int(td["chips_x"])
+    measured = cy * cx
+    if cfg.chips >= 1 and cfg.chips != max(measured, 1):
+        raise ValueError(
+            f"config prices a {cfg.chips}-chip product but the trace was "
+            f"measured on a {cy}x{cx} chip partition ({max(measured, 1)} "
+            f"chips); re-measure at chips={cfg.chips} instead of "
+            f"re-pricing across chip counts")
+    if measured > 1:
+        return board_link_provisioning(cfg, cy, cx)
+    return int(td["board_links"])
 
 
 def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
@@ -354,7 +449,7 @@ def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
                     pkg_bits=td["pkg_bits"],
                     endpoint_bits=td["endpoint_bits"], hbm_bits=hbm_bits,
                     off_chip_bits=td["off_chip_bits"],
-                    board_links=td["board_links"], n_dies=dy * dx)
+                    board_links=_board_links_for(cfg, td), n_dies=dy * dx)
     charged = (t > 0) | (td["pending"] > 0)
     cycles = float(np.sum(t[charged]))
     cycles += float(np.sum(charged)) * links["diameter"] * 0.5

@@ -93,7 +93,12 @@ class SuperstepTrace:
                      pipeline fill; flush-only steps still do).
 
     ``board_links`` is the provisioned board-link count of the partition
-    the run executed on (1 for a monolithic run).
+    the run executed on (1 for a monolithic run); ``chips_y`` /
+    ``chips_x`` record that partition's chip-grid geometry (1x1
+    monolithic), which is what lets ``costmodel.price`` re-provision the
+    board leg per axis under an arbitrary :class:`PackageConfig` while
+    refusing to re-price the trace at a *different* chip count (the
+    off-chip traffic is a property of the measured partition).
     """
 
     compute_ops: List[float] = dataclasses.field(default_factory=list)
@@ -106,6 +111,8 @@ class SuperstepTrace:
     touched_bits: List[float] = dataclasses.field(default_factory=list)
     pending: List[float] = dataclasses.field(default_factory=list)
     board_links: int = 1
+    chips_y: int = 1
+    chips_x: int = 1
 
     _VECTOR_FIELDS = ("compute_ops", "intra_bits", "die_bits", "pkg_bits",
                       "endpoint_bits", "off_chip_bits", "off_chip_msgs",
@@ -171,17 +178,23 @@ class SuperstepTrace:
         for f in self._VECTOR_FIELDS:
             getattr(self, f).extend(getattr(other, f))
         self.board_links = max(self.board_links, other.board_links)
+        self.chips_y = max(self.chips_y, other.chips_y)
+        self.chips_x = max(self.chips_x, other.chips_x)
         return self
 
     def to_dict(self) -> Dict[str, object]:
         d: Dict[str, object] = {f: list(getattr(self, f))
                                 for f in self._VECTOR_FIELDS}
         d["board_links"] = self.board_links
+        d["chips_y"] = self.chips_y
+        d["chips_x"] = self.chips_x
         return d
 
     @classmethod
     def from_dict(cls, d) -> "SuperstepTrace":
-        t = cls(board_links=int(d.get("board_links", 1)))
+        t = cls(board_links=int(d.get("board_links", 1)),
+                chips_y=int(d.get("chips_y", 1)),
+                chips_x=int(d.get("chips_x", 1)))
         for f in cls._VECTOR_FIELDS:
             getattr(t, f).extend(float(v) for v in d.get(f, ()))
         return t

@@ -49,7 +49,8 @@ import numpy as np
 from ..core import collectives, netstats
 from ..core.compat import shard_map
 from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
-                              _off_pkg_bits_per_cycle, link_provisioning)
+                              _off_pkg_bits_per_cycle,
+                              board_link_provisioning, link_provisioning)
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
                            RunResult, _drain_chunked, _pad,
                            _ProgressReporter, _scan_steps, _stat_keys,
@@ -438,8 +439,12 @@ class DistributedEngine:
         pkg = cfg.pkg
         links = link_provisioning(cfg.grid, pkg)
         cy, cx = part.chips_y, part.chips_x
-        n_board_links = max(1, (cy * (cx - 1) + cx * (cy - 1)) * 2)
-        trace = SuperstepTrace(board_links=n_board_links)
+        # board links provisioned under the run's own PackageConfig (the
+        # per-axis knobs) — shared formula with costmodel's re-pricing so
+        # pricing the trace under this config reproduces this run's time
+        n_board_links = board_link_provisioning(pkg, cy, cx)
+        trace = SuperstepTrace(board_links=n_board_links,
+                               chips_y=cy, chips_x=cx)
         io_lat_cycles = 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ   # Tx + Rx IO die
 
         def account(stats):

@@ -52,7 +52,10 @@ def _measure(g, grid, chips: int, oq_cap: int, pkg: PackageConfig,
     proxy = apps.table2_proxy(grid, "bfs") if use_proxy else None
     kw = {} if run_chunk is None else dict(run_chunk=run_chunk)
     r = apps.bfs(g, root, grid, proxy=proxy, oq_cap=oq_cap,
-                 chips=chips, backend=backend, **kw)
+                 chips=chips, backend=backend, pkg=pkg, **kw)
+    # re-price the measured trace under the run's own package config: the
+    # cross-check that the analytic board-level pricing contract holds on
+    # a *directly measured* N-chip run (reprice_ratio must be ~1)
     rep = price(pkg, grid, r.run.counters,
                 mem_bits_sram=float(g.footprint_bytes() * 8),
                 per_superstep_peak=r.run.trace)
@@ -66,7 +69,9 @@ def _measure(g, grid, chips: int, oq_cap: int, pkg: PackageConfig,
                 energy_j=rep.energy_j, cost_usd=rep.cost_usd,
                 off_chip_j=rep.breakdown["off_chip_j"],
                 gteps_per_w=r.gteps / max(rep.power_w, 1e-12),
-                gteps_per_usd=r.gteps / rep.cost_usd)
+                gteps_per_usd=r.gteps / rep.cost_usd,
+                reprice_time_s=rep.time_s,
+                reprice_ratio=rep.time_s / max(r.run.time_s, 1e-30))
 
 
 def weak_scaling(chip_counts: Sequence[int] = WEAK_CHIP_COUNTS,

@@ -234,6 +234,12 @@ def histogram(values: np.ndarray, bins: int, grid: TileGrid,
 APPS = dict(bfs=bfs, sssp=sssp, wcc=wcc, pagerank=pagerank, spmv=spmv,
             histo=histogram)
 
+# Apps that honour a ``chips=N`` kw by running on the distributed runtime
+# (all six today; the registry exists so callers that *measure* under a
+# chip partition — e.g. ``ProductSearch`` — can validate support up front
+# instead of silently dropping the kw for a future non-distributed app).
+DISTRIBUTED_APPS = frozenset(APPS)
+
 
 def _zero_counters():
     from ..core.netstats import TrafficCounters

@@ -9,12 +9,14 @@ products per target metric.
 from .cache import CounterCache, stable_hash
 from .search import (OBJECTIVES, Measurement, MeasureSpec, ProductSearch,
                      pareto_front, product_row, select_products)
-from .space import (DEFAULT_SRAM_MIB, FULL_SRAM_MIB, MEMORY_STYLES,
+from .space import (CHIP_COUNTS, DEFAULT_BOARD_LINKS, DEFAULT_SRAM_MIB,
+                    FULL_SRAM_MIB, MEMORY_STYLES, chip_counts_for,
                     product_space)
 
 __all__ = [
     "CounterCache", "stable_hash",
     "OBJECTIVES", "Measurement", "MeasureSpec", "ProductSearch",
     "pareto_front", "product_row", "select_products",
-    "DEFAULT_SRAM_MIB", "FULL_SRAM_MIB", "MEMORY_STYLES", "product_space",
+    "CHIP_COUNTS", "DEFAULT_BOARD_LINKS", "DEFAULT_SRAM_MIB",
+    "FULL_SRAM_MIB", "MEMORY_STYLES", "chip_counts_for", "product_space",
 ]

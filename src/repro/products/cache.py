@@ -20,7 +20,11 @@ import os
 import tempfile
 from typing import Dict, Optional
 
-SCHEMA_VERSION = 1
+# v2: SuperstepTrace payloads carry the measured chip-partition geometry
+# (chips_y / chips_x) — v1 entries predate the chips packaging axis and
+# are rejected as misses (re-measured), never silently re-priced without
+# their partition geometry.
+SCHEMA_VERSION = 2
 
 
 def stable_hash(obj) -> str:

@@ -28,7 +28,7 @@ import numpy as np
 from ..core.costmodel import (PackageConfig, SystemReport,
                               dcache_memory_bits, price)
 from ..core.netstats import MSG_BITS, SuperstepTrace, TrafficCounters
-from ..core.tilegrid import TileGrid, square_grid
+from ..core.tilegrid import TileGrid, partition_grid, square_grid
 from .cache import CounterCache, stable_hash
 
 DEFAULT_CACHE_DIR = ".repro_cache/products"
@@ -128,16 +128,49 @@ class ProductSearch:
         self.engine_runs = 0     # measurements that actually ran the engine
 
     # ------------------------------------------------------------- measure
-    def measure(self, spec: MeasureSpec) -> Measurement:
+    @staticmethod
+    def validate(spec: MeasureSpec) -> None:
+        """Reject unmeasurable specs up front with actionable errors —
+        before dataset generation, and instead of silently passing a
+        ``chips`` the app layer cannot honour."""
+        from ..graph import apps
+        if spec.app not in apps.APPS:
+            raise ValueError(
+                f"unknown app {spec.app!r}; measurable apps: "
+                f"{sorted(apps.APPS)}")
+        if spec.chips > 1:
+            if spec.app not in apps.DISTRIBUTED_APPS:
+                raise ValueError(
+                    f"app {spec.app!r} does not support distributed "
+                    f"measurement (chips={spec.chips}); distributed apps: "
+                    f"{sorted(apps.DISTRIBUTED_APPS)}")
+            try:
+                partition_grid(square_grid(spec.tiles), spec.chips)
+            except ValueError as e:
+                raise ValueError(
+                    f"spec {spec.label!r}: chips={spec.chips} cannot "
+                    f"block-partition the {spec.tiles}-tile grid ({e})"
+                ) from None
+
+    def measure(self, spec: MeasureSpec,
+                run_chunk: Optional[int] = None) -> Measurement:
+        """Cached engine measurement of ``spec``.
+
+        ``run_chunk`` only selects the run loop's supersteps-per-dispatch
+        (chunked execution is bit-identical to per-step — see
+        tests/test_chunked.py), so it is *not* part of the cache key.
+        """
+        self.validate(spec)
         key = spec.key()
         payload = self.cache.get(key)
         if payload is not None:
             return Measurement.from_payload(spec, payload)
-        m = self._run_engine(spec)
+        m = self._run_engine(spec, run_chunk=run_chunk)
         self.cache.put(key, m.to_payload())
         return m
 
-    def _run_engine(self, spec: MeasureSpec) -> Measurement:
+    def _run_engine(self, spec: MeasureSpec,
+                    run_chunk: Optional[int] = None) -> Measurement:
         from ..graph import apps
         from ..graph.rmat import rmat_edges
 
@@ -150,6 +183,8 @@ class ProductSearch:
         kw = dict(proxy=proxy, oq_cap=spec.oq_cap)
         if spec.chips > 1:
             kw["chips"] = spec.chips
+        if run_chunk is not None:
+            kw["run_chunk"] = run_chunk
         if spec.app == "histo":
             rng = np.random.default_rng(spec.seed)
             n = spec.edge_factor << spec.scale
@@ -191,23 +226,58 @@ class ProductSearch:
     def price_product(self, m: Measurement,
                       cfg: PackageConfig) -> SystemReport:
         """Analytic re-pricing of one measurement under one product,
-        using the shared D$ memory policy (``dcache_memory_bits``)."""
+        using the shared D$ memory policy (``dcache_memory_bits``).
+
+        A config that names a chip count must be priced on a measurement
+        taken at that chip count — the trace's off-chip traffic is a
+        property of the measured partition (``sweep`` re-measures per
+        chip count; ``price`` enforces the same rule on the trace).
+        """
+        if cfg.chips >= 1 and cfg.chips != max(m.spec.chips, 1):
+            raise ValueError(
+                f"product {cfg.name!r} is a {cfg.chips}-chip packaging "
+                f"but measurement {m.spec.label!r} ran on "
+                f"{max(m.spec.chips, 1)} chip(s); measure at "
+                f"chips={cfg.chips} (sweep() does this per chip count)")
         sram, hbm = dcache_memory_bits(cfg, m.touched_bits)
         return price(cfg, m.grid, m.counters, mem_bits_sram=sram,
                      mem_bits_hbm=hbm, per_superstep_peak=m.trace)
 
     # --------------------------------------------------------------- sweep
+    @staticmethod
+    def spec_for_product(spec: MeasureSpec,
+                         cfg: PackageConfig) -> MeasureSpec:
+        """The measurement a product config must be priced on: the spec
+        re-based to the config's chip count (chips<=1 products price the
+        monolithic measurement; chips=0 configs inherit the spec's own
+        partition)."""
+        if cfg.chips == 0:
+            return spec
+        chips = cfg.chips if cfg.chips > 1 else 0
+        if chips == spec.chips:
+            return spec
+        return dataclasses.replace(spec, chips=chips)
+
     def sweep(self, specs: Iterable[MeasureSpec],
               configs: Sequence[PackageConfig]) -> List[Dict]:
-        """Measure each spec once, price it under every config.
+        """Measure each spec once *per chip count*, price it under every
+        config of that chip count.
 
-        Returns flat rows (one per spec x config) carrying the metric
-        columns the paper's Fig. 9/10 curves plot.
+        Configs with ``chips >= 1`` re-base the spec onto the distributed
+        runtime at that partition (measured once and cached like any
+        other spec); all same-chip-count configs re-price the one cached
+        board-level trace analytically.  Returns flat rows (one per spec
+        x config) carrying the metric columns the paper's Fig. 9/10
+        curves plot.
         """
         rows = []
         for spec in specs:
-            m = self.measure(spec)
+            measured: Dict[str, Measurement] = {}
             for cfg in configs:
+                s = self.spec_for_product(spec, cfg)
+                m = measured.get(s.key())
+                if m is None:
+                    m = measured[s.key()] = self.measure(s)
                 rep = self.price_product(m, cfg)
                 rows.append(product_row(m, cfg, rep))
         return rows
@@ -219,6 +289,7 @@ def product_row(m: Measurement, cfg: PackageConfig,
     return dict(
         measurement=m.spec.label, product=cfg.name,
         app=m.spec.app, tiles=m.spec.tiles,
+        chips=max(m.spec.chips, 1),
         cascade_levels=m.spec.cascade_levels,
         cascade_group=m.spec.cascade_group,
         time_s=rep.time_s, energy_j=rep.energy_j, cost_usd=rep.cost_usd,

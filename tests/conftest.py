@@ -19,6 +19,13 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "property: hypothesis property-based tests "
                    "(skipped when hypothesis is not installed)")
+    # The slow marker splits nightly-style suites out of the per-PR lane:
+    # scripts/tier1.sh runs `-m "not slow"` by default and everything
+    # under `--full` (the CI workflow's per-PR job uses the default).
+    config.addinivalue_line(
+        "markers", "slow: nightly-style tests (property sweeps that run "
+                   "the engine repeatedly); excluded by scripts/tier1.sh "
+                   "unless invoked with --full")
 
 
 @pytest.fixture(scope="session")

@@ -202,8 +202,11 @@ def test_pallas_backend_matches_jnp_oracle(name):
                             backend="pallas")
         # integer counts: exact even under add re-association
         assert np.array_equal(rj.values, rp.values)
-    # network accounting is shared by both backends
+    # network accounting is shared by both backends — whole-run counters
+    # and the per-superstep re-pricing trace (so a pallas-measured run
+    # prices identically to the jnp oracle across the product space)
     assert (rj.run.counters.as_dict() == rp.run.counters.as_dict())
+    assert rj.run.trace.to_dict() == rp.run.trace.to_dict()
 
 
 def test_pallas_backend_rejected_distributed(g, root):

@@ -1,13 +1,22 @@
 """Cost/energy model sanity (paper §IV-B constants and Fig. 9 structure)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core.costmodel import (DALOREX, DCRA_HBM_HORIZ, DCRA_HBM_VERT,
-                                  DCRA_SRAM, NETWORK_OPTIONS, dcra_die_area_mm2,
+                                  DCRA_SRAM, NETWORK_OPTIONS,
+                                  board_link_provisioning, dcra_die_area_mm2,
                                   die_cost, dies_per_wafer, murphy_yield,
                                   price, system_cost_usd, tile_area_mm2)
 from repro.core.netstats import TrafficCounters
 from repro.core.tilegrid import TileGrid, square_grid
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # property tests below degrade to skips
+    given = None
 
 
 def test_murphy_yield_monotone():
@@ -196,6 +205,136 @@ def test_reprice_empty_trace_falls_back_to_roofline():
                  per_superstep_peak=SuperstepTrace()).time_s == base
     assert price(DCRA_SRAM, g, c,
                  per_superstep_peak=dict(compute_ops=[])).time_s == base
+
+
+# --------------------------------------------------------------------------
+# chip partitioning as a packaging axis (board leg + board-level $)
+# --------------------------------------------------------------------------
+def _board_trace(steps=4, chips=(2, 2)):
+    """Synthetic distributed trace where the board leg dominates, so
+    board-link provisioning decides the BSP time."""
+    cy, cx = chips
+    return dict(compute_ops=[1e3] * steps, intra_bits=[1e6] * steps,
+                die_bits=[0.0] * steps, pkg_bits=[0.0] * steps,
+                off_chip_bits=[5e9] * steps, off_chip_msgs=[100.0] * steps,
+                chips_y=cy, chips_x=cx,
+                board_links=board_link_provisioning(DCRA_SRAM, cy, cx))
+
+
+def test_board_link_provisioning_formula():
+    # 2x2 chip grid, default 2 links/adjacent pair/axis: 2*(2-1)*2 * 2axes
+    assert board_link_provisioning(DCRA_SRAM, 2, 2) == 8
+    assert board_link_provisioning(DCRA_SRAM, 1, 1) == 1     # floor
+    wide = dataclasses.replace(DCRA_SRAM, board_links_y=4, board_links_x=1)
+    # per-axis: 4 vertical-pair links * chips_x + 1 horizontal * chips_y
+    assert board_link_provisioning(wide, 2, 2) == 2 * 1 + 2 * 4
+
+
+def test_board_leg_rescaled_by_per_axis_provisioning():
+    """Re-pricing a distributed trace under different board-link knobs
+    rescales the board serialization leg — fewer links, strictly slower
+    when the board dominates; wider provisioning can never hurt."""
+    g = square_grid(1024)
+    c = _counters()
+    tr = _board_trace()
+    t2 = price(DCRA_SRAM, g, c, per_superstep_peak=tr).time_s
+    t1 = price(dataclasses.replace(DCRA_SRAM, board_links_y=1,
+                                   board_links_x=1), g, c,
+               per_superstep_peak=tr).time_s
+    t4 = price(dataclasses.replace(DCRA_SRAM, board_links_y=4,
+                                   board_links_x=4), g, c,
+               per_superstep_peak=tr).time_s
+    assert t1 > t2 > t4
+    # board-dominated: halving provisioning ~doubles the serialization
+    assert t1 / t2 == pytest.approx(2.0, rel=0.05)
+
+
+def test_reprice_rejects_chip_count_mismatch():
+    """A trace measured on one partition cannot be re-priced as a product
+    with a different chip count — its off-chip traffic is a property of
+    the measured partition."""
+    g = square_grid(1024)
+    c = _counters()
+    tr = _board_trace(chips=(2, 2))
+    ok = dataclasses.replace(DCRA_SRAM, chips=4)
+    assert price(ok, g, c, per_superstep_peak=tr).time_s > 0
+    for chips in (1, 2, 16):
+        with pytest.raises(ValueError, match="chip"):
+            price(dataclasses.replace(DCRA_SRAM, chips=chips), g, c,
+                  per_superstep_peak=tr)
+    # monolithic trace, multi-chip product: also a measurement mismatch
+    with pytest.raises(ValueError, match="chip"):
+        price(ok, g, c, per_superstep_peak=_net_trace())
+
+
+def test_chip_partitioned_cost_model():
+    """chips>=1 prices board-level packaging: per-chip IO dies and board
+    sites, per-link board cost, and assembly yield per bonded die."""
+    g = square_grid(4096)                       # 4x4 dies
+    mono = system_cost_usd(DCRA_SRAM, g)        # chips=0: legacy model
+    c1 = system_cost_usd(dataclasses.replace(DCRA_SRAM, chips=1), g)
+    c4 = system_cost_usd(dataclasses.replace(DCRA_SRAM, chips=4), g)
+    c16 = system_cost_usd(dataclasses.replace(DCRA_SRAM, chips=16), g)
+    assert mono > 0 and c1 > 0
+    # more chips: more IO dies + board sites/links on the same silicon
+    assert c4 > c1 and c16 > c4
+    # board links are priced hardware: wider provisioning costs more
+    wide = dataclasses.replace(DCRA_SRAM, chips=16, board_links_y=8,
+                               board_links_x=8)
+    assert system_cost_usd(wide, g) > c16
+    # a chip count that cannot partition the grid is rejected
+    with pytest.raises(ValueError):
+        system_cost_usd(dataclasses.replace(DCRA_SRAM, chips=5), g)
+
+
+def test_assembly_yield_favors_splitting_large_builds():
+    """The partitioning tradeoff the $ model encodes: bonding all dies of
+    a very large grid into one package pays an assembly-yield penalty
+    that eventually exceeds the extra IO-die/board cost of splitting."""
+    g = square_grid(65536)                      # 16x16 = 256 dies
+    c1 = system_cost_usd(dataclasses.replace(DCRA_SRAM, chips=1), g)
+    c16 = system_cost_usd(dataclasses.replace(DCRA_SRAM, chips=16), g)
+    assert c16 < c1
+
+
+@pytest.mark.property
+@pytest.mark.slow
+@pytest.mark.skipif(given is None, reason="hypothesis not installed")
+def test_price_monotonicity_properties():
+    """Property: on random board-dominated traces, time is monotone
+    non-increasing in board-link width and in NoC count, and board
+    hardware $ is non-decreasing in board-link width."""
+    g = square_grid(1024)
+    c = _counters()
+
+    @settings(max_examples=25, deadline=None)
+    @given(off_bits=st.floats(1e6, 1e12), intra_bits=st.floats(1e6, 1e12),
+           steps=st.integers(1, 6), links_lo=st.integers(1, 8),
+           links_hi=st.integers(1, 8), noc_lo=st.integers(1, 4),
+           noc_hi=st.integers(1, 4))
+    def check(off_bits, intra_bits, steps, links_lo, links_hi, noc_lo,
+              noc_hi):
+        links_lo, links_hi = sorted((links_lo, links_hi))
+        noc_lo, noc_hi = sorted((noc_lo, noc_hi))
+        tr = dict(_board_trace(steps=steps),
+                  off_chip_bits=[off_bits] * steps,
+                  intra_bits=[intra_bits] * steps)
+        lo = dataclasses.replace(DCRA_SRAM, board_links_y=links_lo,
+                                 board_links_x=links_lo, noc_count=noc_lo)
+        hi = dataclasses.replace(DCRA_SRAM, board_links_y=links_hi,
+                                 board_links_x=links_hi, noc_count=noc_lo)
+        assert price(hi, g, c, per_superstep_peak=tr).time_s <= \
+            price(lo, g, c, per_superstep_peak=tr).time_s
+        more_noc = dataclasses.replace(lo, noc_count=noc_hi)
+        assert price(more_noc, g, c, per_superstep_peak=tr).time_s <= \
+            price(lo, g, c, per_superstep_peak=tr).time_s
+        cost_lo = system_cost_usd(
+            dataclasses.replace(lo, chips=4), g)
+        cost_hi = system_cost_usd(
+            dataclasses.replace(hi, chips=4), g)
+        assert cost_hi >= cost_lo
+
+    check()
 
 
 def test_reprice_energy_legs_package_invariant():

@@ -196,6 +196,67 @@ def test_more_chips_more_off_chip_traffic(g, root):
     assert offs[0] < offs[1] < offs[2]
 
 
+# ------------------------------------------- cross-runtime trace equivalence
+# Per-superstep trace fields that must be *identical* between the
+# monolithic engine and the distributed runtime on a proxy-free run: the
+# schedule is per-tile local and hop charging keeps global tile ids, so
+# splitting the grid into chips adds only the board leg (off_chip_*).
+# endpoint_bits is excluded by design: the distributed runtime accounts
+# exchange receive contention as max(local-delivery max, exchange max)
+# rather than re-deriving a fused per-tile total.
+EQUIV_TRACE_FIELDS = ("compute_ops", "intra_bits", "die_bits", "pkg_bits",
+                      "touched_bits", "pending")
+
+
+def _trace_run(name, g, root, chips=0, run_chunk=0):
+    """Proxy-free run of one app (proxies are chip-locally adapted, which
+    legitimately changes the schedule — equivalence needs them off)."""
+    kw = dict(oq_cap=16, run_chunk=run_chunk)
+    if chips:
+        kw["chips"] = chips
+    if name == "bfs":
+        return apps.bfs(g, root, GRID, **kw)
+    if name == "sssp":
+        return apps.sssp(g, root, GRID, **kw)
+    if name == "wcc":
+        return apps.wcc(g, GRID, **kw)
+    if name == "pagerank":
+        return apps.pagerank(g, GRID, epochs=2, **kw)
+    if name == "spmv":
+        x = np.random.default_rng(3).random(g.n_cols).astype(np.float32)
+        return apps.spmv(g, x, GRID, **kw)
+    if name == "histo":
+        bins = g.n_rows // 8
+        return apps.histogram(histogram_input(g, bins), bins, GRID, **kw)
+    raise ValueError(name)
+
+
+@pytest.mark.parametrize(
+    "name", ("bfs", "sssp", "wcc", "pagerank", "spmv", "histo"))
+def test_trace_equivalence_minus_board_leg(name, g, root):
+    """The distributed trace at chips=4 (aggregated over chips by the run
+    loop) equals the monolithic trace on every shared level-traffic
+    vector; only the board leg (off_chip_*) is new — under both the
+    legacy per-step loop (chunk=0) and the scan-chunked loop (chunk>0)."""
+    from repro.core.costmodel import DCRA_SRAM, board_link_provisioning
+    mono = _trace_run(name, g, root).run.trace.to_dict()
+    assert mono["chips_y"] == mono["chips_x"] == 1
+    assert sum(mono["off_chip_msgs"]) == 0
+    for chunk in (0, 8):
+        dist = _trace_run(name, g, root, chips=4,
+                          run_chunk=chunk).run.trace.to_dict()
+        for f in EQUIV_TRACE_FIELDS:
+            assert dist[f] == mono[f], (name, chunk, f)
+        # the board leg exists only once the grid is physically split
+        assert sum(dist["off_chip_msgs"]) > 0, (name, chunk)
+        assert sum(dist["off_chip_bits"]) > 0, (name, chunk)
+        # the trace records its partition geometry + the provisioning the
+        # run's own package config implies (what re-pricing rescales)
+        assert dist["chips_y"] * dist["chips_x"] == 4
+        assert dist["board_links"] == board_link_provisioning(
+            DCRA_SRAM, dist["chips_y"], dist["chips_x"])
+
+
 # ------------------------------------------------------ 1 -> 256 weak scaling
 def test_weak_scaling_monotone_gteps_and_energy_report():
     rows = harness.weak_scaling(chip_counts=(1, 4, 16, 64, 256))
@@ -210,6 +271,10 @@ def test_weak_scaling_monotone_gteps_and_energy_report():
         assert 0 < r["off_chip_j"] < r["energy_j"]
         assert r["cost_usd"] > 0
     assert rows[0]["off_chip_msgs"] == 0           # single chip: no boundary
+    # re-pricing cross-check: the analytic board-level pricing of each
+    # measured trace reproduces the directly measured N-chip time
+    for r in rows:
+        assert abs(r["reprice_ratio"] - 1.0) < 1e-9, r
 
 
 # ------------------------------------------------------- shard_map backend

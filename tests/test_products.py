@@ -1,5 +1,9 @@
 """Product-search subsystem: measure-once / price-many over the package
-design space (trace fidelity, counter cache, Pareto selection)."""
+design space (trace fidelity, counter cache, Pareto selection, and the
+chip-partitioning packaging axis)."""
+import dataclasses
+import json
+
 import numpy as np
 import pytest
 
@@ -9,6 +13,12 @@ from repro.core.proxy import max_cascade_levels
 from repro.core.tilegrid import square_grid
 from repro.products import (MeasureSpec, ProductSearch, pareto_front,
                             product_space, select_products)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # property tests below degrade to skips
+    given = None
 
 SSSP = MeasureSpec(app="sssp", scale=8, tiles=64)
 HISTO = MeasureSpec(app="histo", scale=8, tiles=64, cascade_levels=1)
@@ -119,6 +129,154 @@ def test_corrupt_cache_entry_is_a_miss(tmp_path):
     assert not m2.from_cache          # re-measured, not crashed
     assert ps.engine_runs == 2
     assert ps.measure(spec).from_cache
+
+
+# ------------------------------------------------------- chips packaging axis
+def test_sweep_chips_axis_measures_per_chip_count(tmp_path):
+    """Configs with chips=N re-base the measurement onto the distributed
+    runtime at N chips: one engine run per chip count, every same-count
+    config re-priced from the one cached board-level trace."""
+    ps = ProductSearch(cache_dir=str(tmp_path))
+    spec = MeasureSpec(app="sssp", scale=8, tiles=64)
+    cfgs = product_space(memory=("sram",), network=("d_32+64_od64",),
+                        chips=(1, 4), board_links=(1, 2))
+    rows = ps.sweep([spec], cfgs)
+    assert ps.engine_runs == 2                  # once per chip count
+    assert sorted({r["chips"] for r in rows}) == [1, 4]
+    # chips=4 rows price the distributed measurement (board leg exists)
+    by_chips = {}
+    for r in rows:
+        by_chips.setdefault(r["chips"], []).append(r)
+    assert all(r["measurement"].endswith("4chips")
+               for r in by_chips[4])
+    # board-link provisioning is live: fewer links can never be faster,
+    # and the board hardware they pay for is monotone in $
+    t = {r["product"]: r for r in by_chips[4]}
+    assert t["sram/net-d/sram1.5/c4/bl1"]["time_s"] >= \
+        t["sram/net-d/sram1.5/c4"]["time_s"]
+    assert t["sram/net-d/sram1.5/c4/bl1"]["cost_usd"] < \
+        t["sram/net-d/sram1.5/c4"]["cost_usd"]
+
+
+def test_reprice_cached_4chip_trace_exact(tmp_path):
+    """Acceptance: re-pricing a cached 4-chip trace under its measured
+    PackageConfig reproduces the directly measured run.time_s."""
+    ps = ProductSearch(cache_dir=str(tmp_path))
+    spec = MeasureSpec(app="sssp", scale=8, tiles=64, chips=4)
+    live = ps.measure(spec)
+    cached = ps.measure(spec)
+    assert cached.from_cache and not live.from_cache
+    assert cached.trace.chips_y * cached.trace.chips_x == 4
+    for m in (live, cached):
+        rep = ps.price_product(m, dataclasses.replace(DCRA_SRAM, chips=4))
+        assert rep.time_s == m.time_s == live.time_s
+
+
+def test_price_product_rejects_chip_count_mismatch(search):
+    m = search.measure(SSSP)                    # monolithic measurement
+    with pytest.raises(ValueError, match="chips=4"):
+        search.price_product(m, dataclasses.replace(DCRA_SRAM, chips=4))
+
+
+def test_measure_validates_spec():
+    ps = ProductSearch(cache_dir="/nonexistent-never-written")
+    with pytest.raises(ValueError, match="unknown app"):
+        ps.measure(MeasureSpec(app="bfsx", scale=8, tiles=64))
+    with pytest.raises(ValueError, match="cannot block-partition"):
+        ps.measure(MeasureSpec(app="sssp", scale=8, tiles=64, chips=5))
+    assert ps.engine_runs == 0                  # rejected before running
+
+
+# ------------------------------------------------------- cache correctness
+def test_spec_hash_sensitive_to_every_field():
+    """Any MeasureSpec field change (including the new chips axis) must
+    change the cache key — a stale hit would re-price the wrong trace."""
+    base = MeasureSpec(app="sssp", scale=8, tiles=64)
+    perturbed = dict(app="histo", scale=9, tiles=256, edge_factor=16,
+                     seed=2, oq_cap=16, slots=256, region_div=2,
+                     cascade_levels=1, cascade_group=4, selective=False,
+                     chips=4, epochs=5)
+    assert set(perturbed) == {f.name for f in dataclasses.fields(base)}
+    keys = {base.key()}
+    for field, value in perturbed.items():
+        assert getattr(base, field) != value, field
+        k = dataclasses.replace(base, **{field: value}).key()
+        assert k not in keys, f"key collision perturbing {field!r}"
+        keys.add(k)
+
+
+def test_stale_schema_cache_entry_rejected(tmp_path):
+    """A cache entry from an older schema is a miss (re-measured), never
+    silently re-priced without its partition geometry."""
+    ps = ProductSearch(cache_dir=str(tmp_path))
+    spec = MeasureSpec(app="histo", scale=7, tiles=16)
+    ps.measure(spec)
+    path = ps.cache.path(spec.key())
+    with open(path) as f:
+        payload = json.load(f)
+    payload["schema"] = 1                       # pre-chips-axis schema
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    m = ps.measure(spec)
+    assert not m.from_cache and ps.engine_runs == 2
+    assert ps.measure(spec).from_cache          # rewritten at current schema
+
+
+def test_concurrent_writer_round_trip(tmp_path):
+    """Two searches sharing one cache dir: whoever measures first
+    publishes atomically; the other reads it back identically.  A torn
+    write (interrupted tmp file) neither corrupts the entry nor breaks
+    later reads."""
+    spec = MeasureSpec(app="histo", scale=7, tiles=16)
+    a = ProductSearch(cache_dir=str(tmp_path))
+    b = ProductSearch(cache_dir=str(tmp_path))
+    ma = a.measure(spec)
+    mb = b.measure(spec)
+    assert a.engine_runs == 1 and b.engine_runs == 0
+    assert mb.from_cache
+    assert mb.trace.to_dict() == ma.trace.to_dict()
+    assert mb.counters.as_dict() == ma.counters.as_dict()
+    # torn write: a leftover half-written tmp never shadows the entry,
+    # and a torn final file is a miss, not a crash
+    (tmp_path / "junk.tmp").write_text('{"schema": 2, "trunc')
+    assert b.measure(spec).from_cache
+    path = a.cache.path(spec.key())
+    with open(path, "w") as f:
+        f.write('{"schema": 2, "spec": {"app": "hist')   # torn mid-write
+    m = b.measure(spec)
+    assert not m.from_cache and b.engine_runs == 1       # re-measured
+    assert b.measure(spec).from_cache                    # healed
+
+
+# ---------------------------------------------------- pricing-contract property
+@pytest.mark.property
+@pytest.mark.slow
+@pytest.mark.skipif(given is None, reason="hypothesis not installed")
+def test_pricing_contract_random_configs(tmp_path_factory):
+    """Property: for random cascade/chunk/chip measurement configs, the
+    measured trace priced under its own PackageConfig reproduces the run
+    loop's time — the contract every product row stands on."""
+    cache = str(tmp_path_factory.mktemp("contract"))
+    ps = ProductSearch(cache_dir=cache)
+
+    @settings(max_examples=6, deadline=None)
+    @given(app=st.sampled_from(("sssp", "histo")),
+           cascade_levels=st.integers(0, 1),
+           chips=st.sampled_from((0, 4)),
+           run_chunk=st.sampled_from((0, 3)),
+           seed=st.integers(1, 2))
+    def check(app, cascade_levels, chips, run_chunk, seed):
+        spec = MeasureSpec(app=app, scale=7, tiles=64, seed=seed,
+                           cascade_levels=cascade_levels, chips=chips)
+        m = ps.measure(spec, run_chunk=run_chunk)
+        cfg = dataclasses.replace(DCRA_SRAM, chips=max(chips, 1))
+        rep = ps.price_product(m, cfg)
+        assert rep.time_s == pytest.approx(m.time_s, rel=1e-9)
+        # and the chips=0 (inherit-partition) rendering agrees
+        rep0 = ps.price_product(m, DCRA_SRAM)
+        assert rep0.time_s == rep.time_s
+
+    check()
 
 
 def test_max_cascade_levels():
