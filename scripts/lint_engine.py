@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""CI lint gate: run the ``repro.analysis`` passes over the app matrix.
+
+Runs the static passes (jaxpr lint, Pallas write-race proof, dead-code
+report) and the executed invariant checks (counter conservation, trace
+sanity, reprice contract) over six apps x {jnp, pallas} x {monolithic,
+4-chip} and compares the findings against the committed baseline
+(``analysis_baseline.json`` at the repo root).  A finding whose key is
+not baselined fails the run — the baseline exists for *documented*
+exceptions (e.g. decode_attention's order-dependent softmax carry, safe
+only because the Pallas grid executes sequentially), not as a dumping
+ground; update it deliberately with ``--update-baseline``.
+
+  scripts/lint_engine.py                 # full matrix, human output
+  scripts/lint_engine.py --ci            # + write JSON report, exit 1 on
+                                         #   non-baselined findings
+  scripts/lint_engine.py --apps bfs,sssp --passes jaxprlint
+  scripts/lint_engine.py --update-baseline   # rewrite the baseline from
+                                             # this run's findings
+"""
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import load_baseline  # noqa: E402
+from repro.analysis.findings import summarize  # noqa: E402
+from repro.analysis.runner import APP_NAMES, run_all  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--apps", default=None,
+                    help=f"comma-separated subset of {','.join(APP_NAMES)}")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of "
+                         "jaxprlint,invariants,pallas_races,deadcode")
+    ap.add_argument("--baseline", default=str(REPO / "analysis_baseline.json"),
+                    help="committed baseline of accepted finding keys")
+    ap.add_argument("--out", default=None,
+                    help="write the full JSON report here")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI mode: write --out (default lint_report.json), "
+                         "exit 1 on non-baselined findings")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline from this run's finding keys")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-cell progress lines")
+    args = ap.parse_args(argv)
+
+    apps = args.apps.split(",") if args.apps else None
+    passes = args.passes.split(",") if args.passes else None
+    say = (lambda _m: None) if args.quiet else \
+        (lambda m: print(f"  [lint] {m}", flush=True))
+
+    report = run_all(REPO, app_names=apps, passes=passes, progress=say)
+    baseline = load_baseline(args.baseline)
+
+    out = args.out or ("lint_report.json" if args.ci else None)
+    if out:
+        pathlib.Path(out).write_text(report.to_json())
+        print(f"report: {out} ({len(report.findings)} finding(s), "
+              f"{len(report.matrix)} matrix cell(s))")
+
+    if args.update_baseline:
+        pathlib.Path(args.baseline).write_text(report.baseline_json())
+        print(f"baseline updated: {args.baseline} "
+              f"({len(set(report.keys()))} key(s))")
+        return 0
+
+    print(summarize(report.findings, baseline))
+    new = report.new_vs_baseline(baseline)
+    if new:
+        print(f"\nFAIL: {len(new)} non-baselined finding(s) "
+              f"(baseline: {args.baseline})")
+        return 1
+    print(f"\nOK: {len(report.findings)} finding(s), all baselined; "
+          f"{len(report.matrix)} matrix cell(s) analyzed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

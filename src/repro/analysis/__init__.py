@@ -1,0 +1,36 @@
+"""Static analysis + runtime sanitation for the engine (`repro.analysis`).
+
+The device-resident run loops (PR 4/5) made correctness rest on
+invariants that only hand-written tests enforced after the fact:
+
+  * no host syncs / callbacks inside the scanned superstep;
+  * scatter discipline (masked records dropped at the scatter, no
+    order-undefined overwrite scatters);
+  * exact-int counters riding the int32 side channel past f32's 2^24
+    integer range (``engine._EXACT_INT_STATS``);
+  * Pallas kernels writing disjoint output windows per grid program (or
+    revisiting the same window only with a commutative combine);
+  * counter conservation (every emitted record is merged, filtered or
+    delivered), hop-level decomposition, and the measure-once /
+    price-many contract (re-pricing the measured trace under its own
+    ``PackageConfig`` reproduces the run's BSP time exactly).
+
+This package proves those properties on every PR:
+
+  ``jaxprlint``     traces the chunk-step functions to ClosedJaxprs and
+                    walks them (host-sync hazards, scatter modes,
+                    uncovered int stats, jnp/pallas dtype drift).
+  ``pallas_races``  evaluates each kernel's BlockSpec index maps over
+                    the grid and proves output-window disjointness.
+  ``invariants``    post-run counter/trace conservation checks, plus
+                    the ``EngineConfig.sanitize=True`` runtime
+                    sanitizer's host-side error type.
+  ``deadcode``      import-graph reachability report from the repo's
+                    entry points.
+  ``runner``        runs every pass over the six apps x {jnp, pallas} x
+                    {monolithic, distributed} matrix
+                    (``scripts/lint_engine.py`` is the CLI; CI fails on
+                    findings not in the committed baseline).
+"""
+from .findings import Finding, Report, load_baseline  # noqa: F401
+from .invariants import SanitizerError, check_run  # noqa: F401

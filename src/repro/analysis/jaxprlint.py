@@ -1,0 +1,197 @@
+"""Jaxpr linter: static hazards of the device-resident superstep loop.
+
+The chunk-step functions (``core/engine.py::_scan_steps`` bodies and the
+distributed driver's scan) are traced to ClosedJaxprs — no device
+execution — and walked recursively (into ``scan``/``cond``/``while``
+bodies, ``pjit`` calls, custom-derivative wrappers and Pallas kernel
+jaxprs).  Rules:
+
+``host-sync``
+    Callback / infeed primitives inside the traced step.  The whole
+    point of the scanned run loop is O(supersteps/K) host syncs; a
+    ``pure_callback`` / ``io_callback`` / ``debug_callback`` (what
+    ``jax.debug.print`` lowers to) inside the scan forces a host round
+    trip per superstep — or worse, per scan iteration.
+
+``scatter-mode``
+    Overwrite scatters (primitive ``scatter``, not the commutative
+    ``scatter-add``/``-min``/``-max``/``-mul``) whose mode is not the
+    engine's ``mode="drop"`` (FILL_OR_DROP) discipline and whose indices
+    are not declared unique.  XLA's result for duplicate indices in an
+    overwrite scatter is undefined; the engine's contract is
+    at-most-one-live-writer with masked records redirected out of bounds
+    and dropped *at the scatter* — which requires FILL_OR_DROP.
+
+``int-stat-f32-row``
+    Integer-dtype per-superstep stats that ride the packed f32 stat row
+    without being covered by ``engine._EXACT_INT_STATS``.  f32 holds
+    exact integers only to 2**24; paper-scale counters (message counts,
+    pending work, P$ residency at a million PUs) exceed that, which is
+    the overflow class PR 4 patched by hand — the int32 side channel.
+
+``backend-dtype-drift``
+    Structural (shape/dtype) mismatch between the jnp-oracle and Pallas
+    renderings of the same step.  The Pallas path is tested bitwise (min
+    apps) against the oracle; a silent dtype promotion on one side turns
+    that into a cast comparison.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .findings import Finding
+
+# Primitives that force a host round trip (or host-dependent execution)
+# when they appear inside the scanned superstep.
+HOST_SYNC_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "infeed", "outfeed", "debug_print",
+})
+
+# Commutative scatter variants: safe under duplicate indices regardless
+# of mode (the combine is order-independent).
+_COMBINING_SCATTERS = frozenset({
+    "scatter-add", "scatter-min", "scatter-max", "scatter-mul",
+})
+
+
+def iter_eqns(jaxpr) -> Iterable[Tuple[object, Tuple[str, ...]]]:
+    """Yield (eqn, path) over a (Closed)Jaxpr and every sub-jaxpr reachable
+    through eqn params — scan/while/cond bodies, pjit calls, custom-vjp
+    wrappers, Pallas kernel jaxprs — without naming each primitive."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)      # ClosedJaxpr -> Jaxpr
+    stack = [(jaxpr, ())]
+    while stack:
+        jx, path = stack.pop()
+        for eqn in jx.eqns:
+            yield eqn, path
+            sub_path = path + (eqn.primitive.name,)
+            for sub in _param_jaxprs(eqn.params):
+                stack.append((sub, sub_path))
+
+
+def _param_jaxprs(params) -> List[object]:
+    out = []
+    for v in params.values():
+        out.extend(_as_jaxprs(v))
+    return out
+
+
+def _as_jaxprs(v) -> List[object]:
+    inner = getattr(v, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return [inner]                           # ClosedJaxpr
+    if hasattr(v, "eqns"):
+        return [v]                               # raw Jaxpr
+    if isinstance(v, (tuple, list)):
+        out = []
+        for x in v:
+            out.extend(_as_jaxprs(x))
+        return out
+    return []
+
+
+def _is_drop_mode(mode) -> bool:
+    # GatherScatterMode.FILL_OR_DROP is what the indexed-update
+    # ``mode="drop"`` (and the default) lowers to.
+    return mode is None or getattr(mode, "name", str(mode)) == "FILL_OR_DROP"
+
+
+def lint_jaxpr(closed, where: str) -> List[Finding]:
+    """Walk one traced step function: host-sync + scatter-mode rules."""
+    findings = []
+    for eqn, path in iter_eqns(closed):
+        name = eqn.primitive.name
+        loc = "/".join(path + (name,))
+        if name in HOST_SYNC_PRIMITIVES:
+            cb = eqn.params.get("callback")
+            detail = f" ({cb})" if cb is not None else ""
+            findings.append(Finding(
+                "jaxprlint", "host-sync", where,
+                f"host-sync primitive `{loc}`{detail} inside the traced "
+                f"step: forces a host round trip per superstep, defeating "
+                f"the device-resident scan"))
+        elif name == "scatter" or name in _COMBINING_SCATTERS:
+            unique = bool(eqn.params.get("unique_indices", False))
+            mode = eqn.params.get("mode")
+            if name == "scatter" and not unique and not _is_drop_mode(mode):
+                findings.append(Finding(
+                    "jaxprlint", "scatter-mode", where,
+                    f"overwrite scatter `{loc}` with mode="
+                    f"{getattr(mode, 'name', mode)} and non-unique "
+                    f"indices: duplicate-index results are undefined; the "
+                    f"engine's discipline is mode='drop' with masked "
+                    f"records redirected out of bounds"))
+    return findings
+
+
+def lint_step_fn(fn, args, where: str) -> List[Finding]:
+    """Trace ``fn(*args)`` (abstractly — no device compute) and lint it.
+    ``fn`` may be jitted; the walker recurses through the pjit eqn."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return lint_jaxpr(closed, where)
+
+
+# ---------------------------------------------------------------- int stats
+def lint_int_stats(stats_shapes: dict, exact_int_stats: Sequence[str],
+                   where: str) -> List[Finding]:
+    """Integer-dtype stats not covered by the exact-int side channel.
+
+    ``stats_shapes`` maps stat name -> ShapeDtypeStruct (from
+    ``jax.eval_shape`` of the step function).  Every integer-dtype stat
+    is packed into the f32 row by ``_scan_steps``; unless it also rides
+    ``_EXACT_INT_STATS``, values past 2**24 silently lose low bits.
+    """
+    findings = []
+    covered = set(exact_int_stats)
+    for k in sorted(stats_shapes):
+        dt = np.dtype(stats_shapes[k].dtype)
+        if np.issubdtype(dt, np.integer) and k not in covered:
+            findings.append(Finding(
+                "jaxprlint", "int-stat-f32-row", f"{where}:{k}",
+                f"stat '{k}' is {dt.name} on device but rides the packed "
+                f"f32 row uncovered by _EXACT_INT_STATS: counts past 2**24 "
+                f"(paper-scale supersteps) lose low bits"))
+    return findings
+
+
+def stats_shapes_of(step_one, state, flush) -> dict:
+    """Stat name -> ShapeDtypeStruct of one superstep, via an abstract
+    trace (mirrors ``engine._stat_keys``'s eval_shape, keeping dtypes)."""
+    return dict(jax.eval_shape(step_one, state, flush)[1])
+
+
+# ------------------------------------------------------------ backend drift
+def lint_backend_drift(tree_jnp, tree_pallas, where: str) -> List[Finding]:
+    """Compare two abstract (state, stats) pytrees (``jax.eval_shape``
+    results) for shape/dtype drift between the jnp oracle and the Pallas
+    rendering of the same step."""
+    flat_j = _flatten_shapes(tree_jnp)
+    flat_p = _flatten_shapes(tree_pallas)
+    findings = []
+    for k in sorted(set(flat_j) | set(flat_p)):
+        a, b = flat_j.get(k), flat_p.get(k)
+        if a is None or b is None:
+            side = "pallas" if a is None else "jnp"
+            findings.append(Finding(
+                "jaxprlint", "backend-dtype-drift", f"{where}:{k}",
+                f"leaf '{k}' exists only on the {side} path"))
+        elif a != b:
+            findings.append(Finding(
+                "jaxprlint", "backend-dtype-drift", f"{where}:{k}",
+                f"jnp path computes {a[0]}{list(a[1])} but pallas path "
+                f"computes {b[0]}{list(b[1])}: the oracle comparison "
+                f"silently becomes a cast"))
+    return findings
+
+
+def _flatten_shapes(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = (np.dtype(leaf.dtype).name, tuple(leaf.shape))
+    return out

@@ -1,0 +1,199 @@
+"""Pallas write-race detector: output-window disjointness per grid program.
+
+For every ``pl.pallas_call`` a kernel entry point issues, this pass
+evaluates the output ``BlockSpec`` index maps symbolically over the whole
+grid (index maps are pure functions of the grid coordinates — calling
+them with python ints costs nothing) and computes each program's output
+element windows (``index_map(*program) * block_shape``).  Two distinct
+grid programs mapping to the same window are *aliased writes*:
+
+  * with a commutative combine ("add"/"min"/"max") and the revisit
+    idiom (``@pl.when(first_visit)`` init + in-place accumulation) they
+    are the standard Pallas reduction pattern — safe, because the TPU
+    grid executes sequentially, so revisits are ordered;
+  * with overwrite semantics they are a bug: the last program in grid
+    order silently wins (and on a parallel backend the result is
+    non-deterministic).  The pass rejects them.
+
+Partially overlapping windows (possible only with element-indexed
+maps / misaligned blocking) are rejected unconditionally.
+
+Calls are captured by temporarily wrapping ``pallas.pallas_call`` while
+invoking the kernel entry point on tiny inputs (``capture_pallas_calls``)
+— the kernel modules need no modification, and the capture also serves
+as a smoke execution of the kernel.  Each kernel module exports
+``analysis_cases()`` returning (name, thunk, combine) triples so the
+suite enumerates itself (``kernel_suite``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+from typing import Dict, List, Tuple
+
+from jax.experimental import pallas as pl
+
+from .findings import Finding
+
+COMMUTATIVE = ("add", "min", "max")
+
+
+@dataclasses.dataclass
+class CapturedCall:
+    """One ``pl.pallas_call`` invocation's static geometry."""
+
+    kernel_name: str
+    grid: Tuple[int, ...]
+    out_specs: List[object]           # normalized to a list of BlockSpec
+    out_shapes: List[Tuple[int, ...]]
+    n_prefetch: int = 0               # scalar-prefetch args the index maps take
+
+
+def _kernel_name(kernel) -> str:
+    """Stable name for a kernel callable (unwraps functools.partial — a
+    repr would embed a memory address and churn baseline keys)."""
+    inner = getattr(kernel, "func", kernel)
+    return getattr(inner, "__name__", type(kernel).__name__)
+
+
+@contextlib.contextmanager
+def capture_pallas_calls():
+    """Capture every ``pl.pallas_call`` issued inside the block (the call
+    still executes normally).  Yields the list the captures append to."""
+    captured: List[CapturedCall] = []
+    real = pl.pallas_call
+
+    def wrapper(kernel, **kw):
+        grid_spec = kw.get("grid_spec")
+        if grid_spec is not None:     # PrefetchScalarGridSpec form
+            grid = grid_spec.grid
+            out_specs = grid_spec.out_specs
+            n_prefetch = int(getattr(grid_spec, "num_scalar_prefetch", 0))
+        else:
+            grid = kw.get("grid", ())
+            out_specs = kw.get("out_specs")
+            n_prefetch = 0
+        if isinstance(grid, int):
+            grid = (grid,)
+        out_shape = kw.get("out_shape")
+        specs = list(out_specs) if isinstance(out_specs, (list, tuple)) \
+            else [out_specs]
+        shapes = out_shape if isinstance(out_shape, (list, tuple)) \
+            else [out_shape]
+        captured.append(CapturedCall(
+            kernel_name=_kernel_name(kernel),
+            grid=tuple(int(g) for g in grid),
+            out_specs=specs,
+            out_shapes=[tuple(s.shape) for s in shapes],
+            n_prefetch=n_prefetch))
+        return real(kernel, **kw)
+
+    pl.pallas_call = wrapper
+    try:
+        yield captured
+    finally:
+        pl.pallas_call = real
+
+
+class _PrefetchStub:
+    """Stands in for a scalar-prefetch ref in index-map evaluation: block
+    indices derived from prefetched tables (e.g. the BCSR column table)
+    resolve to 0 — which window they select doesn't affect *aliasing*
+    between (program, window) pairs driven by the grid coordinates."""
+
+    def __getitem__(self, _):
+        return 0
+
+
+def _program_windows(call: CapturedCall, spec) -> Dict[Tuple, List[Tuple]]:
+    """window -> list of grid programs writing it.  A window is a tuple
+    of per-dim (start, stop) element ranges: ``index_map`` returns block
+    indices, scaled by ``block_shape`` (the installed Pallas convention —
+    see e.g. ``kernels/histogram_bin.py``)."""
+    block = tuple(int(b) for b in spec.block_shape)
+    ranges = [range(max(int(g), 1)) for g in call.grid] or [range(1)]
+    stubs = tuple(_PrefetchStub() for _ in range(call.n_prefetch))
+    windows: Dict[Tuple, List[Tuple]] = {}
+    for program in itertools.product(*ranges):
+        idx = spec.index_map(*program, *stubs)
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        win = tuple((int(i) * b, (int(i) + 1) * b)
+                    for i, b in zip(idx, block))
+        windows.setdefault(win, []).append(program)
+    return windows
+
+
+def _windows_overlap(a: Tuple, b: Tuple) -> bool:
+    return all(lo1 < hi2 and lo2 < hi1
+               for (lo1, hi1), (lo2, hi2) in zip(a, b))
+
+
+def check_call(call: CapturedCall, combine: str, where: str) -> List[Finding]:
+    """Race-check one captured call under the declared combine semantics
+    (``'add' | 'min' | 'max'`` commutative accumulation, anything else —
+    canonically ``'overwrite'`` — order-sensitive)."""
+    findings = []
+    commutative = combine in COMMUTATIVE
+    for out_i, spec in enumerate(call.out_specs):
+        windows = _program_windows(call, spec)
+        site = f"{where}:{call.kernel_name}[out{out_i}]"
+        # aliased writes: >1 program revisits one window
+        aliased = {w: ps for w, ps in windows.items() if len(ps) > 1}
+        if aliased and not commutative:
+            w, ps = next(iter(sorted(aliased.items())))
+            findings.append(Finding(
+                "pallas_races", "aliased-overwrite", site,
+                f"{len(aliased)} output window(s) written by multiple grid "
+                f"programs (e.g. window {w} by programs {ps[:4]}) with "
+                f"non-commutative combine '{combine}': last program in "
+                f"grid order wins silently"))
+        # partial overlap between distinct windows: always wrong
+        keys = sorted(windows)
+        for i, w1 in enumerate(keys):
+            for w2 in keys[i + 1:]:
+                if _windows_overlap(w1, w2):
+                    findings.append(Finding(
+                        "pallas_races", "window-overlap", site,
+                        f"output windows {w1} (programs "
+                        f"{windows[w1][:2]}) and {w2} (programs "
+                        f"{windows[w2][:2]}) partially overlap: "
+                        f"misaligned blocking races regardless of the "
+                        f"combine"))
+    return findings
+
+
+def check_fn(thunk, combine: str, where: str) -> List[Finding]:
+    """Run ``thunk`` (a kernel invocation on tiny inputs) under capture
+    and race-check every pallas_call it issued."""
+    with capture_pallas_calls() as calls:
+        thunk()
+    findings = []
+    if not calls:
+        findings.append(Finding(
+            "pallas_races", "no-pallas-call", where,
+            "kernel thunk issued no pallas_call: the race check is "
+            "vacuous (did the entry point hit a cached jit?)"))
+    for call in calls:
+        findings.extend(check_call(call, combine, where))
+    return findings
+
+
+def kernel_suite() -> List[Tuple[str, object, str]]:
+    """(name, thunk, combine) for every analyzable kernel in
+    ``repro.kernels`` — collected from each module's ``analysis_cases``."""
+    from ..kernels import histogram_bin, ops, relax_min, segment_combine
+    cases = []
+    for mod in (segment_combine, relax_min, histogram_bin, ops):
+        cases.extend(mod.analysis_cases())
+    return cases
+
+
+def check_kernels() -> List[Finding]:
+    """Race-check the whole kernel suite (the ops-level entry points'
+    underlying pallas_calls)."""
+    findings = []
+    for name, thunk, combine in kernel_suite():
+        findings.extend(check_fn(thunk, combine, f"kernels/{name}"))
+    return findings

@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """Per-architecture config modules (``--arch <id>``).
 
 Each module exports CONFIG (exact published dims), SMOKE (reduced), and

@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """dense llama-arch MHA LM [arXiv:2401.02954; hf]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """MoE 256e top-8 + MLA + shared expert + MTP [arXiv:2412.19437; hf]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """MoE 32e top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

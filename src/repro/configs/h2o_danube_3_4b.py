@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """dense GQA + sliding-window attention [arXiv:2401.16818; unverified]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """VLM: pixtral-ViT stub + mistral-nemo backbone [hf:mistralai/Pixtral-12B-2409; unverified]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

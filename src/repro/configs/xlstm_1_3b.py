@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """sLSTM + mLSTM recurrent LM [arXiv:2405.04517; unverified]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

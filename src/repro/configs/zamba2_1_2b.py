@@ -1,3 +1,5 @@
+# seed: unused — serving-stack arch config from the repo seed; nothing in the
+# chiplet engine/tests imports it (repro.analysis.deadcode quarantine).
 """Mamba2 + shared attention hybrid [arXiv:2411.15242; hf]
 
 Exact assigned dimensions live in ``repro.models.registry.ARCHS``; this

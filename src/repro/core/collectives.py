@@ -29,13 +29,11 @@ equivalence-tested against their flat counterparts.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from .compat import axis_size, shard_map
@@ -110,7 +108,6 @@ def two_hop_all_to_all(x, region_axis: str, cross_axis: str | None):
     grouped by destination region — the proxy-region routing rule.
     """
     if cross_axis is None:
-        nr = axis_size(region_axis)
         shp = x.shape
         xx = x.reshape((shp[0] * shp[1],) + shp[2:])
         out = jax.lax.all_to_all(xx, region_axis, split_axis=0,

@@ -86,8 +86,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import netstats
-from .costmodel import (CLOCK_GHZ, HBM_CHANNEL_GBS, HBM_CHANNELS,
-                        PU_OPS_PER_EDGE, PU_OPS_PER_RECORD, DCRA_SRAM,
+from .costmodel import (CLOCK_GHZ, PU_OPS_PER_EDGE, PU_OPS_PER_RECORD, DCRA_SRAM,
                         PackageConfig, link_provisioning, step_cycles)
 from .netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from .proxy import (ProxyConfig, cascade_proxy_tile, make_pcache,
@@ -135,6 +134,15 @@ class EngineConfig:
     # 'jnp' (oracle) or 'pallas': which implementation the combine/drain
     # hot spots (IQ drain, segment min/add, owner delivery) run through.
     backend: str = "jnp"
+    # Runtime sanitizer (repro.analysis): every superstep additionally
+    # counts invariant violations on device (monotone relaxation for
+    # min-combine apps, mailbox flag/value consistency, NaNs) into a
+    # ``sanity_violations`` stat the run loop raises on, and the run's
+    # counters/trace are conservation-checked after draining
+    # (``analysis.invariants.check_run``).  Results are bit-identical to
+    # sanitize=False — the checks only observe; failures raise
+    # ``analysis.invariants.SanitizerError``.
+    sanitize: bool = False
 
     @property
     def iq_cap(self) -> int:
@@ -203,6 +211,7 @@ class DataLocalEngine:
         self._superstep = jax.jit(self._superstep_impl)
         self._chunk = jax.jit(self._chunk_impl, static_argnames=("length",))
         self._stat_names = None        # packed-stat layout, cached per engine
+        self._n_seeds = 0              # set by init_state, read by sanitizer
 
     def chip_superstep(self, row_lo, row_hi, state, chip_id, flush):
         """One superstep of window ``chip_id``: pure in its array args so
@@ -240,11 +249,13 @@ class DataLocalEngine:
             tags, vals = make_pcache(self.cfg.grid, self.cfg.proxy,
                                      self.app.identity)
             st["p_tag"], st["p_val"] = tags, vals
+        self._n_seeds = 0   # mailbox seeds, for the sanitizer's consumed-bound
         if seed_idx is not None:
             si = jnp.asarray(np.atleast_1d(seed_idx), jnp.int32)
             sv = jnp.asarray(np.atleast_1d(seed_val), jnp.float32)
             st["mail_val"] = st["mail_val"].at[si].set(sv)
             st["mail_flag"] = st["mail_flag"].at[si].set(True)
+            self._n_seeds = int(si.shape[0])
         return st
 
     def activate_all(self, state, cur_val):
@@ -395,6 +406,27 @@ class DataLocalEngine:
             stats["p_resident"] = jnp.int32(0)
         stats["delivered_max_per_tile"] = dmax
         stats.update({k: jnp.asarray(v, jnp.float32) for k, v in charges.items()})
+        if cfg.sanitize:
+            # On-device sanitizer: count invariant violations this
+            # superstep (checkify-style — observed, not branched on, so
+            # the computation is unchanged).  The run loop raises
+            # SanitizerError on a nonzero count.  Saturated f32: the
+            # stat rides the packed row and only zero/nonzero matters.
+            bad = jnp.int32(0)
+            if is_min:
+                # relaxation is monotone: a value may never increase
+                bad += jnp.sum((new_vals > vals).astype(jnp.int32))
+            # an unflagged mailbox slot must hold the combine identity
+            bad += jnp.sum((~new_state["mail_flag"]
+                            & (new_state["mail_val"] != ident))
+                           .astype(jnp.int32))
+            # edge cursors may never go negative-length
+            bad += jnp.sum((new_state["cur_hi"]
+                            < new_state["cur_lo"]).astype(jnp.int32))
+            bad += jnp.sum(jnp.isnan(new_state["values"])
+                           .astype(jnp.int32))
+            stats["sanity_violations"] = jnp.minimum(
+                bad, 2 ** 20).astype(jnp.float32)
         return new_state, stats, off
 
     # ------------------------------------------------------- owner delivery
@@ -442,7 +474,6 @@ class DataLocalEngine:
         pcfg = cfg.proxy
         T = self.T
         S = pcfg.slots
-        R = dst.shape[0]
 
         ptile = proxy_tile(grid, pcfg, owner, src_tile)
         leg1 = netstats.charge(grid, src_tile, ptile, emit_mask)
@@ -825,6 +856,7 @@ class DataLocalEngine:
         steps = 0
         pkg = cfg.pkg
         links = link_provisioning(cfg.grid, pkg)
+        values_before = state["values"] if cfg.sanitize else None
 
         def account(stats):
             """Legacy-loop per-superstep accounting.  The chunked branch
@@ -832,6 +864,8 @@ class DataLocalEngine:
             add_chunk_cycles below) — edit BOTH in lockstep; the
             bit-identity tests in tests/test_chunked.py are the gate."""
             nonlocal cycles
+            _sanitize_gate(cfg, self.app.name,
+                           float(stats.get("sanity_violations", 0.0)))
             counters.add(superstep_counters(stats))
             trace.append_step(stats, element_bits=cfg.element_bits)
             # ---- BSP time model for this superstep ----------------------
@@ -852,6 +886,11 @@ class DataLocalEngine:
             def add_chunk_cycles(stacked, n_act, cycles):
                 # vectorized BSP terms, accumulated in execution order —
                 # bit-identical to account() per step
+                if cfg.sanitize:
+                    bad = stacked.get("sanity_violations")
+                    if bad is not None:
+                        _sanitize_gate(cfg, self.app.name,
+                                       float(np.sum(bad[:n_act])))
                 sc = chunk_cycles(stacked, n_act, pkg, links)
                 pend = np.asarray(stacked["pending"][:n_act])
                 for s, p in zip(sc.tolist(), pend.tolist()):
@@ -865,8 +904,19 @@ class DataLocalEngine:
                 cfg.element_bits, progress, add_chunk_cycles, cycles)
         counters.supersteps = steps
         time_s = cycles / (CLOCK_GHZ * 1e9)
-        return state, RunResult(counters=counters, cycles=cycles, time_s=time_s,
-                                supersteps=steps, trace=trace)
+        result = RunResult(counters=counters, cycles=cycles, time_s=time_s,
+                           supersteps=steps, trace=trace)
+        if cfg.sanitize:
+            from ..analysis import invariants as _inv
+            write_back = cfg.proxy is not None and cfg.proxy.write_back
+            findings = _inv.check_run(
+                result, pkg=pkg, grid=cfg.grid,
+                where=f"sanitize/{self.app.name}", write_back=write_back,
+                seeds=self._n_seeds, combine=self.app.combine,
+                values_before=values_before, values_after=state["values"],
+                drained=steps < maxs)
+            _inv.assert_clean(findings, context=f"run({self.app.name})")
+        return state, result
 
     def _run_legacy(self, state, maxs, progress_every, account):
         """The seed per-step loop: one dispatch + one host sync per
@@ -906,6 +956,19 @@ class RunResult:
     # per-superstep level-traffic record: what makes the run re-priceable
     # under other package configs (costmodel.price(per_superstep_peak=...))
     trace: Optional[SuperstepTrace] = None
+
+
+def _sanitize_gate(cfg, app_name: str, violations: float) -> None:
+    """Raise on a nonzero on-device ``sanity_violations`` count (the
+    ``EngineConfig.sanitize`` per-superstep checks computed in ``_step``).
+    Shared by the legacy per-step and chunked accounting paths of both
+    run loops."""
+    if cfg.sanitize and violations > 0:
+        from ..analysis.invariants import SanitizerError
+        raise SanitizerError(
+            f"sanitizer: {violations:.0f} on-device invariant violation(s) "
+            f"during {app_name} (monotone relaxation / mailbox consistency "
+            f"/ NaN checks in the superstep body)")
 
 
 def superstep_counters(stats) -> TrafficCounters:
@@ -1001,8 +1064,13 @@ def chunk_cycles(stacked, n_active: int, pkg, links: dict) -> np.ndarray:
 
 # int32 per-superstep stats that can exceed f32's exact-integer range at
 # paper-scale runs; _scan_steps carries them on an exact int32 side
-# channel next to the packed f32 rows (order matters — see packed_step).
-_EXACT_INT_STATS = ("pending", "edges_processed", "records_consumed")
+# channel next to the packed f32 rows (order matters — the scan body's
+# drained test reads index 0, so "pending" must stay first; see
+# packed_step).  "p_resident" joined after the repro.analysis jaxpr
+# linter's int-stat-f32-row rule flagged it: write-back P$ residency is
+# bounded by T*slots, which passes 2**24 at the paper's million-PU scale.
+_EXACT_INT_STATS = ("pending", "edges_processed", "records_consumed",
+                    "p_resident")
 
 
 def _stat_keys(step_one, state, flush):
@@ -1071,14 +1139,14 @@ def _scan_steps(step_one, state, flush, done, steps_left, length: int,
     n_stats)`` buffer instead of one buffer per stat — a large share of
     the per-iteration overhead at small grid sizes.  The int32 stats
     that can outgrow f32's 2**24 integer range at paper-scale runs
-    (``pending``, ``edges_processed``, ``records_consumed`` — see
-    ``_EXACT_INT_STATS``) additionally ride an exact int32 side channel;
-    every other stat is f32 on device already or a count far below
-    2**24, so the packing loses nothing.  The flush/termination
+    (see ``_EXACT_INT_STATS``) additionally ride an exact int32 side
+    channel; every other stat is f32 on device already or a count far
+    below 2**24, so the packing loses nothing.  The flush/termination
     decisions read the exact pre-packing integers.
 
     Returns ((state, flush, done, steps_left), (stacked, stacked_ints))
-    with shapes ``(length, n_stats)`` f32 and ``(length, 3)`` int32.
+    with shapes ``(length, n_stats)`` f32 and
+    ``(length, len(_EXACT_INT_STATS))`` int32.
     """
     keys = _stat_keys(step_one, state, flush)[:-1]
 
@@ -1091,8 +1159,11 @@ def _scan_steps(step_one, state, flush, done, steps_left, length: int,
                 stats["p_resident"] if write_back else jnp.int32(0))
 
     def idle_step(st, _fl):
+        # pending=1 so a masked idle row can never read as "drained";
+        # the row is discarded anyway (active=0)
         return (st, jnp.zeros((len(keys),), jnp.float32),
-                jnp.array([1, 0, 0], jnp.int32), jnp.int32(0))
+                jnp.array([1] + [0] * (len(_EXACT_INT_STATS) - 1),
+                          jnp.int32), jnp.int32(0))
 
     def body(carry, _):
         state, flush, done, left = carry

@@ -46,15 +46,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import collectives, netstats
+from ..core import collectives
 from ..core.compat import shard_map
 from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
                               _off_pkg_bits_per_cycle,
                               board_link_provisioning, link_provisioning)
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
                            RunResult, _drain_chunked, _pad,
-                           _ProgressReporter, _scan_steps, _stat_keys,
-                           chunk_counters, chunk_cycles,
+                           _ProgressReporter, _sanitize_gate, _scan_steps,
+                           _stat_keys, chunk_cycles,
                            superstep_counters, superstep_cycles)
 from ..core.netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from ..core.proxy import chip_local_proxy
@@ -236,11 +236,13 @@ class DistributedEngine:
                                        k.Ngd, ident), np.float32))
         mail_val_g = np.full((k.Ngd,), ident, np.float32)
         mail_flag_g = np.zeros((k.Ngd,), bool)
+        self._n_seeds = 0   # mailbox seeds, for the sanitizer's consumed-bound
         if seed_idx is not None:
             si = np.atleast_1d(np.asarray(seed_idx)).astype(np.int64)
             sv = np.atleast_1d(np.asarray(seed_val)).astype(np.float32)
             mail_val_g[si] = sv
             mail_flag_g[si] = True
+            self._n_seeds = int(si.shape[0])
         st = dict(
             values=self._shard(vals_g, self.Cd),
             mail_val=self._shard(mail_val_g, self.Cd),
@@ -453,6 +455,8 @@ class DistributedEngine:
             chunk_counters/append_chunk in _drain_chunked) — edit BOTH
             in lockstep; tests/test_chunked.py is the bit-identity gate."""
             nonlocal cycles
+            _sanitize_gate(cfg, self.app.name,
+                           float(stats.get("sanity_violations", 0.0)))
             counters.add(superstep_counters(stats))
             trace.append_step(stats, element_bits=cfg.element_bits)
             # ---- BSP time model: monolithic levels + the board-level leg
@@ -485,6 +489,12 @@ class DistributedEngine:
                 # monolithic BSP terms maxed with the board leg, plus
                 # IO-die latency on supersteps with off-chip records --
                 # accumulated in execution order like the legacy loop
+                if cfg.sanitize:
+                    bad = stacked.get("sanity_violations")
+                    if bad is not None:
+                        _sanitize_gate(cfg, self.app.name,
+                                       float(np.sum(bad[:n_act])))
+
                 def offvec(key):           # absent on a 1x1 partition
                     a = stacked.get(key)
                     return (np.asarray(a[:n_act], np.float64)
@@ -510,9 +520,18 @@ class DistributedEngine:
         time_s = cycles / (CLOCK_GHZ * 1e9)
         out_state = dict(state)
         out_state["values"] = self._gather(state["values"], self.Cd)
-        return out_state, RunResult(counters=counters, cycles=cycles,
-                                    time_s=time_s, supersteps=steps,
-                                    trace=trace)
+        result = RunResult(counters=counters, cycles=cycles, time_s=time_s,
+                           supersteps=steps, trace=trace)
+        if cfg.sanitize:
+            from ..analysis import invariants as _inv
+            findings = _inv.check_run(
+                result, pkg=pkg, grid=cfg.grid,
+                where=f"sanitize/{self.app.name}/{self.C}chips",
+                write_back=self._write_back,
+                seeds=getattr(self, "_n_seeds", 0), drained=steps < maxs)
+            _inv.assert_clean(
+                findings, context=f"run({self.app.name}, {self.C} chips)")
+        return out_state, result
 
     def _run_legacy(self, state, maxs, progress_every, account):
         """The seed per-superstep dispatch loop (one host sync per

@@ -123,6 +123,60 @@ def _engine(spec: AppSpec, g: CSR, grid: TileGrid,
                   chips, backend)
 
 
+def engine_and_state(name: str, g: CSR, grid: TileGrid,
+                     proxy: Optional[ProxyConfig] = None, root: int = 0,
+                     x: Optional[np.ndarray] = None,
+                     histo_values: Optional[np.ndarray] = None,
+                     bins: int = 0, **kw):
+    """Engine + ready-to-run initial state for app ``name``.
+
+    The same wiring the app functions below use, exposed so analysis
+    tooling (``repro.analysis.runner``) can trace the engine's chunk-step
+    function — and seed mutation tests — without re-implementing each
+    app's setup.  Returns ``(engine, state, seeds)`` where ``seeds`` is
+    the number of initial mailbox records (the slack term of the
+    consumed-bound conservation check).
+    """
+    if name == "bfs":
+        eng = _engine(BFS_SPEC, g, grid, proxy, **kw)
+        return eng, eng.init_state(seed_idx=root, seed_val=0.0), 1
+    if name == "sssp":
+        eng = _engine(SSSP_SPEC, g, grid, proxy, **kw)
+        return eng, eng.init_state(seed_idx=root, seed_val=0.0), 1
+    if name == "wcc":
+        eng = _engine(WCC_SPEC, g, grid, proxy, **kw)
+        n = g.n_rows
+        state = eng.init_state(seed_idx=np.arange(n),
+                               seed_val=np.arange(n, dtype=np.float32))
+        return eng, state, n
+    if name == "pagerank":
+        eng = _engine(PAGERANK_SPEC, g, grid, proxy, **kw)
+        deg = np.maximum(g.out_degree(), 1).astype(np.float32)
+        contrib = 0.85 / g.n_rows / deg
+        return eng, eng.activate_all(eng.init_state(), contrib), 0
+    if name == "spmv":
+        at = transpose_csr(g)
+        chips = kw.pop("chips", 0)
+        backend, kw = _split_backends(kw.pop("backend", "auto"), kw)
+        cfg = _mk_cfg(grid, at.n_rows, g.n_rows, proxy, **kw)
+        eng = _build(SPMV_SPEC, cfg, at.row_lo, at.row_hi, at.col_idx,
+                     at.weights, chips, backend)
+        xv = np.ones(g.n_cols, np.float32) if x is None else x
+        return eng, eng.activate_all(eng.init_state(), xv), 0
+    if name == "histo":
+        hv = np.asarray(histo_values, np.int32)
+        m = hv.shape[0]
+        row_lo = np.arange(m, dtype=np.int32)
+        chips = kw.pop("chips", 0)
+        backend, kw = _split_backends(kw.pop("backend", "auto"), kw)
+        cfg = _mk_cfg(grid, m, bins, proxy, **kw)
+        eng = _build(HISTO_SPEC, cfg, row_lo, row_lo + 1, hv, None, chips,
+                     backend)
+        state = eng.activate_all(eng.init_state(), np.ones(m, np.float32))
+        return eng, state, 0
+    raise ValueError(name)
+
+
 # ---------------------------------------------------------------- traversals
 def bfs(g: CSR, root: int, grid: TileGrid,
         proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:

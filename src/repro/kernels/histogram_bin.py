@@ -57,3 +57,14 @@ def histogram_bin(idx: jax.Array, num_bins: int,
         interpret=interpret,
     )(idx2)
     return out[0, :num_bins]
+
+
+def analysis_cases():
+    """(name, thunk, combine) case for ``repro.analysis.pallas_races``:
+    a multi-record-block invocation whose bin-block windows are revisited
+    across record blocks (accumulating add — commutative-safe)."""
+    idx = jnp.asarray([0, 5, 5, 2, 7, 0], jnp.int32)
+    return [("histogram_bin",
+             functools.partial(histogram_bin, idx, 8, block_r=4,
+                               block_b=8),
+             "add")]

@@ -60,3 +60,35 @@ def decode_attention(q, k, v, lengths, scale=None, block_s: int = 512,
     return _da.decode_attention(q, k, v, lengths, scale=scale,
                                 block_s=block_s,
                                 interpret=_auto_interpret(interpret))
+
+
+def analysis_cases():
+    """(name, thunk, combine) cases for ``repro.analysis.pallas_races``
+    covering the scalar-prefetch kernels behind this module's entry
+    points.  The thunks call the *unjitted* kernel functions so the race
+    pass's ``pallas_call`` capture sees the invocation (the jitted
+    wrappers above would hide it behind the trace cache).
+
+    ``decode_attention`` is declared ``softmax-carry``: its output window
+    is revisited across KV blocks with an order-dependent online-softmax
+    rescale, safe only because the TPU grid executes sequentially — the
+    race pass reports it, and the finding lives in the committed
+    baseline as the documented exception."""
+    import numpy as np
+
+    row_ptr = np.array([0, 2, 3, 3, 5, 6, 8], np.int32)
+    col_idx = np.array([0, 9, 4, 1, 8, 2, 0, 5], np.int32)
+    mat = bcsr_from_csr(row_ptr, col_idx, None, (6, 10), bm=4, bk=8)
+    x = jnp.arange(10, dtype=jnp.float32)
+
+    q = jnp.ones((1, 2, 8), jnp.float32)
+    k = jnp.ones((1, 1, 6, 8), jnp.float32)
+    v = jnp.ones((1, 1, 6, 8), jnp.float32)
+    lengths = jnp.array([6], jnp.int32)
+    return [
+        ("spmv_bcsr",
+         functools.partial(_sp.spmv_bcsr, mat, x, interpret=True), "add"),
+        ("decode_attention",
+         functools.partial(_da.decode_attention, q, k, v, lengths,
+                           block_s=4, interpret=True), "softmax-carry"),
+    ]

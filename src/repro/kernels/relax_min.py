@@ -57,3 +57,18 @@ def relax(values: jax.Array, mail_val: jax.Array, mail_flag: jax.Array,
         interpret=interpret,
     )(v, m, f)
     return out_v.reshape(-1)[:n], out_i.reshape(-1)[:n]
+
+
+def analysis_cases():
+    """(name, thunk, combine) cases for ``repro.analysis.pallas_races``.
+    The relax kernel is elementwise — each grid program owns a disjoint
+    output window — so it is declared ``overwrite``: the race pass must
+    prove disjointness rather than rely on combine commutativity."""
+    n = 10
+    vals = jnp.full((n,), jnp.inf, jnp.float32)
+    mail = jnp.arange(n, dtype=jnp.float32)
+    flag = jnp.ones((n,), jnp.bool_)
+    return [(f"relax:{c}",
+             functools.partial(relax, vals, mail, flag, c, block=8),
+             "overwrite")
+            for c in ("min", "add")]

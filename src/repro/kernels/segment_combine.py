@@ -83,3 +83,17 @@ def segment_combine(seg: jax.Array, val: jax.Array, num_segments: int,
     if combine == "min":
         out = jnp.where(out >= _BIG, jnp.inf, out)
     return out
+
+
+def analysis_cases():
+    """(name, thunk, combine) cases for ``repro.analysis.pallas_races``:
+    tiny multi-block invocations whose grid revisits each output
+    segment-block across record blocks (the reduction idiom the race
+    pass must accept for commutative combines)."""
+    seg = jnp.asarray([0, 3, 3, 7, 1, 0], jnp.int32)
+    val = jnp.arange(6, dtype=jnp.float32)
+    return [(f"segment_combine:{c}",
+             functools.partial(segment_combine, seg, val, 8, c,
+                               block_r=4, block_s=8),
+             c)
+            for c in ("min", "add")]

@@ -15,7 +15,6 @@ message by its array index".
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +51,6 @@ def bcsr_from_csr(row_ptr, col_idx, weights, shape, bm: int = DEFAULT_BM,
     """Host-side CSR -> BCSR conversion (the 'dataset load' step)."""
     m, k = shape
     mb = -(-m // bm)
-    kb = -(-k // bk)
     row_ptr = np.asarray(row_ptr)
     col_idx = np.asarray(col_idx)
     weights = (np.ones_like(col_idx, np.float32) if weights is None

@@ -1,3 +1,5 @@
+# seed: unused — serving driver from the repo seed; the chiplet engine has no
+# serving path, nothing imports it (repro.analysis.deadcode quarantine).
 """Serving driver: continuous-batching over a reduced model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \

@@ -14,7 +14,7 @@ the decoder runs its native 448-token context (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

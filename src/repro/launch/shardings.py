@@ -19,7 +19,7 @@ Scan-stacked leading layer axes are detected by path and skipped.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -21,7 +21,6 @@ Layers are stacked on a leading L axis and consumed with lax.scan
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax
@@ -57,7 +56,6 @@ def lm_loss(logits, labels, cfg, aux=0.0):
     logit is extracted with an iota-compare masked sum — elementwise, so
     it shards like the logits (no gather over the vocab dim)."""
     lf = logits.astype(jnp.float32)
-    vpad = lf.shape[-1]
     vids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
     lf = jnp.where(vids < cfg.vocab, lf, -1e30)          # mask padding rows
     lse = jax.scipy.special.logsumexp(lf, axis=-1)       # (B,S)
@@ -390,7 +388,6 @@ def xlstm_init_params(cfg, key):
 
 def _xlstm_group(gp, x, cfg, states=None):
     """Run one group; states = (m_states, s_state) or None."""
-    m_per = jax.tree.leaves(gp["mlstm"])[0].shape[0]
 
     def mbody(x, xs):
         if states is None:

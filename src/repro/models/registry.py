@@ -9,7 +9,7 @@ exercised only via the dry-run (ShapeDtypeStruct, no allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 VOCAB_ALIGN = 512      # pad vocab so 16-way model sharding always divides
 
@@ -131,7 +131,6 @@ class ModelConfig:
                 d_ff=self.moe_d_ff * self.top_k)
             return dense_like.param_count()
         if self.family == "mla_moe":
-            frac = (self.top_k + self.n_shared_experts) / max(self.n_experts, 1)
             total = self.param_count()
             moe_l = self.n_layers - self.n_dense_layers
             ff_moe_all = (self.n_experts + self.n_shared_experts) \

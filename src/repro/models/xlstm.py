@@ -11,7 +11,7 @@ sequential, so training scans over time.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -142,7 +142,6 @@ def mlstm_decode(p, x, state, cfg):
     b, _, d = x.shape
     h = cfg.n_heads
     di = cfg.xlstm_proj * d
-    pp = di // h
     c_st, n_st, m_st = state
     xn, q, k, v, li, lf, og = _mlstm_qkvif(p, x, cfg)
     qf = q[:, 0].astype(jnp.float32)

@@ -1,3 +1,5 @@
+# seed: unused — elastic-restart scaffolding from the repo seed; no checkpoint
+# consumer imports it (repro.analysis.deadcode quarantine).
 """Elastic restart: resume a checkpoint on a different mesh shape.
 
 The checkpoint stores plain host arrays; re-placement happens through the
@@ -10,7 +12,6 @@ from __future__ import annotations
 
 from typing import Any, Callable, Optional
 
-import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

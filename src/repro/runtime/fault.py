@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 

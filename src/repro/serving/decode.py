@@ -5,7 +5,6 @@ one new token against a KV cache of seq_len, optimizer-free.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -8,7 +8,6 @@ for sliding-window archs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import numpy as np

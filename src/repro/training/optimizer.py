@@ -8,7 +8,7 @@ adafactor  — factored second moment, no first moment: the optimizer state
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,7 @@ gradients are averaged over the batch axes by the partitioner.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ def small_state():
 
 def test_roundtrip(tmp_path, small_state):
     _, _, _, state = small_state
-    p = save_checkpoint(str(tmp_path), 7, state)
+    save_checkpoint(str(tmp_path), 7, state)
     assert latest_step(str(tmp_path)) == 7
     restored = restore_checkpoint(str(tmp_path), state)
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
