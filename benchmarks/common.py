@@ -36,4 +36,8 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
 def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)
-    return out, (time.time() - t0) * 1e6
+    us = (time.time() - t0) * 1e6
+    from repro.obs import default_registry
+    name = getattr(fn, "__name__", "call")
+    default_registry().histogram(f"bench.{name}.us").observe(us)
+    return out, us

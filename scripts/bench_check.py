@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fresh BENCH_engine.json vs the committed one.
+
+Re-runs the engine-throughput benchmark (or takes a pre-generated file
+via ``--fresh``) and compares it row-by-row against the committed
+baseline with per-field tolerances:
+
+  * **exact**: ``supersteps``, ``host_syncs_legacy``,
+    ``host_syncs_chunked`` — these are deterministic properties of the
+    run loop (same graph seed, same configs); any drift is a real
+    behaviour change.
+  * **bit-identity flags**: ``counters_equal`` / ``trace_equal`` must be
+    true in the fresh run — the chunked loop's core guarantee.
+  * **sim_time_s**: relative tolerance 1e-6 — the BSP time is integer
+    count arithmetic in f64, reproducible to rounding.
+  * **speedup**: fresh must stay above ``min_frac`` (default 0.25) of
+    the committed speedup — wall-clock is noisy in CI, so this only
+    catches collapses, not jitter.
+
+Rows are matched on (app, tiles, scale, oq_cap, proxy, chunk); a
+baseline row missing from the fresh run is a regression.  Exits nonzero
+on any regression and writes a markdown report for the CI artifact.
+
+Usage:
+  python scripts/bench_check.py                  # re-run + compare
+  python scripts/bench_check.py --fresh f.json   # compare existing file
+  python scripts/bench_check.py --report out.md  # also write report
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "BENCH_engine.json")
+
+EXACT_FIELDS = ("supersteps", "host_syncs_legacy", "host_syncs_chunked")
+TRUE_FLAGS = ("counters_equal", "trace_equal")
+KEY_FIELDS = ("app", "tiles", "scale", "oq_cap", "proxy", "chunk")
+
+
+def _key(row: dict) -> tuple:
+    return tuple(row.get(k) for k in KEY_FIELDS)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _generate(out_path: str) -> None:
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import engine_throughput
+    engine_throughput.run(small=True, out_path=out_path)
+
+
+def compare(baseline: dict, fresh: dict, *, min_frac: float = 0.25,
+            sim_rel_tol: float = 1e-6):
+    """Returns (regressions, notes): lists of human-readable strings."""
+    regressions, notes = [], []
+    fresh_rows = {_key(r): r for r in fresh.get("rows", [])}
+    for brow in baseline.get("rows", []):
+        k = _key(brow)
+        label = "/".join(str(v) for v in k)
+        frow = fresh_rows.pop(k, None)
+        if frow is None:
+            regressions.append(f"{label}: row missing from fresh run")
+            continue
+        for f in EXACT_FIELDS:
+            if frow.get(f) != brow.get(f):
+                regressions.append(
+                    f"{label}: {f} changed {brow.get(f)} -> {frow.get(f)}")
+        for f in TRUE_FLAGS:
+            if not frow.get(f, False):
+                regressions.append(f"{label}: {f} is no longer true")
+        b_sim, f_sim = brow.get("sim_time_s", 0.0), frow.get("sim_time_s",
+                                                             0.0)
+        if abs(f_sim - b_sim) > sim_rel_tol * max(abs(b_sim), 1e-300):
+            regressions.append(
+                f"{label}: sim_time_s drifted {b_sim:g} -> {f_sim:g} "
+                f"(rel tol {sim_rel_tol:g})")
+        b_sp, f_sp = brow.get("speedup", 0.0), frow.get("speedup", 0.0)
+        if f_sp < b_sp * min_frac:
+            regressions.append(
+                f"{label}: speedup collapsed {b_sp:.2f}x -> {f_sp:.2f}x "
+                f"(< {min_frac:.2f} of baseline)")
+        elif f_sp < b_sp:
+            notes.append(f"{label}: speedup {b_sp:.2f}x -> {f_sp:.2f}x "
+                         f"(within wall-clock tolerance)")
+    for k in fresh_rows:
+        notes.append("/".join(str(v) for v in k)
+                     + ": new row not in baseline")
+    return regressions, notes
+
+
+def to_markdown(regressions, notes, baseline_path, fresh_path) -> str:
+    lines = ["# Bench regression check", "",
+             f"- baseline: `{baseline_path}`",
+             f"- fresh: `{fresh_path}`",
+             f"- regressions: **{len(regressions)}**, "
+             f"notes: {len(notes)}", ""]
+    if regressions:
+        lines += ["## Regressions", ""] + [f"- {r}" for r in regressions] \
+            + [""]
+    if notes:
+        lines += ["## Notes", ""] + [f"- {n}" for n in notes] + [""]
+    if not regressions:
+        lines.append("All rows within tolerance.")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--fresh", default=None,
+                    help="pre-generated fresh BENCH_engine.json "
+                         "(default: re-run the benchmark)")
+    ap.add_argument("--min-speedup-frac", type=float, default=0.25)
+    ap.add_argument("--sim-rel-tol", type=float, default=1e-6)
+    ap.add_argument("--report", default=None,
+                    help="write a markdown report here")
+    args = ap.parse_args(argv)
+
+    fresh_path = args.fresh
+    if fresh_path is None:
+        fresh_path = os.path.join(tempfile.mkdtemp(prefix="bench_check_"),
+                                  "BENCH_engine.json")
+        _generate(fresh_path)
+    regressions, notes = compare(
+        _load(args.baseline), _load(fresh_path),
+        min_frac=args.min_speedup_frac, sim_rel_tol=args.sim_rel_tol)
+    report = to_markdown(regressions, notes, args.baseline, fresh_path)
+    print(report)
+    if args.report:
+        os.makedirs(os.path.dirname(os.path.abspath(args.report)),
+                    exist_ok=True)
+        with open(args.report, "w") as f:
+            f.write(report)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -318,6 +318,46 @@ def _off_pkg_bits_per_cycle(cfg: PackageConfig) -> float:
     return float(cfg.off_pkg_gbs_per_die_edge)
 
 
+# BSP level names, in the order step_cycles maxes them (the exporter's
+# simulated-time track order)
+STEP_CYCLE_LEVELS = ("compute", "intra", "die", "pkg", "endpoint", "board",
+                     "hbm")
+
+
+def step_cycle_terms(cfg: PackageConfig, links: dict, *, compute_ops,
+                     intra_bits, die_bits, pkg_bits, endpoint_bits=0.0,
+                     hbm_bits=0.0, off_chip_bits=0.0, board_links=1,
+                     n_dies=1) -> Dict[str, np.ndarray]:
+    """Named per-level BSP cycle terms of superstep(s) — the
+    decomposition behind :func:`step_cycles`' max.  Keys are
+    :data:`STEP_CYCLE_LEVELS` (``hbm`` only on HBM products with miss
+    traffic).  Works elementwise on scalars or per-superstep vectors.
+    The telemetry exporter (``obs.export``) renders these as the
+    per-level simulated-time tracks; ``step_cycles`` maxes them, so the
+    timeline and the priced time cannot drift."""
+    terms = dict(
+        compute=np.asarray(compute_ops, dtype=np.float64),
+        intra=(np.asarray(intra_bits, np.float64)
+               / (links["intra"] * cfg.intra_die_link_bits)),
+        die=(np.asarray(die_bits, np.float64)
+             / (links["die"] * cfg.inter_die_link_bits)),
+        pkg=(np.asarray(pkg_bits, np.float64)
+             / (links["pkg"] * _off_pkg_bits_per_cycle(cfg))),
+        endpoint=(np.asarray(endpoint_bits, np.float64)
+                  / cfg.intra_die_link_bits),
+        board=(np.asarray(off_chip_bits, np.float64)
+               / (max(board_links, 1) * _off_pkg_bits_per_cycle(cfg))),
+    )
+    # HBM drain: miss traffic served by the package's HBM channels,
+    # converted to tile-clock cycles.
+    hbm = np.asarray(hbm_bits, np.float64)
+    if cfg.has_hbm and np.any(hbm > 0):
+        hbm_bytes_per_cycle = (n_dies * HBM_CHANNELS * HBM_CHANNEL_GBS * 1e9
+                               / (CLOCK_GHZ * 1e9))
+        terms["hbm"] = hbm / 8.0 / hbm_bytes_per_cycle
+    return terms
+
+
 def step_cycles(cfg: PackageConfig, links: dict, *, compute_ops,
                 intra_bits, die_bits, pkg_bits, endpoint_bits=0.0,
                 hbm_bits=0.0, off_chip_bits=0.0, board_links=1,
@@ -325,24 +365,15 @@ def step_cycles(cfg: PackageConfig, links: dict, *, compute_ops,
     """BSP cycles of superstep(s): max over (tile compute, per-level
     network serialization, endpoint contention, HBM drain, board leg).
     Works elementwise on scalars or per-superstep numpy vectors."""
-    t = np.maximum(np.asarray(compute_ops, dtype=np.float64),
-                   np.asarray(intra_bits, np.float64)
-                   / (links["intra"] * cfg.intra_die_link_bits))
-    t = np.maximum(t, np.asarray(die_bits, np.float64)
-                   / (links["die"] * cfg.inter_die_link_bits))
-    t = np.maximum(t, np.asarray(pkg_bits, np.float64)
-                   / (links["pkg"] * _off_pkg_bits_per_cycle(cfg)))
-    t = np.maximum(t, np.asarray(endpoint_bits, np.float64)
-                   / cfg.intra_die_link_bits)
-    t = np.maximum(t, np.asarray(off_chip_bits, np.float64)
-                   / (max(board_links, 1) * _off_pkg_bits_per_cycle(cfg)))
-    # HBM drain: miss traffic served by the package's HBM channels,
-    # converted to tile-clock cycles.
-    hbm = np.asarray(hbm_bits, np.float64)
-    if cfg.has_hbm and np.any(hbm > 0):
-        hbm_bytes_per_cycle = (n_dies * HBM_CHANNELS * HBM_CHANNEL_GBS * 1e9
-                               / (CLOCK_GHZ * 1e9))
-        t = np.maximum(t, hbm / 8.0 / hbm_bytes_per_cycle)
+    terms = step_cycle_terms(
+        cfg, links, compute_ops=compute_ops, intra_bits=intra_bits,
+        die_bits=die_bits, pkg_bits=pkg_bits, endpoint_bits=endpoint_bits,
+        hbm_bits=hbm_bits, off_chip_bits=off_chip_bits,
+        board_links=board_links, n_dies=n_dies)
+    t = terms["compute"]
+    for name in STEP_CYCLE_LEVELS[1:]:
+        if name in terms:
+            t = np.maximum(t, terms[name])
     return t
 
 

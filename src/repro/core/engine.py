@@ -79,6 +79,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -86,6 +87,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import netstats
+from ..obs.metrics import default_registry
+from ..obs.timeline import ChunkSpan, RunMeta
 from .costmodel import (CLOCK_GHZ, PU_OPS_PER_EDGE, PU_OPS_PER_RECORD, DCRA_SRAM,
                         PackageConfig, link_provisioning, step_cycles)
 from .netstats import MSG_BITS, SuperstepTrace, TrafficCounters
@@ -143,6 +146,14 @@ class EngineConfig:
     # sanitize=False — the checks only observe; failures raise
     # ``analysis.invariants.SanitizerError``.
     sanitize: bool = False
+    # Telemetry vectors (repro.obs): every superstep additionally emits
+    # per-tile load vectors (``tv_edges`` / ``tv_records`` /
+    # ``tv_delivered``; the distributed driver reduces them to per-chip
+    # ``pc_*`` vectors) that ride the existing chunk fetch — zero extra
+    # host syncs — and feed ``obs.imbalance`` / the Perfetto tracks.
+    # Results are bit-identical to telemetry=False: the vectors are
+    # extra *outputs*, never inputs, of the superstep.
+    telemetry: bool = False
 
     @property
     def iq_cap(self) -> int:
@@ -406,6 +417,16 @@ class DataLocalEngine:
             stats["p_resident"] = jnp.int32(0)
         stats["delivered_max_per_tile"] = dmax
         stats.update({k: jnp.asarray(v, jnp.float32) for k, v in charges.items()})
+        if cfg.telemetry:
+            # per-tile load vectors (window-local), pure extra outputs:
+            # they ride the chunk stat fetch (obs.timeline) and feed
+            # obs.imbalance; the distributed driver reduces them to
+            # per-chip pc_* vectors in _aggregate.  The proxy stage set
+            # tv_delivered already (its delivery vector is internal).
+            stats["tv_edges"] = edges_per_tile.astype(jnp.float32)
+            stats["tv_records"] = consumed_per_tile.astype(jnp.float32)
+            if "tv_delivered" not in stats:
+                stats["tv_delivered"] = per_tile.astype(jnp.float32)
         if cfg.sanitize:
             # On-device sanitizer: count invariant violations this
             # superstep (checkify-style — observed, not branched on, so
@@ -618,6 +639,9 @@ class DataLocalEngine:
         pstats = dict(filtered_at_proxy=jnp.sum(filtered).astype(jnp.float32),
                       coalesced_at_proxy=coalesced.astype(jnp.float32),
                       cascade_combined=ncomb)
+        if cfg.telemetry:
+            # owner-delivery counts per tile (direct + flush legs summed)
+            pstats["tv_delivered"] = per_tile.astype(jnp.float32)
         return mail_val, mail_flag, p_tag, p_val, charges, pstats, dmax, off
 
     # --------------------------------------------------------- flush drain
@@ -836,7 +860,8 @@ class DataLocalEngine:
 
     # ----------------------------------------------------------------- run
     def run(self, state, max_supersteps: Optional[int] = None,
-            progress_every: int = 0, chunk: Optional[int] = None):
+            progress_every: int = 0, chunk: Optional[int] = None,
+            observer=None):
         """Run supersteps until drained; returns (state, RunResult).
 
         ``chunk`` overrides ``EngineConfig.run_chunk``: supersteps per
@@ -845,7 +870,14 @@ class DataLocalEngine:
         scans K supersteps per dispatch with identical results.
         ``progress_every`` reports at chunk granularity: the first chunk
         boundary at or past each multiple prints the true executed
-        superstep count."""
+        superstep count.
+
+        ``observer`` (obs.timeline.Observer) receives ``on_run_start``
+        with the run's :class:`~repro.obs.timeline.RunMeta`, one
+        ``on_chunk`` span per chunk (per superstep on the legacy loop) at
+        the existing host-accounting boundary, and ``on_run_end`` with
+        the RunResult.  Attaching one adds no host syncs and leaves
+        counters/trace/final state bit-identical."""
         self._require_mono("run")
         cfg = self.cfg
         maxs = max_supersteps or cfg.max_supersteps
@@ -857,6 +889,11 @@ class DataLocalEngine:
         pkg = cfg.pkg
         links = link_provisioning(cfg.grid, pkg)
         values_before = state["values"] if cfg.sanitize else None
+        if observer is not None:
+            observer.on_run_start(RunMeta(
+                app=self.app.name, grid_ny=cfg.grid.ny, grid_nx=cfg.grid.nx,
+                chunk=K, backend=cfg.backend, sanitize=cfg.sanitize,
+                telemetry=cfg.telemetry, pkg=pkg, grid=cfg.grid))
 
         def account(stats):
             """Legacy-loop per-superstep accounting.  The chunked branch
@@ -875,9 +912,10 @@ class DataLocalEngine:
 
         if K <= 0:
             state, steps = self._run_legacy(state, maxs, progress_every,
-                                            account)
+                                            account, observer=observer)
         else:
-            progress = _ProgressReporter(self.app.name, progress_every)
+            progress = _ProgressReporter(self.app.name, progress_every,
+                                         sanitize=cfg.sanitize)
             fill = links["diameter"] * 0.5
             if self._stat_names is None:   # one abstract trace per engine
                 self._stat_names = _stat_keys(self._chunk_step_one, state,
@@ -901,7 +939,8 @@ class DataLocalEngine:
             chunk_fn = functools.partial(self._chunk, length=K)
             state, steps, cycles = _drain_chunked(
                 chunk_fn, state, maxs, self._stat_names, counters, trace,
-                cfg.element_bits, progress, add_chunk_cycles, cycles)
+                cfg.element_bits, progress, add_chunk_cycles, cycles,
+                observer=observer)
         counters.supersteps = steps
         time_s = cycles / (CLOCK_GHZ * 1e9)
         result = RunResult(counters=counters, cycles=cycles, time_s=time_s,
@@ -916,21 +955,36 @@ class DataLocalEngine:
                 values_before=values_before, values_after=state["values"],
                 drained=steps < maxs)
             _inv.assert_clean(findings, context=f"run({self.app.name})")
+        if observer is not None:
+            observer.on_run_end(result)
         return state, result
 
-    def _run_legacy(self, state, maxs, progress_every, account):
+    def _run_legacy(self, state, maxs, progress_every, account,
+                    observer=None):
         """The seed per-step loop: one dispatch + one host sync per
         superstep.  Kept as the measured baseline for the chunked loop
-        (``benchmarks/engine_throughput.py``) and its bit-identity tests."""
+        (``benchmarks/engine_throughput.py``) and its bit-identity tests.
+        With an ``observer``, each superstep emits one single-step
+        :class:`~repro.obs.timeline.ChunkSpan` at the per-step host sync
+        this loop already pays."""
         cfg = self.cfg
         write_back = cfg.proxy is not None and cfg.proxy.write_back
+        sync_ctr = default_registry().counter("engine.host_syncs")
         steps = 0
         flush_flag = jnp.asarray(False)
         while steps < maxs:
+            t0 = time.perf_counter()
             state, stats = self._superstep(state, flush_flag)
+            t1 = time.perf_counter()
             stats = jax.device_get(stats)
+            sync_ctr.inc()
+            t2 = time.perf_counter()
             steps += 1
             account(stats)
+            t3 = time.perf_counter()
+            if observer is not None:
+                observer.on_chunk(_legacy_span(steps, stats, (t0, t1),
+                                               (t1, t2), (t2, t3)))
             if flush_flag:
                 flush_flag = jnp.asarray(False)
             if stats["pending"] == 0:
@@ -1074,15 +1128,20 @@ _EXACT_INT_STATS = ("pending", "edges_processed", "records_consumed",
 
 
 def _stat_keys(step_one, state, flush):
-    """Stat names of ``step_one``'s stats dict in the packed-vector order
-    ``_scan_steps`` emits (sorted, with ``active`` appended), via an
-    abstract trace — no device computation."""
+    """Scalar stat names of ``step_one``'s stats dict in the packed-vector
+    order ``_scan_steps`` emits (sorted, with ``active`` appended), via an
+    abstract trace — no device computation.  Telemetry *vector* stats
+    (``tv_*`` / ``pc_*``, nonzero ndim) are excluded: they ride the
+    scan's separate stacked-dict channel under their own names, so the
+    packed f32 row layout is identical with telemetry on or off."""
     stats_shape = jax.eval_shape(step_one, state, flush)[1]
-    return sorted(stats_shape.keys()) + ["active"]
+    return sorted(k for k, v in stats_shape.items()
+                  if v.ndim == 0) + ["active"]
 
 
 def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
-                   element_bits, progress, add_chunk_cycles, cycles):
+                   element_bits, progress, add_chunk_cycles, cycles,
+                   observer=None):
     """The host side of the chunked run loop, shared verbatim by the
     monolithic and distributed engines (so chunk unpacking, accounting
     and termination cannot drift between them).
@@ -1093,15 +1152,29 @@ def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
     ``add_chunk_cycles(stacked, n_act, cycles) -> cycles`` closure for
     the BSP time model (it accumulates sequentially, preserving the
     legacy loop's float-addition order).  Returns (state, steps, cycles).
+
+    ``observer`` (obs.timeline.Observer) is called once per chunk at the
+    *existing* host-accounting boundary with the already-fetched arrays
+    plus wall-clock span times — attaching one adds zero host syncs and
+    cannot perturb the computation (it only reads).  Every chunk's
+    device_get increments the ``engine.host_syncs`` metric, observer or
+    not, so telemetry-on/off sync counts are directly comparable.
     """
+    sync_ctr = default_registry().counter("engine.host_syncs")
     steps = 0
+    chunk_idx = 0
     flush = jnp.zeros((), jnp.bool_)
     done = jnp.zeros((), jnp.bool_)
     while steps < maxs:
-        (state, flush, done, _), (packed, ints) = chunk_fn(
+        t0 = time.perf_counter()
+        (state, flush, done, _), (packed, ints, vecs) = chunk_fn(
             state, flush, done, jnp.int32(maxs - steps))
+        t1 = time.perf_counter()
         # the single host sync of this chunk:
-        host_done, packed, ints = jax.device_get((done, packed, ints))
+        host_done, packed, ints, vecs = jax.device_get(
+            (done, packed, ints, vecs))
+        sync_ctr.inc()
+        t2 = time.perf_counter()
         stacked = {k: packed[:, i] for i, k in enumerate(keys)}
         for i, k in enumerate(_EXACT_INT_STATS):
             stacked[k] = ints[:, i]          # exact int32, not the f32 row
@@ -1110,11 +1183,37 @@ def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
             counters.add(chunk_counters(stacked, n_act))
             trace.append_chunk(stacked, n_act, element_bits=element_bits)
             cycles = add_chunk_cycles(stacked, n_act, cycles)
+        t3 = time.perf_counter()
+        if observer is not None:
+            observer.on_chunk(ChunkSpan(
+                index=chunk_idx, step_lo=steps, step_hi=steps + n_act,
+                t_dispatch=(t0, t1), t_fetch=(t1, t2), t_account=(t2, t3),
+                stats={k: np.asarray(v[:n_act]) for k, v in stacked.items()},
+                vecs={k: np.asarray(v[:n_act]) for k, v in vecs.items()}))
         steps += n_act
+        chunk_idx += 1
         progress.report(steps, stacked, n_act)
         if host_done or n_act == 0:
             break
     return state, steps, cycles
+
+
+def _legacy_span(steps, stats, t_dispatch, t_fetch, t_account):
+    """One per-step-loop superstep as a single-step ChunkSpan: scalar
+    stats become ``(1,)`` arrays and telemetry vectors (``tv_*`` /
+    ``pc_*``) become ``(1, W)`` rows — the same shapes the chunked loop
+    emits, so observers need not care which loop ran."""
+    scal, vecs = {}, {}
+    for k, v in stats.items():
+        a = np.asarray(v)
+        if a.ndim == 0:
+            scal[k] = a[None]
+        else:
+            vecs[k] = a[None]
+    scal["active"] = np.ones((1,), np.float32)
+    return ChunkSpan(index=steps - 1, step_lo=steps - 1, step_hi=steps,
+                     t_dispatch=t_dispatch, t_fetch=t_fetch,
+                     t_account=t_account, stats=scal, vecs=vecs)
 
 
 def _scan_steps(step_one, state, flush, done, steps_left, length: int,
@@ -1144,33 +1243,41 @@ def _scan_steps(step_one, state, flush, done, steps_left, length: int,
     below 2**24, so the packing loses nothing.  The flush/termination
     decisions read the exact pre-packing integers.
 
-    Returns ((state, flush, done, steps_left), (stacked, stacked_ints))
-    with shapes ``(length, n_stats)`` f32 and
-    ``(length, len(_EXACT_INT_STATS))`` int32.
+    Returns ((state, flush, done, steps_left), (stacked, stacked_ints,
+    stacked_vecs)) with shapes ``(length, n_stats)`` f32,
+    ``(length, len(_EXACT_INT_STATS))`` int32, and — telemetry only — a
+    dict of ``(length, W)`` f32 vector stats (empty dict otherwise, so
+    the non-telemetry compiled program is unchanged).
     """
-    keys = _stat_keys(step_one, state, flush)[:-1]
+    stats_shape = jax.eval_shape(step_one, state, flush)[1]
+    keys = sorted(k for k, v in stats_shape.items() if v.ndim == 0)
+    vkeys = sorted(k for k, v in stats_shape.items() if v.ndim > 0)
 
     def packed_step(st, fl):
         new_state, stats = step_one(st, fl)
         vec = jnp.stack([stats[k].astype(jnp.float32) for k in keys])
         ints = jnp.stack([stats[k].astype(jnp.int32)
                           for k in _EXACT_INT_STATS])
+        vstats = {k: stats[k].astype(jnp.float32) for k in vkeys}
         return (new_state, vec, ints,
-                stats["p_resident"] if write_back else jnp.int32(0))
+                stats["p_resident"] if write_back else jnp.int32(0),
+                vstats)
 
     def idle_step(st, _fl):
         # pending=1 so a masked idle row can never read as "drained";
         # the row is discarded anyway (active=0)
+        vstats = {k: jnp.zeros(stats_shape[k].shape, jnp.float32)
+                  for k in vkeys}
         return (st, jnp.zeros((len(keys),), jnp.float32),
                 jnp.array([1] + [0] * (len(_EXACT_INT_STATS) - 1),
-                          jnp.int32), jnp.int32(0))
+                          jnp.int32), jnp.int32(0), vstats)
 
     def body(carry, _):
         state, flush, done, left = carry
         active = jnp.logical_and(~done, left > 0)
         # cond, not select: iterations past the stop point skip the
         # superstep entirely instead of computing and discarding it
-        new_state, vec, ints, p_res = jax.lax.cond(
+        new_state, vec, ints, p_res, vstats = jax.lax.cond(
             active, packed_step, idle_step, state, flush)
         drained = active & (ints[0] == 0)
         if write_back:
@@ -1180,7 +1287,7 @@ def _scan_steps(step_one, state, flush, done, steps_left, length: int,
         done_next = done | (drained & ~flush_next)
         row = jnp.concatenate([vec, active.astype(jnp.float32)[None]])
         return (new_state, flush_next, done_next,
-                left - active.astype(left.dtype)), (row, ints)
+                left - active.astype(left.dtype)), (row, ints, vstats)
 
     return jax.lax.scan(body, (state, flush, done, steps_left), None,
                         length=length)
@@ -1219,19 +1326,42 @@ class _ProgressReporter:
     """Chunk-granularity progress for the scanned run loops: reports the
     true executed superstep count at the first chunk boundary at or past
     each ``every`` multiple (the per-step loop's ``steps % every == 0``
-    would silently skip multiples that fall inside a chunk)."""
+    would silently skip multiples that fall inside a chunk).
 
-    def __init__(self, name: str, every: int):
+    Progress flows through the obs metrics registry — gauges
+    ``progress.<app>.steps`` / ``.pending`` updated every chunk, counter
+    ``progress.<app>.reports`` per printed line — so harnesses read it
+    without scraping stdout; when the sanitizer is on, the line also
+    carries the cumulative ``sanity_violations`` count."""
+
+    def __init__(self, name: str, every: int, sanitize: bool = False):
         self.name = name
         self.every = every
+        self.sanitize = sanitize
         self._next = every
+        self._violations = 0.0
+        reg = default_registry()
+        self._g_steps = reg.gauge(f"progress.{name}.steps")
+        self._g_pending = reg.gauge(f"progress.{name}.pending")
+        self._c_reports = reg.counter(f"progress.{name}.reports")
 
     def report(self, steps: int, stacked, n_act: int) -> None:
-        if not self.every or n_act == 0 or steps < self._next:
+        if n_act == 0:
             return
         pending = float(stacked["pending"][n_act - 1])
-        print(f"  [{self.name}] step {steps} (chunk of {n_act}) "
-              f"pending={pending:.0f}")
+        self._g_steps.set(steps)
+        self._g_pending.set(pending)
+        if self.sanitize and "sanity_violations" in stacked:
+            self._violations += float(
+                np.sum(stacked["sanity_violations"][:n_act]))
+        if not self.every or steps < self._next:
+            return
+        self._c_reports.inc()
+        line = (f"  [{self.name}] step {steps} (chunk of {n_act}) "
+                f"pending={pending:.0f}")
+        if self.sanitize:
+            line += f" sanity_violations={self._violations:.0f}"
+        print(line)
         while self._next <= steps:
             self._next += self.every
 

@@ -40,6 +40,7 @@ once per chunk (``run(chunk=0)`` keeps the per-step dispatch).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -52,13 +53,15 @@ from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
                               _off_pkg_bits_per_cycle,
                               board_link_provisioning, link_provisioning)
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
-                           RunResult, _drain_chunked, _pad,
+                           RunResult, _drain_chunked, _legacy_span, _pad,
                            _ProgressReporter, _sanitize_gate, _scan_steps,
                            _stat_keys, chunk_cycles,
                            superstep_counters, superstep_cycles)
 from ..core.netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from ..core.proxy import chip_local_proxy
 from ..core.tilegrid import ChipPartition, TileGrid, partition_grid
+from ..obs.metrics import default_registry
+from ..obs.timeline import RunMeta
 
 
 def partition(grid: TileGrid, num_chips: int) -> ChipPartition:
@@ -86,8 +89,11 @@ def _combine_into_mail(mail_val, mail_flag, flat, mask, val, seg, n_seg,
     ``flat`` indexes the flattened mailbox, ``seg`` the receiving tile
     (for endpoint contention); masked-out records go to a sentinel row.
     Shared by the emulated exchange and the shard_map receive side so
-    the two backends cannot drift.  Returns (mail_val, mail_flag,
-    recv_max).
+    the two backends cannot drift.  Returns (mail_val, mail_flag, recv)
+    where ``recv`` is the per-receiving-tile arrival-count vector
+    ``(n_seg,)`` — callers max it for endpoint contention (identical to
+    the former recv_max return) and, under telemetry, also reduce it
+    per chip for the ``pc_recv`` load vector.
     """
     n_flat = mail_val.shape[0]
     # masked records index one past the end; mode="drop" discards them at
@@ -101,7 +107,7 @@ def _combine_into_mail(mail_val, mail_flag, flat, mask, val, seg, n_seg,
     recv = jax.ops.segment_sum(mask.astype(jnp.float32),
                                jnp.where(mask, seg, n_seg),
                                num_segments=n_seg + 1)[:n_seg]
-    return mv, mf, jnp.max(recv)
+    return mv, mf, recv
 
 
 def _pending(state):
@@ -120,9 +126,10 @@ def exchange(part: ChipPartition, chunk_dst: int, state, off, is_min: bool):
 
     Combining into a mailbox is commutative (min / add / flag-or), so one
     global scatter is exactly equivalent to routing each record across
-    the board and combining on arrival.  Returns (state, recv_max): the
-    per-tile maximum of received records, which feeds endpoint contention
-    in the BSP time model.
+    the board and combining on arrival.  Returns (state, recv): the
+    ``(chips, tiles_local)`` received-record counts, whose max feeds
+    endpoint contention in the BSP time model and whose per-chip sums
+    feed the ``pc_recv`` telemetry vector.
     """
     C = part.num_chips
     Tl = part.tiles_per_chip
@@ -131,26 +138,49 @@ def exchange(part: ChipPartition, chunk_dst: int, state, off, is_min: bool):
     val = off["val"].reshape(-1)
     mask = off["mask"].reshape(-1)
     chip, ltile, off_idx = _owner_slots(part, chunk_dst, dst)
-    mv, mf, recv_max = _combine_into_mail(
+    mv, mf, recv = _combine_into_mail(
         state["mail_val"].reshape(-1), state["mail_flag"].reshape(-1),
         chip * Nld + off_idx, mask, val, chip * Tl + ltile, C * Tl, is_min)
     state = dict(state, mail_val=mv.reshape(C, Nld),
                  mail_flag=mf.reshape(C, Nld))
-    return state, recv_max
+    return state, recv.reshape(C, Tl)
 
 
-def _aggregate(stats, recv_max):
+def _aggregate(stats, recv, telemetry: bool = False):
     """Reduce per-chip superstep stats to grid-global ones: traffic sums,
-    bottleneck (per-tile) maxima; exchange receive contention folds into
-    the delivery max."""
+    bottleneck (per-tile) maxima; exchange receive contention (``recv``,
+    the ``(chips, tiles_local)`` arrival counts, or None on a 1x1
+    partition) folds into the delivery max.
+
+    Under ``telemetry`` the vmapped per-chip/per-tile load vectors are
+    additionally reduced to per-chip ``pc_*`` vectors (shape
+    ``(chips,)``) that ride the scan's stacked-dict channel into
+    ``obs.imbalance``; the engine's per-tile ``tv_*`` vectors are
+    consumed here (a chip's intra-tile split stays chip-local)."""
     agg = {}
+    vecs = {}
     for k, v in stats.items():
+        if k.startswith("tv_"):
+            vecs[k] = v                       # (chips, tiles_local)
+            continue
         if k in ("compute_per_tile_max", "delivered_max_per_tile"):
             agg[k] = jnp.max(v)
         else:
             agg[k] = jnp.sum(v)
+    recv_max = jnp.float32(0.0) if recv is None else jnp.max(recv)
     agg["delivered_max_per_tile"] = jnp.maximum(
         agg["delivered_max_per_tile"], recv_max)
+    if telemetry:
+        agg["pc_edges"] = jnp.sum(vecs["tv_edges"], axis=-1)
+        agg["pc_records"] = jnp.sum(vecs["tv_records"], axis=-1)
+        agg["pc_delivered"] = jnp.sum(vecs["tv_delivered"], axis=-1)
+        agg["pc_delivmax"] = jnp.max(vecs["tv_delivered"], axis=-1)
+        agg["pc_compute"] = stats["compute_per_tile_max"]
+        agg["pc_owner"] = stats["owner_msgs"]
+        if "off_chip_msgs" in stats:
+            agg["pc_offchip"] = stats["off_chip_msgs"]
+        agg["pc_recv"] = (jnp.zeros_like(agg["pc_edges"]) if recv is None
+                          else jnp.sum(recv, axis=-1))
     return agg
 
 
@@ -293,17 +323,18 @@ class DistributedEngine:
         kernel, part, Cd, is_min = (self.kernel, self.part, self.Cd,
                                     self._is_min)
         multi = self.C > 1
+        telemetry = self.cfg.telemetry
 
         def step(row_lo, row_hi, state, chip_ids, flush):
             new_state, stats, off = jax.vmap(
                 kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
                 row_lo, row_hi, state, chip_ids, flush)
             if multi:
-                new_state, recv_max = exchange(part, Cd, new_state, off,
-                                               is_min)
+                new_state, recv = exchange(part, Cd, new_state, off,
+                                           is_min)
             else:                       # 1x1 partition: nothing can leave
-                recv_max = jnp.float32(0.0)
-            agg = _aggregate(stats, recv_max)
+                recv = None
+            agg = _aggregate(stats, recv, telemetry)
             # pending must see the post-exchange mailboxes: a record that
             # crossed chips this superstep is the next superstep's work
             agg["pending"] = _pending(new_state)
@@ -338,6 +369,7 @@ class DistributedEngine:
         kernel, part, Cd, Tl = self.kernel, self.part, self.Cd, self.Tl
         is_min = self._is_min
         Nld = kernel.Nd
+        telemetry = self.cfg.telemetry
 
         def step(row_lo, row_hi, state, chip_ids, flush):
             new_state, stats, off = jax.vmap(
@@ -353,23 +385,46 @@ class DistributedEngine:
             ochip, ltile, off_idx = _owner_slots(part, Cd, g_dst)
             mine = g_mask & (ochip // per == jax.lax.axis_index("chips"))
             lane = ochip % per
-            mv, mf, recv_max = _combine_into_mail(
+            mv, mf, recv = _combine_into_mail(
                 new_state["mail_val"].reshape(-1),
                 new_state["mail_flag"].reshape(-1),
                 lane * Nld + off_idx, mine, g_val, lane * Tl + ltile,
                 per * Tl, is_min)
+            recv = recv.reshape(per, Tl)
             new_state = dict(new_state,
                              mail_val=mv.reshape(per, Nld),
                              mail_flag=mf.reshape(per, Nld))
             agg = {}
+            vecs = {}
             for k2, v in stats.items():
+                if k2.startswith("tv_"):
+                    vecs[k2] = v              # (per, tiles_local)
+                    continue
                 if k2 in ("compute_per_tile_max", "delivered_max_per_tile"):
                     agg[k2] = jax.lax.pmax(jnp.max(v), "chips")
                 else:
                     agg[k2] = jax.lax.psum(jnp.sum(v), "chips")
             agg["delivered_max_per_tile"] = jnp.maximum(
                 agg["delivered_max_per_tile"],
-                jax.lax.pmax(recv_max, "chips"))
+                jax.lax.pmax(jnp.max(recv), "chips"))
+            if telemetry:
+                # per-chip pc_* load vectors, replicated across devices so
+                # the stacked stats channel stays out_specs=P()
+                def gather(x):
+                    return jax.lax.all_gather(x, "chips", tiled=True)
+
+                agg["pc_edges"] = gather(jnp.sum(vecs["tv_edges"], axis=-1))
+                agg["pc_records"] = gather(
+                    jnp.sum(vecs["tv_records"], axis=-1))
+                agg["pc_delivered"] = gather(
+                    jnp.sum(vecs["tv_delivered"], axis=-1))
+                agg["pc_delivmax"] = gather(
+                    jnp.max(vecs["tv_delivered"], axis=-1))
+                agg["pc_compute"] = gather(stats["compute_per_tile_max"])
+                agg["pc_owner"] = gather(stats["owner_msgs"])
+                if "off_chip_msgs" in stats:
+                    agg["pc_offchip"] = gather(stats["off_chip_msgs"])
+                agg["pc_recv"] = gather(jnp.sum(recv, axis=-1))
             # post-exchange pending, globally (see _raw_vmap_step)
             agg["pending"] = jax.lax.psum(_pending(new_state), "chips")
             return new_state, agg
@@ -422,7 +477,8 @@ class DistributedEngine:
 
     # ------------------------------------------------------------------ run
     def run(self, state, max_supersteps: Optional[int] = None,
-            progress_every: int = 0, chunk: Optional[int] = None):
+            progress_every: int = 0, chunk: Optional[int] = None,
+            observer=None):
         """Run distributed supersteps until drained; returns
         (state-with-global-values, RunResult).
 
@@ -431,10 +487,22 @@ class DistributedEngine:
         dispatch — each including its boundary exchange — and the host
         checks pending/p_resident once per chunk.  ``chunk=0`` keeps the
         legacy per-superstep dispatch.  ``progress_every`` reports at
-        chunk granularity with true executed superstep counts."""
+        chunk granularity with true executed superstep counts.
+
+        ``observer`` (obs.timeline.Observer) hooks the existing chunk
+        host-accounting boundary exactly like the monolithic engine —
+        zero extra host syncs, bit-identical results; with
+        ``EngineConfig.telemetry`` the spans carry per-chip ``pc_*``
+        load vectors."""
         cfg, part = self.cfg, self.part
         maxs = max_supersteps or cfg.max_supersteps
         K = cfg.run_chunk if chunk is None else int(chunk)
+        if observer is not None:
+            observer.on_run_start(RunMeta(
+                app=self.app.name, grid_ny=cfg.grid.ny, grid_nx=cfg.grid.nx,
+                n_chips=self.C, chips_y=part.chips_y, chips_x=part.chips_x,
+                chunk=K, backend=self.backend, sanitize=cfg.sanitize,
+                telemetry=cfg.telemetry, pkg=cfg.pkg, grid=cfg.grid))
         counters = TrafficCounters()
         cycles = 0.0
         steps = 0
@@ -470,11 +538,12 @@ class DistributedEngine:
 
         if K <= 0:
             state, steps = self._run_legacy(state, maxs, progress_every,
-                                            account)
+                                            account, observer=observer)
         else:
             chunk_fn = self._get_chunk_fn(K)
             progress = _ProgressReporter(f"{self.app.name}/{self.C}chips",
-                                         progress_every)
+                                         progress_every,
+                                         sanitize=cfg.sanitize)
             fill = links["diameter"] * 0.5
             board_div = n_board_links * _off_pkg_bits_per_cycle(pkg)
             # stat layout of the packed scan rows (the vmapped step's agg
@@ -515,7 +584,8 @@ class DistributedEngine:
 
             state, steps, cycles = _drain_chunked(
                 chunk_fn, state, maxs, self._stat_names, counters, trace,
-                cfg.element_bits, progress, add_chunk_cycles, cycles)
+                cfg.element_bits, progress, add_chunk_cycles, cycles,
+                observer=observer)
         counters.supersteps = steps
         time_s = cycles / (CLOCK_GHZ * 1e9)
         out_state = dict(state)
@@ -531,20 +601,34 @@ class DistributedEngine:
                 seeds=getattr(self, "_n_seeds", 0), drained=steps < maxs)
             _inv.assert_clean(
                 findings, context=f"run({self.app.name}, {self.C} chips)")
+        if observer is not None:
+            observer.on_run_end(result)
         return out_state, result
 
-    def _run_legacy(self, state, maxs, progress_every, account):
+    def _run_legacy(self, state, maxs, progress_every, account,
+                    observer=None):
         """The seed per-superstep dispatch loop (one host sync per
-        superstep) — the measured baseline for the chunked loop."""
+        superstep) — the measured baseline for the chunked loop.  With an
+        ``observer``, each superstep emits one single-step span at the
+        per-step host sync this loop already pays."""
         write_back = self._write_back
         step_fn = self._get_step()
+        sync_ctr = default_registry().counter("engine.host_syncs")
         steps = 0
         flush_flag = jnp.asarray(False)
         while steps < maxs:
+            t0 = time.perf_counter()
             state, stats = step_fn(state, flush_flag)
+            t1 = time.perf_counter()
             stats = jax.device_get(stats)
+            sync_ctr.inc()
+            t2 = time.perf_counter()
             steps += 1
             account(stats)
+            t3 = time.perf_counter()
+            if observer is not None:
+                observer.on_chunk(_legacy_span(steps, stats, (t0, t1),
+                                               (t1, t2), (t2, t3)))
             if flush_flag:
                 flush_flag = jnp.asarray(False)
             if stats["pending"] == 0:

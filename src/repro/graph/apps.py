@@ -179,10 +179,11 @@ def engine_and_state(name: str, g: CSR, grid: TileGrid,
 
 # ---------------------------------------------------------------- traversals
 def bfs(g: CSR, root: int, grid: TileGrid,
-        proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+        proxy: Optional[ProxyConfig] = None, observer=None,
+        **kw) -> AppResult:
     eng = _engine(BFS_SPEC, g, grid, proxy, **kw)
     state = eng.init_state(seed_idx=root, seed_val=0.0)
-    state, run = eng.run(state)
+    state, run = eng.run(state, observer=observer)
     vals = np.asarray(state["values"])[: g.n_rows]
     reached = np.isfinite(vals)
     teps = float(g.out_degree()[reached].sum())
@@ -190,10 +191,11 @@ def bfs(g: CSR, root: int, grid: TileGrid,
 
 
 def sssp(g: CSR, root: int, grid: TileGrid,
-         proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+         proxy: Optional[ProxyConfig] = None, observer=None,
+         **kw) -> AppResult:
     eng = _engine(SSSP_SPEC, g, grid, proxy, **kw)
     state = eng.init_state(seed_idx=root, seed_val=0.0)
-    state, run = eng.run(state)
+    state, run = eng.run(state, observer=observer)
     vals = np.asarray(state["values"])[: g.n_rows]
     reached = np.isfinite(vals)
     teps = float(g.out_degree()[reached].sum())
@@ -201,7 +203,7 @@ def sssp(g: CSR, root: int, grid: TileGrid,
 
 
 def wcc(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
-        symmetrize: bool = False, **kw) -> AppResult:
+        symmetrize: bool = False, observer=None, **kw) -> AppResult:
     """Min-label propagation (graph colouring per [75]).  The input graph
     must contain both edge directions for weak components; RMAT graphs
     from ``rmat_edges`` already do — pass symmetrize=True otherwise."""
@@ -218,16 +220,19 @@ def wcc(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
     n = g.n_rows
     state = eng.init_state(seed_idx=np.arange(n),
                            seed_val=np.arange(n, dtype=np.float32))
-    state, run = eng.run(state)
+    state, run = eng.run(state, observer=observer)
     vals = np.asarray(state["values"])[:n]
     return AppResult(values=vals, run=run, teps_edges=float(g.nnz))
 
 
 # --------------------------------------------------------------- BSP / algebra
 def pagerank(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
-             epochs: int = 10, damping: float = 0.85, **kw) -> AppResult:
+             epochs: int = 10, damping: float = 0.85, observer=None,
+             **kw) -> AppResult:
     """BSP PageRank: one engine drain per epoch (barrier = paper's epoch
-    end, where the write-back proxy flushes)."""
+    end, where the write-back proxy flushes).  An ``observer`` sees one
+    on_run_start/on_run_end pair per epoch; spans accumulate across
+    epochs (each epoch's step_lo restarts at 0)."""
     n = g.n_rows
     deg = np.maximum(g.out_degree(), 1).astype(np.float32)
     ranks = np.full(n, 1.0 / n, np.float32)
@@ -238,7 +243,7 @@ def pagerank(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
         contrib = damping * ranks / deg
         state = eng.init_state()
         state = eng.activate_all(state, contrib)
-        state, run = eng.run(state)
+        state, run = eng.run(state, observer=observer)
         acc = np.asarray(state["values"])[:n]
         ranks = (1.0 - damping) / n + acc
         _accumulate(total, run)
@@ -247,7 +252,8 @@ def pagerank(g: CSR, grid: TileGrid, proxy: Optional[ProxyConfig] = None,
 
 
 def spmv(a: CSR, x: np.ndarray, grid: TileGrid,
-         proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+         proxy: Optional[ProxyConfig] = None, observer=None,
+         **kw) -> AppResult:
     """y = A @ x.  The engine streams from *columns* (the source items that
     own x[j]) along the column's nonzeros to row owners — i.e. we run on
     A^T's CSR, which is A's CSC.  This is the paper's formulation: the
@@ -260,13 +266,14 @@ def spmv(a: CSR, x: np.ndarray, grid: TileGrid,
                  at.weights, chips, backend)
     state = eng.init_state()
     state = eng.activate_all(state, np.asarray(x, np.float32))
-    state, run = eng.run(state)
+    state, run = eng.run(state, observer=observer)
     y = np.asarray(state["values"])[: a.n_rows]
     return AppResult(values=y, run=run, teps_edges=float(a.nnz))
 
 
 def histogram(values: np.ndarray, bins: int, grid: TileGrid,
-              proxy: Optional[ProxyConfig] = None, **kw) -> AppResult:
+              proxy: Optional[ProxyConfig] = None, observer=None,
+              **kw) -> AppResult:
     """Count values into bins.  Each input element is a source item with a
     single 'edge' to its bin (paper: E elements filtered into V/8 bins)."""
     values = np.asarray(values, np.int32)
@@ -280,7 +287,7 @@ def histogram(values: np.ndarray, bins: int, grid: TileGrid,
                  backend)
     state = eng.init_state()
     state = eng.activate_all(state, np.ones(m, np.float32))
-    state, run = eng.run(state)
+    state, run = eng.run(state, observer=observer)
     counts = np.asarray(state["values"])[:bins]
     return AppResult(values=counts, run=run, teps_edges=float(m))
 

@@ -161,10 +161,14 @@ class ProductSearch:
         tests/test_chunked.py), so it is *not* part of the cache key.
         """
         self.validate(spec)
+        from ..obs.metrics import default_registry
+        reg = default_registry()
         key = spec.key()
         payload = self.cache.get(key)
         if payload is not None:
+            reg.counter("products.measure.cache_hits").inc()
             return Measurement.from_payload(spec, payload)
+        reg.counter("products.measure.cache_misses").inc()
         m = self._run_engine(spec, run_chunk=run_chunk)
         self.cache.put(key, m.to_payload())
         return m
