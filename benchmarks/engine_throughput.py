@@ -19,6 +19,18 @@ async-dispatch accelerator backend the per-step host round-trip the
 chunked loop eliminates is the dominant term.  ``host_syncs`` records
 the exactly-measured O(supersteps) -> O(supersteps/K) sync reduction.
 
+A second axis sweeps *devices*: each ``DEVICE_CONFIGS`` row re-executes
+this script in a subprocess with ``XLA_FLAGS=
+--xla_force_host_platform_device_count=N`` (N = 1/2/4 forced CPU
+devices) and runs the 4-chip distributed engine on the resulting
+ExecMesh, once with the synchronous boundary exchange and once
+double-buffered (``EngineConfig.double_buffer``).  Counters, values and
+the physical trace are asserted identical between the two modes (the
+double-buffer flag itself is excluded — it is priced, not measured);
+``db_sim_win`` records the simulated-time win the overlapped exchange
+buys, and ``speedup`` here is the sync/db *wall* ratio (noisy on CPU —
+the sim win is the deterministic signal).
+
 Emits BENCH_engine.json (list of per-config rows) for the perf
 trajectory; --smoke runs one tiny config, asserts counter/trace
 equality, and still writes the JSON (CI uploads it as an artifact).
@@ -28,6 +40,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 from common import row, timed  # noqa: F401  (path bootstrap)
@@ -118,6 +132,93 @@ def bench_config(app_name: str, tiles: int, scale: int, oq_cap: int,
     return out
 
 
+def _device_row(app_name: str, tiles: int, scale: int, oq_cap: int,
+                chunk: int, use_proxy: bool, devices: int,
+                repeats: int = 2) -> dict:
+    """One devices-axis row, executed *inside* the forced-device-count
+    subprocess: 4-chip distributed run, sync vs double-buffered exchange
+    on the same ExecMesh, with bit-identity of everything but the priced
+    overlap asserted."""
+    import jax
+    g = rmat_edges(scale, edge_factor=8, seed=1)
+    grid = square_grid(tiles)
+    root = int(np.argmax(g.out_degree()))
+    proxy = apps.table2_proxy(grid, app_name) if use_proxy else None
+    res = {}
+    for db in (False, True):
+        eng, state, _seeds = apps.engine_and_state(
+            app_name, g, grid, proxy=proxy, root=root,
+            backend="shard_map", chips=4, oq_cap=oq_cap,
+            double_buffer=db)
+        eng.run(state, chunk=chunk)                      # warm/compile
+        best, r, fin = float("inf"), None, None
+        for _ in range(repeats):
+            t0 = time.time()
+            st, rr = eng.run(state, chunk=chunk)
+            best = min(best, time.time() - t0)
+            r, fin = rr, st
+        res[db] = (best, r, fin, eng.mesh.ndev)
+    (t_sync, r_sync, st_sync, ndev), (t_db, r_db, st_db, _) = \
+        res[False], res[True]
+    td_s, td_d = r_sync.trace.to_dict(), r_db.trace.to_dict()
+    td_s.pop("double_buffer"), td_d.pop("double_buffer")
+    counters_equal = r_sync.counters.as_dict() == r_db.counters.as_dict()
+    values_equal = bool(np.array_equal(np.asarray(st_sync["values"]),
+                                       np.asarray(st_db["values"])))
+    assert counters_equal, f"{app_name}: db counters diverged"
+    assert td_s == td_d, f"{app_name}: db physical trace diverged"
+    assert values_equal, f"{app_name}: db values diverged"
+    assert r_sync.supersteps == r_db.supersteps
+    return dict(
+        app=app_name, tiles=tiles, scale=scale, oq_cap=oq_cap,
+        proxy=use_proxy, chunk=chunk, chips=4, devices=devices,
+        host_devices=jax.device_count(), mesh_devices=ndev,
+        supersteps=r_sync.supersteps,
+        wall_s_sync=t_sync, wall_s_db=t_db,
+        speedup=t_sync / t_db,
+        sim_time_s=r_sync.time_s, sim_time_s_db=r_db.time_s,
+        db_sim_win=1.0 - r_db.time_s / r_sync.time_s,
+        counters_equal=counters_equal, trace_equal=True,
+        values_equal=values_equal,
+    )
+
+
+def bench_devices(app_name: str, tiles: int, scale: int, oq_cap: int,
+                  chunk: int, use_proxy: bool, devices: int,
+                  repeats: int = 2) -> dict:
+    """Spawn the forced-device-count worker and collect its row.  The
+    device count must be baked into XLA_FLAGS before jax imports, hence
+    the subprocess re-exec."""
+    spec = dict(app_name=app_name, tiles=tiles, scale=scale,
+                oq_cap=oq_cap, chunk=chunk, use_proxy=use_proxy,
+                devices=devices, repeats=repeats)
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.abspath(os.path.join(here, "..", "src")),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--_worker",
+         json.dumps(spec)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"device worker ({devices} devices) failed:\n"
+            f"{proc.stdout[-1000:]}\n{proc.stderr[-2000:]}")
+    lines = [ln for ln in proc.stdout.splitlines() if ln.startswith("ROW ")]
+    out = json.loads(lines[-1][4:])
+    row(f"engine_throughput/{app_name}-4chips-{devices}dev"
+        f"{'-proxy' if use_proxy else ''}",
+        out["wall_s_db"] * 1e6,
+        f"db sim win {out['db_sim_win'] * 100:.1f}% "
+        f"wall sync/db {out['speedup']:.2f}x "
+        f"mesh {out['mesh_devices']}dev")
+    return out
+
+
 # (app, oq_cap, chunk, use_proxy): the dispatch-bound small-OQ regimes the
 # chunked loop targets plus one compute-heavy point per app for contrast.
 CONFIGS_1024 = [
@@ -133,15 +234,27 @@ CONFIGS_4096 = [
     ("sssp", 4, 64, True),
     ("pagerank", 4, 64, True),
 ]
+# (app, tiles, scale, oq_cap, chunk, use_proxy) x DEVICE_COUNTS forced
+# CPU devices: the 4-chip mesh sweep (sync vs double-buffered exchange).
+DEVICE_CONFIGS = [
+    ("bfs", 256, 10, 8, 32, False),
+    ("sssp", 256, 10, 8, 32, True),
+]
+DEVICE_COUNTS = (1, 2, 4)
 
 
-def run(small: bool = True, out_path: str = DEFAULT_OUT) -> list:
+def run(small: bool = True, out_path: str = DEFAULT_OUT,
+        device_counts=DEVICE_COUNTS) -> list:
     rows = []
     for app_name, oq, chunk, px in CONFIGS_1024:
         rows.append(bench_config(app_name, 1024, 11, oq, chunk, px))
     if not small:
         for app_name, oq, chunk, px in CONFIGS_4096:
             rows.append(bench_config(app_name, 4096, 13, oq, chunk, px))
+    for app_name, tiles, scale, oq, chunk, px in DEVICE_CONFIGS:
+        for ndev in device_counts:
+            rows.append(bench_devices(app_name, tiles, scale, oq, chunk,
+                                      px, ndev))
     _write(rows, out_path)
     return rows
 
@@ -164,7 +277,10 @@ def _write(rows: list, out_path: str) -> None:
         description="device-resident (scan-chunked) run loop vs legacy "
                     "per-superstep dispatch; bit-identical counters/trace",
         rows=rows,
-        best_speedup=max((r["speedup"] for r in rows), default=0.0),
+        best_speedup=max((r["speedup"] for r in rows
+                          if "devices" not in r), default=0.0),
+        best_db_sim_win=max((r["db_sim_win"] for r in rows
+                             if "db_sim_win" in r), default=0.0),
         note="CPU-only container: speedup bounded by the XLA superstep's "
              "own synchronous execution time; on async-dispatch "
              "accelerator backends the eliminated per-step host sync is "
@@ -183,10 +299,17 @@ if __name__ == "__main__":
                     help="tiny CI config, asserts bit-identity")
     ap.add_argument("--full", action="store_true",
                     help="include the 4096-tile grids")
+    ap.add_argument("--devices", default=",".join(map(str, DEVICE_COUNTS)),
+                    help="comma-separated forced CPU device counts for "
+                         "the 4-chip mesh sweep (empty string skips it)")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="output JSON path")
+    ap.add_argument("--_worker", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
-    if args.smoke:
+    if args._worker is not None:
+        print("ROW " + json.dumps(_device_row(**json.loads(args._worker))))
+    elif args.smoke:
         smoke(args.out)
     else:
-        run(small=not args.full, out_path=args.out)
+        counts = tuple(int(c) for c in args.devices.split(",") if c)
+        run(small=not args.full, out_path=args.out, device_counts=counts)

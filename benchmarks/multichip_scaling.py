@@ -37,17 +37,20 @@ def _emit(kind, rows):
             f"reprice_ratio={m['reprice_ratio']:.12f}")
 
 
-def run(small: bool = True, chips=None):
+def run(small: bool = True, chips=None, double_buffer: bool = False):
     counts = tuple(chips) if chips else (
         (1, 4, 16, 64) if small else (1, 4, 16, 64, 256))
+    tag = "-db" if double_buffer else ""
     weak = harness.weak_scaling(chip_counts=counts,
                                 tiles_per_chip=16 if small else 64,
-                                base_scale=6 if small else 8)
-    _emit("weak", weak)
+                                base_scale=6 if small else 8,
+                                double_buffer=double_buffer)
+    _emit(f"weak{tag}", weak)
     strong = harness.strong_scaling(
         chip_counts=tuple(c for c in counts if c <= 64),
-        n_tiles=256 if small else 4096, scale=9 if small else 12)
-    _emit("strong", strong)
+        n_tiles=256 if small else 4096, scale=9 if small else 12,
+        double_buffer=double_buffer)
+    _emit(f"strong{tag}", strong)
     return dict(weak=weak, strong=strong)
 
 
@@ -57,6 +60,10 @@ if __name__ == "__main__":
     ap.add_argument("--chips", type=str, default=None,
                     help="comma-separated chip counts (e.g. 1,4,16,64,256)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="overlap each boundary exchange with the next "
+                         "superstep's compute (same counters, lower BSP "
+                         "time)")
     a = ap.parse_args()
     counts = tuple(int(c) for c in a.chips.split(",")) if a.chips else None
-    run(small=not a.full, chips=counts)
+    run(small=not a.full, chips=counts, double_buffer=a.double_buffer)

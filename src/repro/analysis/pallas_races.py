@@ -183,9 +183,11 @@ def check_fn(thunk, combine: str, where: str) -> List[Finding]:
 def kernel_suite() -> List[Tuple[str, object, str]]:
     """(name, thunk, combine) for every analyzable kernel in
     ``repro.kernels`` — collected from each module's ``analysis_cases``."""
-    from ..kernels import histogram_bin, ops, relax_min, segment_combine
+    from ..kernels import (deliver_fused, histogram_bin, ops, relax_min,
+                           segment_combine)
     cases = []
-    for mod in (segment_combine, relax_min, histogram_bin, ops):
+    for mod in (segment_combine, relax_min, histogram_bin, deliver_fused,
+                ops):
         cases.extend(mod.analysis_cases())
     return cases
 

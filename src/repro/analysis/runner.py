@@ -2,9 +2,11 @@
 
 One :func:`run_all` call produces the :class:`~.findings.Report` that
 ``scripts/lint_engine.py`` serializes and CI gates on.  The matrix is
-the six paper apps x {jnp, pallas} x {monolithic, 4-chip distributed}
-(the Pallas kernel backend is monolithic-only, so its distributed cell
-is skipped by construction — see ``distrib.driver``):
+the six paper apps x {jnp, pallas} x {monolithic, 4-chip distributed,
+4-chip double-buffered} (the Pallas kernel backend is monolithic-only,
+so its distributed cells are skipped by construction — see
+``distrib.driver``; the ``-db`` cell traces and runs the deferred
+boundary-exchange chunk path):
 
   * **jaxprlint** traces each cell's chunk-step function (the scanned
     superstep body, boundary exchange included for distributed cells) to
@@ -34,8 +36,11 @@ from . import deadcode, invariants, jaxprlint, pallas_races
 from .findings import Finding, Report
 
 APP_NAMES = ("bfs", "sssp", "wcc", "pagerank", "spmv", "histo")
-# (backend, chips): pallas cells are monolithic-only (driver constraint)
-MATRIX = (("jnp", 0), ("pallas", 0), ("jnp", 4))
+# (backend, chips, double_buffer): pallas cells are monolithic-only
+# (driver constraint); the double-buffer cell lints + runs the deferred
+# boundary-exchange chunk fn (distrib.driver._make_chunk's db path)
+MATRIX = (("jnp", 0, False), ("pallas", 0, False), ("jnp", 4, False),
+          ("jnp", 4, True))
 _SCALE = 7          # tiny RMAT: 128 vertices — a few supersteps per app
 _CHUNK_LEN = 4      # scan length for the traced chunk step
 
@@ -60,13 +65,14 @@ def _proxy_for(name, grid):
     return apps.table2_proxy(grid, name)
 
 
-def _cell_engine(name, backend, chips, g, grid, root, bins, hv):
+def _cell_engine(name, backend, chips, g, grid, root, bins, hv,
+                 double_buffer=False):
     """(engine, state, seeds) for one matrix cell (no run executed)."""
     from ..graph import apps
     return apps.engine_and_state(
         name, g, grid, proxy=_proxy_for(name, grid), root=root,
         histo_values=hv, bins=bins, backend=backend,
-        chips=chips, oq_cap=16)
+        chips=chips, oq_cap=16, double_buffer=double_buffer)
 
 
 def _chunk_args(eng, state):
@@ -75,10 +81,10 @@ def _chunk_args(eng, state):
 
 
 def _lint_cell(name, backend, chips, g, grid, root, bins, hv,
-               where: str) -> List[Finding]:
+               where: str, double_buffer=False) -> List[Finding]:
     """Static passes of one cell: trace the chunk step + int-stat check."""
     eng, state, _seeds = _cell_engine(name, backend, chips, g, grid, root,
-                                      bins, hv)
+                                      bins, hv, double_buffer)
     if chips:
         chunk_fn = eng._get_chunk_fn(_CHUNK_LEN)
         raw = eng._raw_vmap_step()
@@ -112,11 +118,11 @@ def _drift_cell(name, g, grid, root, bins, hv, where: str) -> List[Finding]:
 
 
 def _run_cell(name, backend, chips, g, grid, root, bins, hv,
-              where: str) -> List[Finding]:
+              where: str, double_buffer=False) -> List[Finding]:
     """Execute one cell and check the measured run's invariants."""
     from ..graph import apps
     proxy = _proxy_for(name, grid)
-    kw = dict(backend=backend, oq_cap=16)
+    kw = dict(backend=backend, oq_cap=16, double_buffer=double_buffer)
     if chips:
         kw["chips"] = chips
     if name == "bfs":
@@ -164,18 +170,20 @@ def run_all(repo_root, app_names: Optional[Sequence[str]] = None,
     g, grid, root, bins, hv = _inputs()
 
     for name in apps_sel:
-        for backend, chips in MATRIX:
+        for backend, chips, db in MATRIX:
             part = f"{chips}chips" if chips else "mono"
+            if db:
+                part += "-db"
             where = f"{name}/{backend}/{part}"
             report.matrix.append(where)
             if "jaxprlint" in passes_sel:
                 say(f"jaxprlint {where}")
                 report.extend(_lint_cell(name, backend, chips, g, grid,
-                                         root, bins, hv, where))
+                                         root, bins, hv, where, db))
             if "invariants" in passes_sel:
                 say(f"invariants {where}")
                 report.extend(_run_cell(name, backend, chips, g, grid,
-                                        root, bins, hv, where))
+                                        root, bins, hv, where, db))
         if "jaxprlint" in passes_sel:
             say(f"backend-drift {name}")
             report.extend(_drift_cell(name, g, grid, root, bins, hv,

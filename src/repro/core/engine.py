@@ -154,6 +154,17 @@ class EngineConfig:
     # Results are bit-identical to telemetry=False: the vectors are
     # extra *outputs*, never inputs, of the superstep.
     telemetry: bool = False
+    # Double-buffered boundary exchange (distributed runtime): superstep
+    # k's board-level mailbox-value delivery is deferred into a second
+    # mailbox bank and folded in at the start of superstep k+1, so the
+    # collective exchange overlaps the next superstep's chip-local
+    # compute.  Mailbox combining is commutative and nothing touches the
+    # mailbox between the two fold points, so counters/trace/values are
+    # bit-identical to the synchronous exchange — only the BSP time
+    # accumulation changes (exchange cycles hidden under compute; see
+    # costmodel._trace_time_s_parsed).  Monolithic runs have no board
+    # exchange: the flag only tags their trace, time is unchanged.
+    double_buffer: bool = False
 
     @property
     def iq_cap(self) -> int:
@@ -883,7 +894,7 @@ class DataLocalEngine:
         maxs = max_supersteps or cfg.max_supersteps
         K = cfg.run_chunk if chunk is None else int(chunk)
         counters = TrafficCounters()
-        trace = SuperstepTrace()
+        trace = SuperstepTrace(double_buffer=cfg.double_buffer)
         cycles = 0.0
         steps = 0
         pkg = cfg.pkg
@@ -1407,20 +1418,21 @@ def _deliver(mail_val, mail_flag, dst, val, mask, owner, T, Nd, is_min,
 
 def _deliver_pallas(mail_val, mail_flag, dst, val, mask, owner, T, Nd,
                     is_min):
-    """Pallas rendering of the owner delivery: the scatter-combine is a
-    dense segment reduction over mailbox indices (``segment_combine``),
-    arrivals-per-index and per-tile endpoint contention are histogram
-    kernels, and folding the combined arrivals into the mailbox is the
-    fused relax kernel (min: combine-if-improving == scatter-min; add:
-    accumulate — equal to the jnp oracle up to f32 re-association)."""
+    """Pallas rendering of the owner delivery, fused into ONE launch
+    (``kernels.deliver_fused``): the kernel reads the record stream once
+    and produces both the relaxed mailbox (min: guarded running minimum
+    == scatter-min, bitwise; add: accumulate — equal to the jnp oracle
+    up to f32 re-association) and the per-index arrival counts.  Flags
+    and per-tile endpoint contention derive from the counts exactly like
+    the jnp path (counts are integers, mailbox indices of one tile are
+    contiguous) — this replaces the former four-launch chain
+    (segment_combine + 2x histogram + relax)."""
     from ..kernels import ops as kops
     comb = "min" if is_min else "add"
     seg = jnp.where(mask, dst, -1)                 # negative = padding
-    incoming = kops.segment_combine(seg, val, Nd, combine=comb)
-    present = kops.histogram(seg, Nd) > 0
-    mv, _ = kops.relax(mail_val, incoming, present, combine=comb)
-    mf = mail_flag | present
-    per_tile = kops.histogram(jnp.where(mask, owner, -1), T)
+    mv, cnt = kops.deliver_fused(seg, val, mail_val, combine=comb)
+    mf = mail_flag | (cnt > 0)
+    per_tile = jnp.sum(cnt.reshape(T, Nd // T), axis=1)
     return mv, mf, per_tile
 
 

@@ -99,6 +99,12 @@ class SuperstepTrace:
     board leg per axis under an arbitrary :class:`PackageConfig` while
     refusing to re-price the trace at a *different* chip count (the
     off-chip traffic is a property of the measured partition).
+
+    ``double_buffer`` records whether the run overlapped each
+    superstep's board exchange with the next superstep's compute
+    (``EngineConfig.double_buffer``): re-pricing replays the matching
+    overlap-aware BSP accumulation, so the priced time reproduces the
+    run's own (the reprice contract holds in both modes).
     """
 
     compute_ops: List[float] = dataclasses.field(default_factory=list)
@@ -113,6 +119,7 @@ class SuperstepTrace:
     board_links: int = 1
     chips_y: int = 1
     chips_x: int = 1
+    double_buffer: bool = False
 
     _VECTOR_FIELDS = ("compute_ops", "intra_bits", "die_bits", "pkg_bits",
                       "endpoint_bits", "off_chip_bits", "off_chip_msgs",
@@ -180,6 +187,7 @@ class SuperstepTrace:
         self.board_links = max(self.board_links, other.board_links)
         self.chips_y = max(self.chips_y, other.chips_y)
         self.chips_x = max(self.chips_x, other.chips_x)
+        self.double_buffer = self.double_buffer or other.double_buffer
         return self
 
     def to_dict(self) -> Dict[str, object]:
@@ -188,13 +196,15 @@ class SuperstepTrace:
         d["board_links"] = self.board_links
         d["chips_y"] = self.chips_y
         d["chips_x"] = self.chips_x
+        d["double_buffer"] = self.double_buffer
         return d
 
     @classmethod
     def from_dict(cls, d) -> "SuperstepTrace":
         t = cls(board_links=int(d.get("board_links", 1)),
                 chips_y=int(d.get("chips_y", 1)),
-                chips_x=int(d.get("chips_x", 1)))
+                chips_x=int(d.get("chips_x", 1)),
+                double_buffer=bool(d.get("double_buffer", False)))
         for f in cls._VECTOR_FIELDS:
             getattr(t, f).extend(float(v) for v in d.get(f, ()))
         return t

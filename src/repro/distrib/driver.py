@@ -16,10 +16,22 @@ through each package's IO die.  This module is that execution layer:
     cascade root sits at the chip boundary, and anything bound further
     out goes straight to its owner over the off-chip leg.
   * ``exchange`` delivers the boundary mailbox records between
-    supersteps.  Under ``shard_map`` over a ``chips`` mesh axis the
-    exchange is a real collective (``collectives.gather_records``); with
-    a single device the runtime falls back to a vmapped emulation whose
-    exchange is one combined scatter — numerically the same combine.
+    supersteps.  One step function, written against an
+    :class:`~repro.distrib.mesh.ExecMesh`, serves every placement: on a
+    real multi-device mesh the exchange is a collective
+    (``gather_records`` under ``shard_map``), on a single device the
+    mesh helpers degenerate to the identity and the same code is the
+    vmapped emulation whose exchange is one combined scatter —
+    numerically the same combine, bitwise the same scatter indices.
+  * With ``EngineConfig.double_buffer`` the chunked scan carries a
+    second mailbox bank: superstep *k* merges flags (the pending
+    signal) and stats eagerly but defers the mailbox-*value* scatter to
+    the start of superstep *k+1*, so the collective exchange overlaps
+    the next superstep's chip-local compute.  Mailbox combining is
+    commutative and nothing touches the mailbox between the two fold
+    points, so values/counters/trace are bit-identical to the
+    synchronous exchange; only the BSP time accumulation changes
+    (board + IO-die cycles hidden under the next superstep's compute).
   * Off-chip records are charged a new network leg
     (``netstats.charge_off_chip``): OFF_PKG_PJ_BIT energy per board hop
     and IO-die Rx/Tx latency plus board-link serialization in the BSP
@@ -47,8 +59,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import collectives
-from ..core.compat import shard_map
 from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
                               _off_pkg_bits_per_cycle,
                               board_link_provisioning, link_provisioning)
@@ -62,6 +72,7 @@ from ..core.proxy import chip_local_proxy
 from ..core.tilegrid import ChipPartition, TileGrid, partition_grid
 from ..obs.metrics import default_registry
 from ..obs.timeline import RunMeta
+from .mesh import ExecMesh
 
 
 def partition(grid: TileGrid, num_chips: int) -> ChipPartition:
@@ -110,11 +121,48 @@ def _combine_into_mail(mail_val, mail_flag, flat, mask, val, seg, n_seg,
     return mv, mf, recv
 
 
+def _merge_flags(mail_flag, flat, mask, seg, n_seg):
+    """The *eager* half of the double-buffered exchange: mailbox flags
+    (the pending signal) and per-receiving-tile arrival counts merge in
+    superstep k itself — only the mailbox-value scatter is deferred to
+    the bank.  Identical flag/recv math to :func:`_combine_into_mail`."""
+    n_flat = mail_flag.shape[0]
+    safe = jnp.where(mask, flat, n_flat)
+    mf = mail_flag.at[safe].max(mask, mode="drop")
+    recv = jax.ops.segment_sum(mask.astype(jnp.float32),
+                               jnp.where(mask, seg, n_seg),
+                               num_segments=n_seg + 1)[:n_seg]
+    return mf, recv
+
+
+def _fold_bank(state, is_min):
+    """Apply the deferred mailbox-value scatter of the double-buffered
+    exchange (bank keys ``_db_idx`` / ``_db_val`` / ``_db_mask``) and
+    drop the bank from the state dict.
+
+    This is the *same* scatter :func:`_combine_into_mail` would have run
+    at the end of the previous superstep, on the *same* mailbox (nothing
+    writes ``mail_val`` between the two fold points), so the result is
+    bitwise identical for min AND add — deferral only reorders the
+    program, not the arithmetic."""
+    idx, val, mask = state["_db_idx"], state["_db_val"], state["_db_mask"]
+    state = {k: v for k, v in state.items() if not k.startswith("_db_")}
+    mv = state["mail_val"].reshape(-1)
+    safe = jnp.where(mask, idx, mv.shape[0])
+    if is_min:
+        mv = mv.at[safe].min(jnp.where(mask, val, INF), mode="drop")
+    else:
+        mv = mv.at[safe].add(jnp.where(mask, val, 0.0), mode="drop")
+    return dict(state, mail_val=mv.reshape(state["mail_val"].shape))
+
+
 def _pending(state):
     """Live work in a (possibly stacked) engine state — mailbox flags
     plus unfinished edge cursors.  Must be evaluated *after* the
     boundary exchange: a record that crossed chips this superstep is
-    pending work even when every chip's pre-exchange queues are empty."""
+    pending work even when every chip's pre-exchange queues are empty.
+    (The double-buffered exchange merges flags eagerly for exactly this
+    reason — a deferred mailbox *value* is never a pending signal.)"""
     return (jnp.sum(state["mail_flag"])
             + jnp.sum(state["cur_hi"] > state["cur_lo"]))
 
@@ -146,41 +194,50 @@ def exchange(part: ChipPartition, chunk_dst: int, state, off, is_min: bool):
     return state, recv.reshape(C, Tl)
 
 
-def _aggregate(stats, recv, telemetry: bool = False):
+def _aggregate(stats, recv, telemetry: bool = False, mesh=None):
     """Reduce per-chip superstep stats to grid-global ones: traffic sums,
     bottleneck (per-tile) maxima; exchange receive contention (``recv``,
     the ``(chips, tiles_local)`` arrival counts, or None on a 1x1
     partition) folds into the delivery max.
 
+    With an :class:`ExecMesh` the local reductions finish as mesh
+    collectives (``psum`` / ``pmax``; identity on a single device, so
+    ``mesh=None`` and a 1-device mesh are the same arithmetic).
+
     Under ``telemetry`` the vmapped per-chip/per-tile load vectors are
     additionally reduced to per-chip ``pc_*`` vectors (shape
-    ``(chips,)``) that ride the scan's stacked-dict channel into
+    ``(chips,)``, all-gathered so the stacked stats channel stays
+    replicated) that ride the scan's stacked-dict channel into
     ``obs.imbalance``; the engine's per-tile ``tv_*`` vectors are
     consumed here (a chip's intra-tile split stays chip-local)."""
+    ident = lambda x: x                       # noqa: E731
+    psum = mesh.psum if mesh is not None else ident
+    pmax = mesh.pmax if mesh is not None else ident
+    gather = mesh.all_gather if mesh is not None else ident
     agg = {}
     vecs = {}
     for k, v in stats.items():
         if k.startswith("tv_"):
-            vecs[k] = v                       # (chips, tiles_local)
+            vecs[k] = v                       # (chips_local, tiles_local)
             continue
         if k in ("compute_per_tile_max", "delivered_max_per_tile"):
-            agg[k] = jnp.max(v)
+            agg[k] = pmax(jnp.max(v))
         else:
-            agg[k] = jnp.sum(v)
-    recv_max = jnp.float32(0.0) if recv is None else jnp.max(recv)
+            agg[k] = psum(jnp.sum(v))
+    recv_max = jnp.float32(0.0) if recv is None else pmax(jnp.max(recv))
     agg["delivered_max_per_tile"] = jnp.maximum(
         agg["delivered_max_per_tile"], recv_max)
     if telemetry:
-        agg["pc_edges"] = jnp.sum(vecs["tv_edges"], axis=-1)
-        agg["pc_records"] = jnp.sum(vecs["tv_records"], axis=-1)
-        agg["pc_delivered"] = jnp.sum(vecs["tv_delivered"], axis=-1)
-        agg["pc_delivmax"] = jnp.max(vecs["tv_delivered"], axis=-1)
-        agg["pc_compute"] = stats["compute_per_tile_max"]
-        agg["pc_owner"] = stats["owner_msgs"]
+        agg["pc_edges"] = gather(jnp.sum(vecs["tv_edges"], axis=-1))
+        agg["pc_records"] = gather(jnp.sum(vecs["tv_records"], axis=-1))
+        agg["pc_delivered"] = gather(jnp.sum(vecs["tv_delivered"], axis=-1))
+        agg["pc_delivmax"] = gather(jnp.max(vecs["tv_delivered"], axis=-1))
+        agg["pc_compute"] = gather(stats["compute_per_tile_max"])
+        agg["pc_owner"] = gather(stats["owner_msgs"])
         if "off_chip_msgs" in stats:
-            agg["pc_offchip"] = stats["off_chip_msgs"]
+            agg["pc_offchip"] = gather(stats["off_chip_msgs"])
         agg["pc_recv"] = (jnp.zeros_like(agg["pc_edges"]) if recv is None
-                          else jnp.sum(recv, axis=-1))
+                          else gather(jnp.sum(recv, axis=-1)))
     return agg
 
 
@@ -231,19 +288,18 @@ class DistributedEngine:
         self._row_lo_s = self._shard(np.asarray(self.kernel.row_lo), self.Cs)
         self._row_hi_s = self._shard(np.asarray(self.kernel.row_hi), self.Cs)
         self._chip_ids = jnp.arange(self.C, dtype=jnp.int32)
-        if backend == "auto":
-            ndev = jax.device_count()
-            backend = ("shard_map" if ndev > 1 and self.C % ndev == 0
-                       else "vmap")
-        if self.C == 1:
-            backend = "vmap"    # 1x1 partition: no boundary to exchange
-        if backend == "shard_map" and self.C % jax.device_count():
-            raise ValueError(
-                f"{self.C} chips do not divide {jax.device_count()} devices")
-        self.backend = backend
+        # device placement: any ndev dividing C works; when the host's
+        # device count doesn't divide, ExecMesh falls back to the largest
+        # dividing subset with a warning (no hard failure)
+        self.mesh = ExecMesh.build(self.C, backend=backend)
+        self.backend = self.mesh.backend_name
+        # execute the deferred-bank exchange only where there IS an
+        # exchange; the cost model's double_buffer flag stays cfg-driven
+        self._db_exec = bool(cfg.double_buffer) and self.C > 1
         self._step = None
         self._chunk_fns = {}
         self._stat_names = None        # packed-stat layout, cached
+        self._off_len = None           # per-chip off-record buffer length
 
     # ----------------------------------------------------------- data moves
     def _shard(self, a_global: np.ndarray, chunk: int) -> jnp.ndarray:
@@ -298,18 +354,26 @@ class DistributedEngine:
 
     # ---------------------------------------------------------------- steps
     def _get_step(self):
+        """Legacy per-superstep dispatch (always the synchronous
+        exchange: one host sync per superstep hides nothing anyway)."""
         if self._step is None:
-            self._step = (self._make_vmap_step() if self.backend == "vmap"
-                          else self._make_shard_step())
+            mesh = self.mesh
+            step = self._raw_step(mesh)
+
+            def fn(row_lo, row_hi, state, flush):
+                return step(row_lo, row_hi, state, mesh.chip_ids(), flush)
+
+            jstep = mesh.shard_jit(fn, in_specs=(True, True, True, False),
+                                   out_specs=(True, False))
+            self._step = lambda state, flush: jstep(
+                self._row_lo_s, self._row_hi_s, state, flush)
         return self._step
 
     def _get_chunk_fn(self, length: int):
-        """Chunked (scan-of-supersteps) dispatch for this backend; one
+        """Chunked (scan-of-supersteps) dispatch on the mesh; one
         compiled function per chunk length, cached."""
         if length not in self._chunk_fns:
-            make = (self._make_vmap_chunk if self.backend == "vmap"
-                    else self._make_shard_chunk)
-            self._chunk_fns[length] = make(length)
+            self._chunk_fns[length] = self._make_chunk(length)
         return self._chunk_fns[length]
 
     @property
@@ -317,162 +381,150 @@ class DistributedEngine:
         return self.cfg.proxy is not None and self.cfg.proxy.write_back
 
     def _raw_vmap_step(self):
-        """One whole distributed superstep (vmapped chips + emulated
-        exchange + stat aggregation), unjitted — the body both the
-        legacy per-step dispatch and the scanned chunk share."""
-        kernel, part, Cd, is_min = (self.kernel, self.part, self.Cd,
-                                    self._is_min)
-        multi = self.C > 1
+        """The unified step on a single-device (identity) mesh — what
+        the analysis passes abstract-trace and the stat-layout probe
+        uses; bitwise the chips-axis emulation regardless of the mesh
+        the engine itself runs on."""
+        return self._raw_step(ExecMesh(self.C, 1))
+
+    def _raw_step(self, mesh: ExecMesh, double_buffer: bool = False):
+        """One whole distributed superstep against ``mesh`` (vmapped
+        chips per device + boundary exchange + stat aggregation),
+        unjitted — the one body every dispatch shares.  On a sharded
+        mesh it must execute inside the mesh's ``chips`` axis; on a
+        single-device mesh every collective is the identity and the
+        function is plain-traceable.
+
+        ``double_buffer`` defers the exchanged mailbox-*value* scatter
+        into a ``_db_*`` bank in the carried state (folded in at the
+        start of the next superstep — see :func:`_fold_bank`); flags,
+        arrival counts and all stats still merge eagerly, so pending
+        and the recorded trace are identical to the synchronous path."""
+        kernel, part, Cd, Tl = self.kernel, self.part, self.Cd, self.Tl
+        is_min = self._is_min
+        Nld = kernel.Nd
+        per = mesh.per
         telemetry = self.cfg.telemetry
+        multi = self.C > 1
 
         def step(row_lo, row_hi, state, chip_ids, flush):
+            if double_buffer:
+                # previous superstep's deferred exchange lands first —
+                # the same scatter, one superstep later (the mailbox is
+                # untouched in between), overlapping this compute
+                state = _fold_bank(state, is_min)
             new_state, stats, off = jax.vmap(
                 kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
                 row_lo, row_hi, state, chip_ids, flush)
             if multi:
-                new_state, recv = exchange(part, Cd, new_state, off,
-                                           is_min)
+                # board-level exchange: every chip gathers the full
+                # off-chip record stream and keeps what it owns
+                # (collective all-to-all without per-destination packing,
+                # so hub skew cannot overflow a send buffer; identity
+                # gather on one device — the stacked stream is already
+                # global and the scatter indices match the emulation)
+                g_dst, g_val, g_mask = mesh.gather_records(
+                    (off["dst"].reshape(-1), off["val"].reshape(-1),
+                     off["mask"].reshape(-1)))
+                ochip, ltile, off_idx = _owner_slots(part, Cd, g_dst)
+                mine = g_mask & (ochip // per == mesh.axis_index())
+                lane = ochip % per
+                flat = lane * Nld + off_idx
+                seg = lane * Tl + ltile
+                if double_buffer:
+                    mf, recv = _merge_flags(
+                        new_state["mail_flag"].reshape(-1), flat, mine,
+                        seg, per * Tl)
+                    new_state = dict(new_state,
+                                     mail_flag=mf.reshape(per, Nld),
+                                     _db_idx=flat, _db_val=g_val,
+                                     _db_mask=mine)
+                else:
+                    mv, mf, recv = _combine_into_mail(
+                        new_state["mail_val"].reshape(-1),
+                        new_state["mail_flag"].reshape(-1),
+                        flat, mine, g_val, seg, per * Tl, is_min)
+                    new_state = dict(new_state,
+                                     mail_val=mv.reshape(per, Nld),
+                                     mail_flag=mf.reshape(per, Nld))
+                recv = recv.reshape(per, Tl)
             else:                       # 1x1 partition: nothing can leave
                 recv = None
-            agg = _aggregate(stats, recv, telemetry)
-            # pending must see the post-exchange mailboxes: a record that
-            # crossed chips this superstep is the next superstep's work
-            agg["pending"] = _pending(new_state)
+            agg = _aggregate(stats, recv, telemetry, mesh)
+            # pending must see the post-exchange mailbox flags: a record
+            # that crossed chips this superstep is the next superstep's
+            # work (flags merge eagerly even when double-buffered)
+            agg["pending"] = mesh.psum(_pending(new_state))
             return new_state, agg
 
         return step
 
-    def _make_vmap_step(self):
-        jstep = jax.jit(self._raw_vmap_step())
-        return lambda state, flush: jstep(self._row_lo_s, self._row_hi_s,
-                                          state, self._chip_ids, flush)
+    def _off_record_len(self) -> int:
+        """Per-chip off-chip record-buffer length (static: OQ emissions
+        plus proxy flush legs), via abstract eval of the superstep —
+        sizes the double-buffer bank."""
+        if self._off_len is None:
+            k = self.kernel
+            st = {
+                "values": jax.ShapeDtypeStruct((self.C, k.Nd), jnp.float32),
+                "mail_val": jax.ShapeDtypeStruct((self.C, k.Nd),
+                                                 jnp.float32),
+                "mail_flag": jax.ShapeDtypeStruct((self.C, k.Nd), jnp.bool_),
+                "cur_lo": jax.ShapeDtypeStruct((self.C, k.Ns), jnp.int32),
+                "cur_hi": jax.ShapeDtypeStruct((self.C, k.Ns), jnp.int32),
+                "cur_val": jax.ShapeDtypeStruct((self.C, k.Ns), jnp.float32),
+            }
+            if self.cfg.proxy is not None:
+                S = self.cfg.proxy.slots
+                st["p_tag"] = jax.ShapeDtypeStruct((self.C, self.Tl, S),
+                                                   jnp.int32)
+                st["p_val"] = jax.ShapeDtypeStruct((self.C, self.Tl, S),
+                                                   jnp.float32)
+            off = jax.eval_shape(
+                lambda s: jax.vmap(k.chip_superstep,
+                                   in_axes=(0, 0, 0, 0, None))(
+                    self._row_lo_s, self._row_hi_s, s, self._chip_ids,
+                    jnp.zeros((), jnp.bool_))[2],
+                st)
+            self._off_len = int(off["dst"].shape[1])
+        return self._off_len
 
-    def _make_vmap_chunk(self, length: int):
-        step = self._raw_vmap_step()
+    def _make_chunk(self, length: int):
+        mesh = self.mesh
+        db = self._db_exec
+        step = self._raw_step(mesh, double_buffer=db)
         write_back = self._write_back
-
-        def chunk(row_lo, row_hi, state, chip_ids, flush, done, left):
-            return _scan_steps(
-                lambda st, fl: step(row_lo, row_hi, st, chip_ids, fl),
-                state, flush, done, left, length, write_back)
-
-        jchunk = jax.jit(chunk)
-        return lambda state, flush, done, left: jchunk(
-            self._row_lo_s, self._row_hi_s, state, self._chip_ids, flush,
-            done, left)
-
-    def _raw_shard_step(self, per: int):
-        """One whole distributed superstep under ``shard_map`` (vmapped
-        chips per device + collective exchange + psum/pmax aggregation);
-        must execute inside a ``chips`` mesh axis.  Shared by the legacy
-        and chunked shard_map dispatches."""
-        kernel, part, Cd, Tl = self.kernel, self.part, self.Cd, self.Tl
         is_min = self._is_min
-        Nld = kernel.Nd
-        telemetry = self.cfg.telemetry
-
-        def step(row_lo, row_hi, state, chip_ids, flush):
-            new_state, stats, off = jax.vmap(
-                kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
-                row_lo, row_hi, state, chip_ids, flush)
-            # board-level exchange: every chip gathers the full off-chip
-            # record stream and keeps what it owns (collective all-to-all
-            # without per-destination packing, so hub skew cannot
-            # overflow a send buffer)
-            g_dst, g_val, g_mask = collectives.gather_records(
-                (off["dst"].reshape(-1), off["val"].reshape(-1),
-                 off["mask"].reshape(-1)), "chips")
-            ochip, ltile, off_idx = _owner_slots(part, Cd, g_dst)
-            mine = g_mask & (ochip // per == jax.lax.axis_index("chips"))
-            lane = ochip % per
-            mv, mf, recv = _combine_into_mail(
-                new_state["mail_val"].reshape(-1),
-                new_state["mail_flag"].reshape(-1),
-                lane * Nld + off_idx, mine, g_val, lane * Tl + ltile,
-                per * Tl, is_min)
-            recv = recv.reshape(per, Tl)
-            new_state = dict(new_state,
-                             mail_val=mv.reshape(per, Nld),
-                             mail_flag=mf.reshape(per, Nld))
-            agg = {}
-            vecs = {}
-            for k2, v in stats.items():
-                if k2.startswith("tv_"):
-                    vecs[k2] = v              # (per, tiles_local)
-                    continue
-                if k2 in ("compute_per_tile_max", "delivered_max_per_tile"):
-                    agg[k2] = jax.lax.pmax(jnp.max(v), "chips")
-                else:
-                    agg[k2] = jax.lax.psum(jnp.sum(v), "chips")
-            agg["delivered_max_per_tile"] = jnp.maximum(
-                agg["delivered_max_per_tile"],
-                jax.lax.pmax(jnp.max(recv), "chips"))
-            if telemetry:
-                # per-chip pc_* load vectors, replicated across devices so
-                # the stacked stats channel stays out_specs=P()
-                def gather(x):
-                    return jax.lax.all_gather(x, "chips", tiled=True)
-
-                agg["pc_edges"] = gather(jnp.sum(vecs["tv_edges"], axis=-1))
-                agg["pc_records"] = gather(
-                    jnp.sum(vecs["tv_records"], axis=-1))
-                agg["pc_delivered"] = gather(
-                    jnp.sum(vecs["tv_delivered"], axis=-1))
-                agg["pc_delivmax"] = gather(
-                    jnp.max(vecs["tv_delivered"], axis=-1))
-                agg["pc_compute"] = gather(stats["compute_per_tile_max"])
-                agg["pc_owner"] = gather(stats["owner_msgs"])
-                if "off_chip_msgs" in stats:
-                    agg["pc_offchip"] = gather(stats["off_chip_msgs"])
-                agg["pc_recv"] = gather(jnp.sum(recv, axis=-1))
-            # post-exchange pending, globally (see _raw_vmap_step)
-            agg["pending"] = jax.lax.psum(_pending(new_state), "chips")
-            return new_state, agg
-
-        return step
-
-    def _make_shard_step(self):
-        from jax.sharding import PartitionSpec as P
-        ndev = jax.device_count()
-        per = self.C // ndev
-        mesh = jax.make_mesh((ndev,), ("chips",))
-        step = self._raw_shard_step(per)
-
-        def fn(row_lo, row_hi, state, flush):
-            cid0 = jax.lax.axis_index("chips") * per
-            chip_ids = cid0 + jnp.arange(per, dtype=jnp.int32)
-            return step(row_lo, row_hi, state, chip_ids, flush)
-
-        jstep = jax.jit(shard_map(
-            fn, mesh=mesh, in_specs=(P("chips"), P("chips"), P("chips"), P()),
-            out_specs=(P("chips"), P()), check_vma=False))
-        return lambda state, flush: jstep(self._row_lo_s, self._row_hi_s,
-                                          state, flush)
-
-    def _make_shard_chunk(self, length: int):
-        from jax.sharding import PartitionSpec as P
-        ndev = jax.device_count()
-        per = self.C // ndev
-        mesh = jax.make_mesh((ndev,), ("chips",))
-        step = self._raw_shard_step(per)
-        write_back = self._write_back
+        # the bank holds the gathered global record stream (same shape on
+        # every device at any ndev)
+        bank_len = self.C * self._off_record_len() if db else 0
 
         def fn(row_lo, row_hi, state, flush, done, left):
-            # the scan lives *inside* the shard_map region: state stays
+            # the scan lives *inside* the sharded region: state stays
             # device-sharded across the whole chunk and each iteration's
             # collective exchange/psum executes on device — the host only
             # sees the per-chunk carry and the stacked (replicated) stats
-            cid0 = jax.lax.axis_index("chips") * per
-            chip_ids = cid0 + jnp.arange(per, dtype=jnp.int32)
-            return _scan_steps(
+            chip_ids = mesh.chip_ids()
+            if db:
+                # empty bank entering the chunk (the previous chunk
+                # drained its own); the bank lives only inside this
+                # function, so specs/carry crossing the host are unchanged
+                state = dict(state,
+                             _db_idx=jnp.zeros((bank_len,), jnp.int32),
+                             _db_val=jnp.zeros((bank_len,), jnp.float32),
+                             _db_mask=jnp.zeros((bank_len,), bool))
+            carry, out = _scan_steps(
                 lambda st, fl: step(row_lo, row_hi, st, chip_ids, fl),
                 state, flush, done, left, length, write_back)
+            if db:
+                st, fl2, dn, lf = carry
+                carry = (_fold_bank(st, is_min), fl2, dn, lf)
+            return carry, out
 
-        jchunk = jax.jit(shard_map(
-            fn, mesh=mesh,
-            in_specs=(P("chips"), P("chips"), P("chips"), P(), P(), P()),
-            out_specs=((P("chips"), P(), P(), P()), P()), check_vma=False))
-        return lambda state, flush, done, left: jchunk(
+        jfn = mesh.shard_jit(
+            fn, in_specs=(True, True, True, False, False, False),
+            out_specs=((True, False, False, False), False))
+        return lambda state, flush, done, left: jfn(
             self._row_lo_s, self._row_hi_s, state, flush, done, left)
 
     # ------------------------------------------------------------------ run
@@ -502,7 +554,8 @@ class DistributedEngine:
                 app=self.app.name, grid_ny=cfg.grid.ny, grid_nx=cfg.grid.nx,
                 n_chips=self.C, chips_y=part.chips_y, chips_x=part.chips_x,
                 chunk=K, backend=self.backend, sanitize=cfg.sanitize,
-                telemetry=cfg.telemetry, pkg=cfg.pkg, grid=cfg.grid))
+                telemetry=cfg.telemetry, pkg=cfg.pkg, grid=cfg.grid,
+                n_devices=self.mesh.ndev))
         counters = TrafficCounters()
         cycles = 0.0
         steps = 0
@@ -513,15 +566,24 @@ class DistributedEngine:
         # per-axis knobs) — shared formula with costmodel's re-pricing so
         # pricing the trace under this config reproduces this run's time
         n_board_links = board_link_provisioning(pkg, cy, cx)
+        db = bool(cfg.double_buffer)
         trace = SuperstepTrace(board_links=n_board_links,
-                               chips_y=cy, chips_x=cx)
+                               chips_y=cy, chips_x=cx, double_buffer=db)
         io_lat_cycles = 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ   # Tx + Rx IO die
+        fill = links["diameter"] * 0.5                         # pipeline fill
+        # double-buffer accounting: the exchange leg (board serialization
+        # + IO-die latency) of the previous charged superstep, still in
+        # flight while this superstep computes; the final one drains in
+        # the open (tail charge after the loop).  Stays 0.0 synchronous.
+        prev_exch = [0.0]
 
         def account(stats):
             """Legacy-loop per-superstep accounting.  The chunked branch
             uses the vectorized twin (add_chunk_cycles below with
-            chunk_counters/append_chunk in _drain_chunked) — edit BOTH
-            in lockstep; tests/test_chunked.py is the bit-identity gate."""
+            chunk_counters/append_chunk in _drain_chunked) AND
+            costmodel._trace_time_s_parsed replays both rules from the
+            trace — edit ALL in lockstep; tests/test_chunked.py and the
+            reprice contract are the bit-identity gates."""
             nonlocal cycles
             _sanitize_gate(cfg, self.app.name,
                            float(stats.get("sanity_violations", 0.0)))
@@ -530,11 +592,22 @@ class DistributedEngine:
             # ---- BSP time model: monolithic levels + the board-level leg
             t_board = float(stats.get("off_chip_hop_msgs", 0.0)) * MSG_BITS / (
                 n_board_links * _off_pkg_bits_per_cycle(pkg))
-            step_cycles = max(superstep_cycles(stats, pkg, links), t_board)
-            if step_cycles > 0 or stats["pending"] > 0:
-                cycles += step_cycles + links["diameter"] * 0.5  # pipeline fill
-                if stats.get("off_chip_msgs", 0.0) > 0:
-                    cycles += io_lat_cycles
+            core = superstep_cycles(stats, pkg, links)
+            if db:
+                # overlap-aware: this superstep pays max(its chip-local
+                # work, the previous exchange); its own exchange hides
+                # under the next superstep
+                if core > 0 or t_board > 0 or stats["pending"] > 0:
+                    cycles += max(core, prev_exch[0]) + fill
+                    prev_exch[0] = t_board + (
+                        io_lat_cycles
+                        if stats.get("off_chip_msgs", 0.0) > 0 else 0.0)
+            else:
+                step_cycles = max(core, t_board)
+                if step_cycles > 0 or stats["pending"] > 0:
+                    cycles += step_cycles + fill
+                    if stats.get("off_chip_msgs", 0.0) > 0:
+                        cycles += io_lat_cycles
 
         if K <= 0:
             state, steps = self._run_legacy(state, maxs, progress_every,
@@ -558,6 +631,8 @@ class DistributedEngine:
                 # monolithic BSP terms maxed with the board leg, plus
                 # IO-die latency on supersteps with off-chip records --
                 # accumulated in execution order like the legacy loop
+                # (double-buffered: each superstep pays max(chip-local
+                # work, previous exchange), its exchange carries over)
                 if cfg.sanitize:
                     bad = stacked.get("sanity_violations")
                     if bad is not None:
@@ -570,10 +645,18 @@ class DistributedEngine:
                             if a is not None else np.zeros(n_act))
 
                 t_board = offvec("off_chip_hop_msgs") * MSG_BITS / board_div
-                sc = np.maximum(
-                    chunk_cycles(stacked, n_act, pkg, links), t_board)
+                core = chunk_cycles(stacked, n_act, pkg, links)
                 pend = np.asarray(stacked["pending"][:n_act])
                 offm = offvec("off_chip_msgs")
+                if db:
+                    for c, b, p, o in zip(core.tolist(), t_board.tolist(),
+                                          pend.tolist(), offm.tolist()):
+                        if c > 0 or b > 0 or p > 0:
+                            cycles += max(c, prev_exch[0]) + fill
+                            prev_exch[0] = b + (io_lat_cycles if o > 0
+                                                else 0.0)
+                    return cycles
+                sc = np.maximum(core, t_board)
                 for s, p, o in zip(sc.tolist(), pend.tolist(),
                                    offm.tolist()):
                     if s > 0 or p > 0:
@@ -586,6 +669,7 @@ class DistributedEngine:
                 chunk_fn, state, maxs, self._stat_names, counters, trace,
                 cfg.element_bits, progress, add_chunk_cycles, cycles,
                 observer=observer)
+        cycles += prev_exch[0]   # final in-flight exchange drains in the open
         counters.supersteps = steps
         time_s = cycles / (CLOCK_GHZ * 1e9)
         out_state = dict(state)

@@ -46,13 +46,15 @@ def chip_grid(chips: int, tiles_per_chip: int) -> TileGrid:
 
 def _measure(g, grid, chips: int, oq_cap: int, pkg: PackageConfig,
              backend: str, use_proxy: bool,
-             run_chunk: Optional[int] = None) -> Dict[str, float]:
+             run_chunk: Optional[int] = None,
+             double_buffer: bool = False) -> Dict[str, float]:
     from ..graph import apps
     root = int(np.argmax(g.out_degree()))
     proxy = apps.table2_proxy(grid, "bfs") if use_proxy else None
     kw = {} if run_chunk is None else dict(run_chunk=run_chunk)
     r = apps.bfs(g, root, grid, proxy=proxy, oq_cap=oq_cap,
-                 chips=chips, backend=backend, pkg=pkg, **kw)
+                 chips=chips, backend=backend, pkg=pkg,
+                 double_buffer=double_buffer, **kw)
     # re-price the measured trace under the run's own package config: the
     # cross-check that the analytic board-level pricing contract holds on
     # a *directly measured* N-chip run (reprice_ratio must be ~1)
@@ -79,20 +81,23 @@ def weak_scaling(chip_counts: Sequence[int] = WEAK_CHIP_COUNTS,
                  edge_factor: int = 8, oq_cap: int = 16,
                  pkg: PackageConfig = DCRA_SRAM, seed: int = 1,
                  backend: str = "auto", use_proxy: bool = True,
-                 run_chunk: Optional[int] = None) -> List[Dict[str, float]]:
+                 run_chunk: Optional[int] = None,
+                 double_buffer: bool = False) -> List[Dict[str, float]]:
     """Constant work per chip: RMAT scale and tile count grow with the
     chip count.  Returns one measurement dict per chip count; the GTEPS
     column is the measured multi-chip curve (monotone when the runtime
     scales, which is the property tests/test_distrib.py asserts).
     ``run_chunk`` overrides the engine's supersteps-per-dispatch (0 =
-    legacy per-step loop)."""
+    legacy per-step loop); ``double_buffer`` overlaps each superstep's
+    boundary exchange with the next superstep's compute (same counters
+    and physical trace, lower BSP time — see distrib.driver)."""
     rows = []
     for chips in chip_counts:
         grid = chip_grid(chips, tiles_per_chip)
         scale = base_scale + int(round(math.log2(chips)))
         g = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
         rows.append(_measure(g, grid, chips, oq_cap, pkg, backend,
-                             use_proxy, run_chunk))
+                             use_proxy, run_chunk, double_buffer))
     return rows
 
 
@@ -101,7 +106,8 @@ def strong_scaling(chip_counts: Sequence[int] = (1, 4, 16, 64),
                    edge_factor: int = 8, oq_cap: int = 16,
                    pkg: PackageConfig = DCRA_SRAM, seed: int = 1,
                    backend: str = "auto", use_proxy: bool = True,
-                   run_chunk: Optional[int] = None) -> List[Dict[str, float]]:
+                   run_chunk: Optional[int] = None,
+                   double_buffer: bool = False) -> List[Dict[str, float]]:
     """Fixed grid and dataset, re-partitioned across more chips: isolates
     what the off-chip boundary costs at constant total work."""
     g = rmat_edges(scale, edge_factor=edge_factor, seed=seed)
@@ -115,7 +121,7 @@ def strong_scaling(chip_counts: Sequence[int] = (1, 4, 16, 64),
                   f"(does not partition the {grid.ny}x{grid.nx} grid)")
             continue
         rows.append(_measure(g, grid, chips, oq_cap, pkg, backend,
-                             use_proxy, run_chunk))
+                             use_proxy, run_chunk, double_buffer))
     return rows
 
 

@@ -1,0 +1,120 @@
+"""Fused owner-delivery kernel — proxy→combine→deliver in one launch.
+
+The engine's Pallas delivery path used to chain four ``pallas_call``
+launches per superstep (segment_combine for the arriving values, a
+histogram for presence, the relax fold into the mailbox, and a second
+histogram for per-tile endpoint contention).  This kernel fuses the hot
+path: one launch reads the record stream once and produces both the
+relaxed mailbox *and* the per-index arrival counts — presence and the
+per-tile contention fall out of the counts outside the kernel (mailbox
+indices of one tile are contiguous, so per-tile delivered records are a
+reshape-sum; counts are integer-valued, so the derived flags are
+bit-identical to the histogram formulation).
+
+Kernel shape: same reduction idiom as ``segment_combine`` — grid over
+(mailbox-blocks, record-blocks) with the record dim innermost, so each
+output block is revisited and reduced in VMEM.  The mailbox block seeds
+the output at the first record block; min folds a *guarded* running
+minimum (only columns some record actually hit are touched — the
+mailbox legitimately holds +inf, which an unconditional ``minimum``
+against the finite ``_BIG`` stand-in would corrupt) and add
+accumulates.  Both revisit orders commute with the combine, which is
+what ``analysis.pallas_races`` proves via :func:`analysis_cases`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 1024
+DEFAULT_BLOCK_S = 512
+
+_BIG = 3.4e38   # stand-in for +inf (TPU-safe); python float so the kernel
+                # body sees a literal, not a captured traced constant.
+
+
+def _kernel(seg_ref, val_ref, mail_ref, out_ref, cnt_ref, *, block_s: int,
+            combine: str):
+    r = pl.program_id(1)
+    s_blk = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = mail_ref[...]
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    seg = seg_ref[...][0]                     # (Rb,) int32
+    val = val_ref[...][0]                     # (Rb,) float32
+    base = s_blk * block_s
+    local = seg - base
+    cols = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], block_s), 1)
+    hit = local[:, None] == cols              # (Rb, Sb)
+    cnt_ref[...] += jnp.sum(hit.astype(jnp.float32), axis=0, keepdims=True)
+    if combine == "min":
+        cand = jnp.where(hit, val[:, None], _BIG)
+        hitcol = jnp.any(hit, axis=0, keepdims=True)
+        out_ref[...] = jnp.where(
+            hitcol,
+            jnp.minimum(out_ref[...], jnp.min(cand, axis=0, keepdims=True)),
+            out_ref[...])
+    else:
+        cand = jnp.where(hit, val[:, None], 0.0)
+        out_ref[...] += jnp.sum(cand, axis=0, keepdims=True)
+
+
+def deliver_fused(seg: jax.Array, val: jax.Array, mail_val: jax.Array,
+                  combine: str = "min",
+                  block_r: int = DEFAULT_BLOCK_R,
+                  block_s: int = DEFAULT_BLOCK_S,
+                  interpret: bool = True):
+    """Fused mailbox delivery.  seg: (N,) int32 mailbox indices in
+    [0, Nd) (negative = padding); val: (N,) float32; mail_val: (Nd,)
+    current mailbox.  Returns ``(new_mail_val, counts)`` — the mailbox
+    with every record combined in (min relax / add accumulate) and the
+    float32 per-index arrival counts (``counts > 0`` is the flag update;
+    a tile-contiguous reshape-sum is the endpoint contention)."""
+    assert combine in ("min", "add")
+    n = seg.shape[0]
+    nd = mail_val.shape[0]
+    n_pad = -(-n // block_r) * block_r
+    s_pad = -(-nd // block_s) * block_s
+    seg2 = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(seg.astype(jnp.int32))
+    val2 = jnp.zeros((n_pad,), jnp.float32).at[:n].set(val.astype(jnp.float32))
+    mail2 = jnp.zeros((s_pad,), jnp.float32).at[:nd].set(mail_val)
+    seg2 = seg2.reshape(n_pad // block_r, block_r)
+    val2 = val2.reshape(n_pad // block_r, block_r)
+    mail2 = mail2.reshape(1, s_pad)
+    ns, nr = s_pad // block_s, n_pad // block_r
+    out, cnt = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, combine=combine),
+        grid=(ns, nr),
+        in_specs=[pl.BlockSpec((1, block_r), lambda s, r: (r, 0)),
+                  pl.BlockSpec((1, block_r), lambda s, r: (r, 0)),
+                  pl.BlockSpec((1, block_s), lambda s, r: (0, s))],
+        out_specs=[pl.BlockSpec((1, block_s), lambda s, r: (0, s)),
+                   pl.BlockSpec((1, block_s), lambda s, r: (0, s))],
+        out_shape=[jax.ShapeDtypeStruct((1, s_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((1, s_pad), jnp.float32)],
+        interpret=interpret,
+    )(seg2, val2, mail2)
+    return out[0, :nd], cnt[0, :nd]
+
+
+def analysis_cases():
+    """(name, thunk, combine) cases for ``repro.analysis.pallas_races``:
+    tiny multi-block invocations revisiting each mailbox block across
+    record blocks.  Both outputs of a case are reduced with the declared
+    combine (min relax guarded by hit presence commutes across record
+    blocks; the count output is an add either way)."""
+    seg = jnp.asarray([0, 3, 3, 7, 1, 0], jnp.int32)
+    val = jnp.arange(6, dtype=jnp.float32)
+    mail = jnp.full((8,), jnp.inf, jnp.float32).at[1].set(0.5)
+    return [(f"deliver_fused:{c}",
+             functools.partial(deliver_fused, seg, val,
+                               jnp.zeros((8,), jnp.float32) if c == "add"
+                               else mail, c, block_r=4, block_s=8),
+             c)
+            for c in ("min", "add")]

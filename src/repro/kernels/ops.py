@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from . import decode_attention as _da
+from . import deliver_fused as _df
 from . import histogram_bin as _hb
 from . import relax_min as _rx
 from . import segment_combine as _sc
@@ -45,6 +46,12 @@ def segment_combine(seg, val, num_segments: int, combine: str = "min",
                     interpret=None):
     return _sc.segment_combine(seg, val, num_segments, combine,
                                interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("combine", "interpret"))
+def deliver_fused(seg, val, mail_val, combine: str = "min", interpret=None):
+    return _df.deliver_fused(seg, val, mail_val, combine,
+                             interpret=_auto_interpret(interpret))
 
 
 def spmv(mat: _sp.BCSR, x, interpret=None):

@@ -14,7 +14,11 @@ https://ui.perfetto.dev.  The trace has three process groups:
     serialization term in simulated microseconds (cycles / 1000 at the
     1 GHz tile clock).  The superstep's cost is the *max* across tracks
     (``costmodel.step_cycles``), so the widest track per superstep is
-    the binding level.  This is where simulated time goes.
+    the binding level.  This is where simulated time goes.  When the run
+    was double-buffered (``SuperstepTrace.double_buffer``) the board
+    track instead shows ``exchange k (overlap)`` spans drawn over the
+    *next* superstep's compute window — the overlap the accumulation
+    rule credits.
   * **chip c (sim load)** (pids 10+c) — per-chip counter ("C") tracks of
     the telemetry load vectors (delivered / recv / edges / …) sampled at
     each superstep's simulated start time; monolithic runs group tiles
@@ -96,7 +100,8 @@ def _sim_terms(rec):
         off_chip_bits=np.asarray(trace.off_chip_bits, np.float64),
         board_links=trace.board_links)
     return (terms, links, np.asarray(trace.pending, np.float64),
-            np.asarray(trace.off_chip_msgs, np.float64))
+            np.asarray(trace.off_chip_msgs, np.float64),
+            bool(getattr(trace, "double_buffer", False)))
 
 
 def _sim_events(rec) -> Tuple[List[dict], List[float]]:
@@ -106,7 +111,7 @@ def _sim_events(rec) -> Tuple[List[dict], List[float]]:
     out = _sim_terms(rec)
     if out is None:
         return [], []
-    terms, links, pending, off_msgs = out
+    terms, links, pending, off_msgs, double_buffer = out
     evs = [_meta_event(PID_SIM, "BSP timeline (simulated)")]
     levels = [lv for lv in STEP_CYCLE_LEVELS if lv in terms]
     for i, lv in enumerate(levels):
@@ -117,6 +122,36 @@ def _sim_events(rec) -> Tuple[List[dict], List[float]]:
     n = len(pending)
     starts: List[float] = []
     cur = 0.0
+    if double_buffer:
+        # double-buffered accumulation rule: a charged step pays
+        # max(core, previous step's in-flight exchange) + fill, and its
+        # own boundary exchange (board + IO-die latency) overlaps the
+        # *next* step's compute — so the exchange span is drawn starting
+        # where the next compute window opens (see driver.run).
+        prev_exch = 0.0
+        board_i = levels.index("board") + 1 if "board" in levels else None
+        for s in range(n):
+            starts.append(cur)
+            core = 0.0
+            for i, lv in enumerate(levels):
+                if lv == "board":
+                    continue
+                t_us = float(terms[lv][s]) * _US_PER_CYCLE
+                core = max(core, t_us)
+                if t_us > 0.0:
+                    evs.append({"ph": "X", "name": f"superstep {s}",
+                                "pid": PID_SIM, "tid": i + 1, "ts": cur,
+                                "dur": t_us, "args": {"level": lv}})
+            board_us = float(terms["board"][s]) * _US_PER_CYCLE \
+                if board_i is not None else 0.0
+            if core > 0.0 or board_us > 0.0 or pending[s] > 0.0:
+                cur += max(core, prev_exch) + fill_us
+                prev_exch = board_us + (io_us if off_msgs[s] > 0.0 else 0.0)
+                if prev_exch > 0.0 and board_i is not None:
+                    evs.append({"ph": "X", "name": f"exchange {s} (overlap)",
+                                "pid": PID_SIM, "tid": board_i, "ts": cur,
+                                "dur": prev_exch, "args": {"level": "board"}})
+        return evs, starts
     for s in range(n):
         starts.append(cur)
         step = 0.0
@@ -148,8 +183,12 @@ def _load_events(rec, starts: List[float]) -> List[dict]:
     if pc:
         mats = {k: rec.vec_matrix(k) for k in pc}
         n_chips = next(iter(mats.values())).shape[1]
+        ndev = getattr(rec.meta, "n_devices", 1) if rec.meta else 1
+        per = n_chips // ndev if ndev and n_chips % ndev == 0 else n_chips
         for c in range(n_chips):
-            evs.append(_meta_event(PID_CHIP0 + c, f"chip {c} (sim load)"))
+            name = f"chip {c} (sim load)" if ndev <= 1 else \
+                f"chip {c} / dev {c // per} (sim load)"
+            evs.append(_meta_event(PID_CHIP0 + c, name))
         for k, m in mats.items():
             name = k[3:]
             s_max = min(len(starts), m.shape[0])
@@ -197,7 +236,8 @@ def trace_dict(rec) -> Dict[str, object]:
     if meta is not None:
         other.update(app=meta.app, grid=f"{meta.grid_ny}x{meta.grid_nx}",
                      n_chips=meta.n_chips, chunk=meta.chunk,
-                     backend=meta.backend, telemetry=meta.telemetry)
+                     backend=meta.backend, telemetry=meta.telemetry,
+                     n_devices=getattr(meta, "n_devices", 1))
     return {"traceEvents": to_trace_events(rec),
             "displayTimeUnit": "ms", "otherData": other}
 

@@ -46,6 +46,8 @@ class RunMeta:
     telemetry: bool = False
     pkg: object = None             # PackageConfig (for sim-span pricing)
     grid: object = None            # TileGrid
+    n_devices: int = 1             # ExecMesh device count (chips/device
+                                   # = n_chips // n_devices)
 
     @property
     def tiles(self) -> int:
