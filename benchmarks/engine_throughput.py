@@ -19,6 +19,16 @@ async-dispatch accelerator backend the per-step host round-trip the
 chunked loop eliminates is the dominant term.  ``host_syncs`` records
 the exactly-measured O(supersteps) -> O(supersteps/K) sync reduction.
 
+A third *compaction* leg rides the sparse-regime rows: the same chunked
+run through the engine's shape-bucketed active-set path
+(``EngineConfig.compaction``), asserted bit-identical (values, counters,
+trace, superstep count) to the dense chunked run and asserted to pay the
+exact same measured host-sync count (bucket selection is on-device,
+inside the scan).  ``speedup_compaction`` is the dense-chunked /
+compacted wall ratio and ``mean_active_fraction`` records how sparse the
+run actually was (from the ``active_tiles`` telemetry stat, fetched with
+the chunk stats — no extra syncs).
+
 A second axis sweeps *devices*: each ``DEVICE_CONFIGS`` row re-executes
 this script in a subprocess with ``XLA_FLAGS=
 --xla_force_host_platform_device_count=N`` (N = 1/2/4 forced CPU
@@ -56,12 +66,13 @@ DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_engine.json")
 
 
-def _mk_engine(app_name: str, g, grid, oq_cap: int, use_proxy: bool):
+def _mk_engine(app_name: str, g, grid, oq_cap: int, use_proxy: bool,
+               compaction: int = 0):
     spec = {"bfs": apps.BFS_SPEC, "sssp": apps.SSSP_SPEC,
             "pagerank": apps.PAGERANK_SPEC}[app_name]
     proxy = apps.table2_proxy(grid, app_name) if use_proxy else None
     cfg = EngineConfig(grid=grid, n_src=g.n_rows, n_dst=g.n_cols,
-                       oq_cap=oq_cap, proxy=proxy)
+                       oq_cap=oq_cap, proxy=proxy, compaction=compaction)
     return spec, DataLocalEngine(spec, cfg, g.row_lo, g.row_hi, g.col_idx,
                                  g.weights)
 
@@ -75,31 +86,43 @@ def _init(app_name: str, eng, g, root):
     return eng.init_state(seed_idx=root, seed_val=0.0)
 
 
-def _run_mode(app_name, eng, g, root, chunk, repeats: int):
+def _run_mode(app_name, eng, g, root, chunk, repeats: int, observer=None):
     """Best-of-N wall clock of a full drained run (compile excluded:
-    the first run warms the jit cache)."""
+    the first run warms the jit cache).  Returns (best_s, RunResult,
+    final_state) — the state feeds the compaction bit-identity check."""
     eng.run(_init(app_name, eng, g, root), chunk=chunk)      # warm/compile
-    best, result = float("inf"), None
+    best, result, final = float("inf"), None, None
     for _ in range(repeats):
         state = _init(app_name, eng, g, root)
         t0 = time.time()
-        _, r = eng.run(state, chunk=chunk)
+        st, r = eng.run(state, chunk=chunk, observer=observer)
         best = min(best, time.time() - t0)
-        result = r
-    return best, result
+        result, final = r, st
+    return best, result, final
 
 
 def bench_config(app_name: str, tiles: int, scale: int, oq_cap: int,
                  chunk: int, use_proxy: bool = False,
-                 repeats: int = 3) -> dict:
+                 repeats: int = 3, compaction: int = 0) -> dict:
     """One benchmark row: legacy (chunk=0) vs chunked loop on the same
-    engine, with bit-identity of counters/trace asserted."""
+    engine, with bit-identity of counters/trace asserted.  With
+    ``compaction > 0`` a third leg runs the same chunked loop through
+    the shape-bucketed active-set path and records its wall clock,
+    measured host syncs (must match the dense chunked loop — bucket
+    selection happens on device inside the scan) and the run's mean
+    active-tile fraction (from the ``active_tiles`` telemetry stat via
+    a TimelineRecorder — rides the chunk fetch, no extra syncs)."""
+    from repro.obs.metrics import default_registry
     g = rmat_edges(scale, edge_factor=8, seed=1)
     grid = square_grid(tiles)
     root = int(np.argmax(g.out_degree()))
     _, eng = _mk_engine(app_name, g, grid, oq_cap, use_proxy)
-    t_legacy, r_legacy = _run_mode(app_name, eng, g, root, 0, repeats)
-    t_chunk, r_chunk = _run_mode(app_name, eng, g, root, chunk, repeats)
+    sync_ctr = default_registry().counter("engine.host_syncs")
+    t_legacy, r_legacy, _ = _run_mode(app_name, eng, g, root, 0, repeats)
+    s0 = sync_ctr.value
+    t_chunk, r_chunk, st_chunk = _run_mode(app_name, eng, g, root, chunk,
+                                           repeats)
+    syncs_chunked = (sync_ctr.value - s0) / (repeats + 1)  # incl. warm run
 
     counters_equal = (r_legacy.counters.as_dict()
                       == r_chunk.counters.as_dict())
@@ -110,7 +133,8 @@ def bench_config(app_name: str, tiles: int, scale: int, oq_cap: int,
     teps = float(g.nnz)          # simulated edges traversed (upper bound)
     out = dict(
         app=app_name, tiles=tiles, scale=scale, oq_cap=oq_cap,
-        proxy=use_proxy, chunk=chunk, supersteps=steps,
+        proxy=use_proxy, chunk=chunk, compaction=compaction,
+        supersteps=steps,
         wall_s_legacy=t_legacy, wall_s_chunked=t_chunk,
         steps_per_s_legacy=steps / t_legacy,
         steps_per_s_chunked=steps / t_chunk,
@@ -122,13 +146,44 @@ def bench_config(app_name: str, tiles: int, scale: int, oq_cap: int,
         sim_gteps_per_wall_s_chunked=teps / r_chunk.time_s / 1e9 / t_chunk,
         counters_equal=counters_equal, trace_equal=trace_equal,
     )
+    if compaction:
+        from repro import obs
+        _, ceng = _mk_engine(app_name, g, grid, oq_cap, use_proxy,
+                             compaction)
+        rec = obs.TimelineRecorder()
+        s1 = sync_ctr.value
+        t_comp, r_comp, st_comp = _run_mode(app_name, ceng, g, root, chunk,
+                                            repeats, observer=rec)
+        syncs_comp = (sync_ctr.value - s1) / (repeats + 1)
+        act = rec.stat_matrix("active_tiles")
+        compaction_equal = (
+            r_comp.counters.as_dict() == r_chunk.counters.as_dict()
+            and r_comp.trace.to_dict() == r_chunk.trace.to_dict()
+            and r_comp.supersteps == r_chunk.supersteps
+            and bool(np.array_equal(np.asarray(st_comp["values"]),
+                                    np.asarray(st_chunk["values"]))))
+        assert compaction_equal, f"{app_name}: compacted run diverged"
+        assert syncs_comp == syncs_chunked, \
+            f"{app_name}: compaction changed the host-sync count"
+        out.update(
+            wall_s_compacted=t_comp,
+            steps_per_s_compacted=steps / t_comp,
+            speedup_compaction=t_chunk / t_comp,
+            host_syncs_compacted=int(syncs_comp),
+            mean_active_fraction=float(np.mean(act)) / (grid.ny * grid.nx)
+            if act.size else 1.0,
+            compaction_equal=compaction_equal,
+        )
     row(f"engine_throughput/{app_name}-{tiles}t-oq{oq_cap}"
-        f"{'-proxy' if use_proxy else ''}",
+        f"{'-proxy' if use_proxy else ''}"
+        f"{f'-c{compaction}' if compaction else ''}",
         t_chunk * 1e6,
         f"speedup={out['speedup']:.2f}x "
         f"steps/s {out['steps_per_s_legacy']:.0f}->"
         f"{out['steps_per_s_chunked']:.0f} "
-        f"syncs {steps}->{out['host_syncs_chunked']}")
+        f"syncs {steps}->{out['host_syncs_chunked']}"
+        + (f" compaction {out['speedup_compaction']:.2f}x "
+           f"act {out['mean_active_fraction']:.3f}" if compaction else ""))
     return out
 
 
@@ -219,20 +274,25 @@ def bench_devices(app_name: str, tiles: int, scale: int, oq_cap: int,
     return out
 
 
-# (app, oq_cap, chunk, use_proxy): the dispatch-bound small-OQ regimes the
-# chunked loop targets plus one compute-heavy point per app for contrast.
+# (app, oq_cap, chunk, use_proxy, compaction): the dispatch-bound
+# small-OQ regimes the chunked loop targets plus one compute-heavy point
+# per app for contrast.  The compaction level adds a third leg to the
+# row — the shape-bucketed active-set path — on the sparse-regime
+# configs (small OQ => long drained tails with few active tiles, the
+# regime compaction exists for); the dense-regime rows keep it off, so
+# the axis records both sides of the sparsity contrast.
 CONFIGS_1024 = [
-    ("bfs", 1, 128, False),
-    ("bfs", 8, 32, False),
-    ("bfs", 1, 128, True),
-    ("sssp", 1, 128, False),
-    ("sssp", 8, 32, True),
-    ("pagerank", 4, 64, True),
+    ("bfs", 1, 128, False, 3),
+    ("bfs", 8, 32, False, 2),
+    ("bfs", 1, 128, True, 2),
+    ("sssp", 1, 128, False, 2),
+    ("sssp", 8, 32, True, 0),
+    ("pagerank", 4, 64, True, 0),
 ]
 CONFIGS_4096 = [
-    ("bfs", 1, 128, False),
-    ("sssp", 4, 64, True),
-    ("pagerank", 4, 64, True),
+    ("bfs", 1, 128, False, 3),
+    ("sssp", 4, 64, True, 0),
+    ("pagerank", 4, 64, True, 0),
 ]
 # (app, tiles, scale, oq_cap, chunk, use_proxy) x DEVICE_COUNTS forced
 # CPU devices: the 4-chip mesh sweep (sync vs double-buffered exchange).
@@ -246,11 +306,13 @@ DEVICE_COUNTS = (1, 2, 4)
 def run(small: bool = True, out_path: str = DEFAULT_OUT,
         device_counts=DEVICE_COUNTS) -> list:
     rows = []
-    for app_name, oq, chunk, px in CONFIGS_1024:
-        rows.append(bench_config(app_name, 1024, 11, oq, chunk, px))
+    for app_name, oq, chunk, px, comp in CONFIGS_1024:
+        rows.append(bench_config(app_name, 1024, 11, oq, chunk, px,
+                                 compaction=comp))
     if not small:
-        for app_name, oq, chunk, px in CONFIGS_4096:
-            rows.append(bench_config(app_name, 4096, 13, oq, chunk, px))
+        for app_name, oq, chunk, px, comp in CONFIGS_4096:
+            rows.append(bench_config(app_name, 4096, 13, oq, chunk, px,
+                                     compaction=comp))
     for app_name, tiles, scale, oq, chunk, px in DEVICE_CONFIGS:
         for ndev in device_counts:
             rows.append(bench_devices(app_name, tiles, scale, oq, chunk,
@@ -262,11 +324,15 @@ def run(small: bool = True, out_path: str = DEFAULT_OUT,
 def smoke(out_path: str = DEFAULT_OUT) -> None:
     """CI gate: tiny grid, asserts chunked == legacy counters/trace for a
     write-through and a write-back app, writes the JSON artifact."""
-    rows = [bench_config("bfs", 64, 9, 4, 16, False, repeats=1),
+    rows = [bench_config("bfs", 64, 9, 4, 16, False, repeats=1,
+                         compaction=2),
             bench_config("pagerank", 64, 9, 8, 16, True, repeats=1)]
     for r in rows:
         assert r["counters_equal"] and r["trace_equal"]
         assert r["host_syncs_chunked"] < r["host_syncs_legacy"]
+        if r["compaction"]:
+            assert r["compaction_equal"]
+            assert r["host_syncs_compacted"] >= 0
     _write(rows, out_path)
     print(f"# smoke OK -> {out_path}")
 
@@ -281,6 +347,9 @@ def _write(rows: list, out_path: str) -> None:
                           if "devices" not in r), default=0.0),
         best_db_sim_win=max((r["db_sim_win"] for r in rows
                              if "db_sim_win" in r), default=0.0),
+        best_speedup_compaction=max(
+            (r["speedup_compaction"] for r in rows
+             if "speedup_compaction" in r), default=0.0),
         note="CPU-only container: speedup bounded by the XLA superstep's "
              "own synchronous execution time; on async-dispatch "
              "accelerator backends the eliminated per-step host sync is "

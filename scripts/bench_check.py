@@ -22,9 +22,18 @@ baseline with per-field tolerances:
     still: their ``speedup`` is the sync/db wall ratio and gets a
     per-device-count fraction (x0.6 at 2 devices, x0.4 at 4+).
 
+  * **speedup_compaction** (sparse-regime rows): the dense-chunked /
+    compacted wall ratio of the active-set compaction path — gated
+    collapse-only with the same ``min_frac`` policy as ``speedup``
+    (wall-clock noise must not fail CI; a collapse means the compacted
+    fast path stopped being fast).  Its bit-identity flag
+    (``compaction_equal``) and measured sync count
+    (``host_syncs_compacted``) are gated exactly.
+
 Rows are matched on (app, tiles, scale, oq_cap, proxy, chunk, chips,
-devices) — the trailing two are absent from monolithic-loop rows; a
-baseline row missing from the fresh run is a regression.  Exits nonzero
+devices, compaction) — the trailing three are absent from rows that
+predate their axes; a baseline row missing from the fresh run is a
+regression.  Exits nonzero
 on any regression and writes a markdown report for the CI artifact.
 
 Usage:
@@ -44,11 +53,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(REPO, "BENCH_engine.json")
 
 EXACT_FIELDS = ("supersteps", "host_syncs_legacy", "host_syncs_chunked",
-                "mesh_devices")
-TRUE_FLAGS = ("counters_equal", "trace_equal", "values_equal")
+                "host_syncs_compacted", "mesh_devices")
+TRUE_FLAGS = ("counters_equal", "trace_equal", "values_equal",
+              "compaction_equal")
 SIM_FIELDS = ("sim_time_s", "sim_time_s_db")
 KEY_FIELDS = ("app", "tiles", "scale", "oq_cap", "proxy", "chunk",
-              "chips", "devices")
+              "chips", "devices", "compaction")
 # wall-clock speedup collapse fraction, scaled per forced device count
 # (multi-device CPU runs are the noisiest rows)
 _DEVICE_FRAC = {2: 0.6, 4: 0.4}
@@ -105,14 +115,17 @@ def compare(baseline: dict, fresh: dict, *, min_frac: float = 0.25,
                     f"{label}: {f} drifted {b_sim:g} -> {f_sim:g} "
                     f"(rel tol {sim_rel_tol:g})")
         frac = _min_frac_for(brow, min_frac)
-        b_sp, f_sp = brow.get("speedup", 0.0), frow.get("speedup", 0.0)
-        if f_sp < b_sp * frac:
-            regressions.append(
-                f"{label}: speedup collapsed {b_sp:.2f}x -> {f_sp:.2f}x "
-                f"(< {frac:.2f} of baseline)")
-        elif f_sp < b_sp:
-            notes.append(f"{label}: speedup {b_sp:.2f}x -> {f_sp:.2f}x "
-                         f"(within wall-clock tolerance)")
+        for sp in ("speedup", "speedup_compaction"):
+            if sp not in brow:
+                continue
+            b_sp, f_sp = brow.get(sp, 0.0), frow.get(sp, 0.0)
+            if f_sp < b_sp * frac:
+                regressions.append(
+                    f"{label}: {sp} collapsed {b_sp:.2f}x -> {f_sp:.2f}x "
+                    f"(< {frac:.2f} of baseline)")
+            elif f_sp < b_sp:
+                notes.append(f"{label}: {sp} {b_sp:.2f}x -> {f_sp:.2f}x "
+                             f"(within wall-clock tolerance)")
     for k in fresh_rows:
         notes.append("/".join(str(v) for v in k)
                      + ": new row not in baseline")
@@ -145,6 +158,10 @@ def main(argv=None) -> int:
     ap.add_argument("--sim-rel-tol", type=float, default=1e-6)
     ap.add_argument("--report", default=None,
                     help="write a markdown report here")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI alias: re-run + compare, exit nonzero on any "
+                         "regression (the default behavior, named so the "
+                         "workflow invocation is self-describing)")
     args = ap.parse_args(argv)
 
     fresh_path = args.fresh

@@ -22,6 +22,15 @@ jaxprs).  Rules:
     at-most-one-live-writer with masked records redirected out of bounds
     and dropped *at the scatter* — which requires FILL_OR_DROP.
 
+``bucket-coverage``
+    Compaction cells only: the traced step must contain the capacity
+    ladder's ``lax.switch`` (a ``cond`` with one branch per bucket,
+    dense rung included) with non-empty branch bodies.  ``iter_eqns``
+    recurses into every branch, so the host-sync and scatter rules
+    apply to each pre-traced bucket — this rule asserts the branches
+    are actually there to be walked (a silently-dense engine would
+    pass every other rule while never testing the compacted code).
+
 ``int-stat-f32-row``
     Integer-dtype per-superstep stats that ride the packed f32 stat row
     without being covered by ``engine._EXACT_INT_STATS``.  f32 holds
@@ -133,6 +142,41 @@ def lint_step_fn(fn, args, where: str) -> List[Finding]:
     ``fn`` may be jitted; the walker recurses through the pjit eqn."""
     closed = jax.make_jaxpr(fn)(*args)
     return lint_jaxpr(closed, where)
+
+
+def lint_bucket_coverage(closed, n_buckets: int, where: str) -> List[Finding]:
+    """Assert the compaction ladder's ``lax.switch`` is present in the
+    traced step AND that every pre-traced bucket branch is reachable by
+    the lint walk (``iter_eqns`` recurses into ``cond`` branch bodies,
+    so host-sync/scatter rules apply per branch exactly when the branch
+    jaxprs are where we expect them).
+
+    ``n_buckets`` is ``len(engine._ladder)``: the dense rung plus one
+    branch per capacity.  A missing or smaller switch means the engine
+    silently fell back to the dense path (ladder not threaded through
+    this code path) — the failure mode this rule exists to catch;
+    an empty branch body means a bucket the linter cannot see into."""
+    jaxpr = getattr(closed, "jaxpr", closed)
+    for eqn, path in iter_eqns(jaxpr):
+        if eqn.primitive.name != "cond":
+            continue
+        branches = eqn.params.get("branches", ())
+        if len(branches) < n_buckets:
+            continue
+        empties = sum(1 for b in branches
+                      if not getattr(getattr(b, "jaxpr", b), "eqns", ()))
+        if empties:
+            return [Finding(
+                "jaxprlint", "bucket-coverage", where,
+                f"compaction switch at `{'/'.join(path + ('cond',))}` has "
+                f"{empties} empty branch bodies out of {len(branches)}: "
+                f"the lint walk cannot cover those buckets")]
+        return []
+    return [Finding(
+        "jaxprlint", "bucket-coverage", where,
+        f"no `cond` with >= {n_buckets} branches in the traced step: "
+        f"the compaction ladder's bucket switch is missing — the "
+        f"engine is silently running the dense path only")]
 
 
 # ---------------------------------------------------------------- int stats

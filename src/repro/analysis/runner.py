@@ -3,10 +3,12 @@
 One :func:`run_all` call produces the :class:`~.findings.Report` that
 ``scripts/lint_engine.py`` serializes and CI gates on.  The matrix is
 the six paper apps x {jnp, pallas} x {monolithic, 4-chip distributed,
-4-chip double-buffered} (the Pallas kernel backend is monolithic-only,
-so its distributed cells are skipped by construction — see
-``distrib.driver``; the ``-db`` cell traces and runs the deferred
-boundary-exchange chunk path):
+4-chip double-buffered} x {dense, compaction=2} (the Pallas kernel
+backend is monolithic-only, so its distributed cells are skipped by
+construction — see ``distrib.driver``; the ``-db`` cell traces and runs
+the deferred boundary-exchange chunk path; the ``-c2`` cells trace the
+capacity ladder's bucket switch, which ``jaxprlint`` walks per branch
+and ``lint_bucket_coverage`` asserts is actually present):
 
   * **jaxprlint** traces each cell's chunk-step function (the scanned
     superstep body, boundary exchange included for distributed cells) to
@@ -36,11 +38,16 @@ from . import deadcode, invariants, jaxprlint, pallas_races
 from .findings import Finding, Report
 
 APP_NAMES = ("bfs", "sssp", "wcc", "pagerank", "spmv", "histo")
-# (backend, chips, double_buffer): pallas cells are monolithic-only
-# (driver constraint); the double-buffer cell lints + runs the deferred
-# boundary-exchange chunk fn (distrib.driver._make_chunk's db path)
-MATRIX = (("jnp", 0, False), ("pallas", 0, False), ("jnp", 4, False),
-          ("jnp", 4, True))
+# (backend, chips, double_buffer, compaction): pallas cells are
+# monolithic-only (driver constraint); the double-buffer cell lints +
+# runs the deferred boundary-exchange chunk fn (distrib.driver
+# ._make_chunk's db path); the compaction cells trace the capacity
+# ladder's bucket switch (jaxprlint.lint_bucket_coverage asserts every
+# pre-traced branch is present and walkable) and run it over the
+# invariants graph
+MATRIX = (("jnp", 0, False, 0), ("pallas", 0, False, 0),
+          ("jnp", 4, False, 0), ("jnp", 4, True, 0),
+          ("jnp", 0, False, 2), ("jnp", 4, True, 2))
 _SCALE = 7          # tiny RMAT: 128 vertices — a few supersteps per app
 _CHUNK_LEN = 4      # scan length for the traced chunk step
 
@@ -66,13 +73,14 @@ def _proxy_for(name, grid):
 
 
 def _cell_engine(name, backend, chips, g, grid, root, bins, hv,
-                 double_buffer=False):
+                 double_buffer=False, compaction=0):
     """(engine, state, seeds) for one matrix cell (no run executed)."""
     from ..graph import apps
     return apps.engine_and_state(
         name, g, grid, proxy=_proxy_for(name, grid), root=root,
         histo_values=hv, bins=bins, backend=backend,
-        chips=chips, oq_cap=16, double_buffer=double_buffer)
+        chips=chips, oq_cap=16, double_buffer=double_buffer,
+        compaction=compaction)
 
 
 def _chunk_args(eng, state):
@@ -81,10 +89,12 @@ def _chunk_args(eng, state):
 
 
 def _lint_cell(name, backend, chips, g, grid, root, bins, hv,
-               where: str, double_buffer=False) -> List[Finding]:
+               where: str, double_buffer=False,
+               compaction=0) -> List[Finding]:
     """Static passes of one cell: trace the chunk step + int-stat check."""
+    import jax
     eng, state, _seeds = _cell_engine(name, backend, chips, g, grid, root,
-                                      bins, hv, double_buffer)
+                                      bins, hv, double_buffer, compaction)
     if chips:
         chunk_fn = eng._get_chunk_fn(_CHUNK_LEN)
         raw = eng._raw_vmap_step()
@@ -95,8 +105,12 @@ def _lint_cell(name, backend, chips, g, grid, root, bins, hv,
     else:
         chunk_fn = functools.partial(eng._chunk_impl, length=_CHUNK_LEN)
         step = eng._chunk_step_one
-    findings = jaxprlint.lint_step_fn(chunk_fn, _chunk_args(eng, state),
-                                      where)
+    closed = jax.make_jaxpr(chunk_fn)(*_chunk_args(eng, state))
+    findings = jaxprlint.lint_jaxpr(closed, where)
+    if compaction:
+        kernel = eng.kernel if chips else eng
+        findings += jaxprlint.lint_bucket_coverage(
+            closed, len(kernel._ladder), where)
     from ..core.engine import _EXACT_INT_STATS
     shapes = jaxprlint.stats_shapes_of(step, state,
                                        jnp.zeros((), jnp.bool_))
@@ -118,11 +132,13 @@ def _drift_cell(name, g, grid, root, bins, hv, where: str) -> List[Finding]:
 
 
 def _run_cell(name, backend, chips, g, grid, root, bins, hv,
-              where: str, double_buffer=False) -> List[Finding]:
+              where: str, double_buffer=False,
+              compaction=0) -> List[Finding]:
     """Execute one cell and check the measured run's invariants."""
     from ..graph import apps
     proxy = _proxy_for(name, grid)
-    kw = dict(backend=backend, oq_cap=16, double_buffer=double_buffer)
+    kw = dict(backend=backend, oq_cap=16, double_buffer=double_buffer,
+              compaction=compaction)
     if chips:
         kw["chips"] = chips
     if name == "bfs":
@@ -170,20 +186,22 @@ def run_all(repo_root, app_names: Optional[Sequence[str]] = None,
     g, grid, root, bins, hv = _inputs()
 
     for name in apps_sel:
-        for backend, chips, db in MATRIX:
+        for backend, chips, db, comp in MATRIX:
             part = f"{chips}chips" if chips else "mono"
             if db:
                 part += "-db"
+            if comp:
+                part += f"-c{comp}"
             where = f"{name}/{backend}/{part}"
             report.matrix.append(where)
             if "jaxprlint" in passes_sel:
                 say(f"jaxprlint {where}")
                 report.extend(_lint_cell(name, backend, chips, g, grid,
-                                         root, bins, hv, where, db))
+                                         root, bins, hv, where, db, comp))
             if "invariants" in passes_sel:
                 say(f"invariants {where}")
                 report.extend(_run_cell(name, backend, chips, g, grid,
-                                        root, bins, hv, where, db))
+                                        root, bins, hv, where, db, comp))
         if "jaxprlint" in passes_sel:
             say(f"backend-drift {name}")
             report.extend(_drift_cell(name, g, grid, root, bins, hv,

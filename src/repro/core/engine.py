@@ -165,6 +165,17 @@ class EngineConfig:
     # costmodel._trace_time_s_parsed).  Monolithic runs have no board
     # exchange: the flag only tags their trace, time is unchanged.
     double_buffer: bool = False
+    # Active-set compaction (0 = off): depth of the power-of-two window
+    # capacity ladder.  With compaction=L the superstep is pre-traced
+    # once per capacity in ``capacity_ladder(T, L)`` (T, T/4, ..., down
+    # L rungs); each superstep counts the active tiles (pending mailbox
+    # flags or open edge cursors) *on device* and ``lax.switch``es into
+    # the smallest window that fits — zero added host syncs, the IQ/OQ
+    # record stream shrinks from T*oq_cap to W*oq_cap rows.  Inactive
+    # tiles contribute combine-identity work in the dense path, so every
+    # bucket is bit-identical in values, counters and SuperstepTrace to
+    # compaction=0 (the oracle; tests/test_compaction.py is the gate).
+    compaction: int = 0
 
     @property
     def iq_cap(self) -> int:
@@ -222,6 +233,7 @@ class DataLocalEngine:
             if casc is not None and (not casc.selective
                                      or app.cascade_profitable):
                 self._cascade_levels = casc.levels
+        self._ladder = capacity_ladder(T, cfg.compaction)
         # per-source arrays padded to the *global* length; in chip mode the
         # driver partitions these into per-window slices before stepping.
         self.row_lo = jnp.asarray(_pad(row_lo, self.Ngs, 0), jnp.int32)
@@ -235,13 +247,25 @@ class DataLocalEngine:
         self._stat_names = None        # packed-stat layout, cached per engine
         self._n_seeds = 0              # set by init_state, read by sanitizer
 
-    def chip_superstep(self, row_lo, row_hi, state, chip_id, flush):
+    def chip_superstep(self, row_lo, row_hi, state, chip_id, flush,
+                       active=None, window=None, pad_off_to=None):
         """One superstep of window ``chip_id``: pure in its array args so
         the distributed driver can vmap / shard_map it across chips.
         Returns (new_state, stats, off) where ``off`` is the dict of
         off-chip records (dst, val, mask) to exchange — ``None`` for a
-        monolithic window."""
-        return self._step(row_lo, row_hi, state, chip_id, flush)
+        monolithic window.
+
+        ``window=W`` (with ``active``, the (T,) active-tile mask) runs
+        the active-set-compacted superstep: the IQ/OQ stages execute on
+        a W-row compacted window, bit-identical to the dense path (the
+        inactive tiles it skips are combine-identity no-ops).
+        ``pad_off_to`` pads the off-chip record buffer with masked
+        sentinels to the dense length so every compaction bucket of a
+        ``lax.switch`` returns identical shapes (and the double-buffer
+        bank size is unchanged)."""
+        return self._step(row_lo, row_hi, state, chip_id, flush,
+                          active=active, window=window,
+                          pad_off_to=pad_off_to)
 
     def _require_mono(self, what: str):
         """init_state/activate_all/run build whole-grid state; with a
@@ -293,17 +317,79 @@ class DataLocalEngine:
     # ------------------------------------------------------------ superstep
     def _superstep_impl(self, state, flush: jnp.ndarray):
         """Monolithic superstep: the whole grid as one window."""
-        new_state, stats, _ = self._step(self.row_lo, self.row_hi, state,
-                                         jnp.int32(0), flush)
+        return self._step_mono(state, flush)
+
+    def _step_mono(self, state, flush):
+        """One monolithic superstep, dispatched through the compaction
+        ladder: with ``compaction=0`` this is exactly the dense
+        ``_step``; otherwise the active-tile count (computed on device
+        from the carry — no host sync) picks the smallest pre-traced
+        window branch via ``lax.switch``.  Every branch is bit-identical
+        to the dense path; the extra ``active_tiles`` / ``bucket_cap``
+        stats are pure telemetry outputs the fixed-key counter/trace
+        accumulators ignore."""
+        if len(self._ladder) <= 1:
+            new_state, stats, _ = self._step(self.row_lo, self.row_hi,
+                                             state, jnp.int32(0), flush)
+            return new_state, stats
+        active = self._active_tiles(state)
+        n_act = jnp.sum(active.astype(jnp.int32))
+        idx = bucket_index(n_act, self._ladder)
+
+        def branch(w):
+            def run(st, fl, act):
+                return self._step(self.row_lo, self.row_hi, st,
+                                  jnp.int32(0), fl, active=act, window=w)
+            return run
+
+        new_state, stats, _ = jax.lax.switch(
+            idx, [branch(None if j == 0 else cap)
+                  for j, cap in enumerate(self._ladder)],
+            state, flush, active)
+        stats = dict(stats, active_tiles=n_act.astype(jnp.float32),
+                     bucket_cap=jnp.take(
+                         jnp.asarray(self._ladder, jnp.float32), idx))
         return new_state, stats
 
-    def _step(self, row_lo, row_hi, state, chip_id, flush):
-        app, cfg, grid = self.app, self.cfg, self.cfg.grid
+    def _active_tiles(self, state):
+        """(T,) mask of tiles with pending mailbox records or open edge
+        cursors — the exact set the dense superstep does non-identity
+        work on (reactivation only touches flagged tiles, so post-drain
+        emission stays inside this set too)."""
+        T = self.T
+        mail = jnp.any(state["mail_flag"].reshape(T, self.Cd), axis=1)
+        cur = jnp.any((state["cur_hi"] > state["cur_lo"])
+                      .reshape(T, self.Cs), axis=1)
+        return mail | cur
+
+    def _edge_value(self, cval, pos):
+        """Per-edge record value from the source cursor value and the
+        edge position (shared by the dense and compacted emit fronts)."""
+        app = self.app
+        if app.edge_value == "add_w":
+            return cval + self.weights[pos]
+        if app.edge_value == "add_one":
+            return cval + 1.0
+        if app.edge_value == "mul_w":
+            return cval * self.weights[pos]
+        if app.edge_value == "carry":
+            return cval
+        if app.edge_value == "one":
+            return jnp.ones_like(cval)
+        raise ValueError(app.edge_value)
+
+    def _front_dense(self, row_lo, row_hi, state, tile_gids):
+        """Dense IQ drain + OQ emit over all T tiles (the oracle path).
+
+        Returns (new_vals, mail_val, mail_flag, cur_lo, cur_hi, cur_val,
+        consumed_vec, edges_vec, consumed_full, edges_full, dst, cand,
+        emit_mask, src_tile): full-length state arrays, per-lane count
+        vectors (here lane == tile), their (T,) per-tile renderings, and
+        the flattened emission record stream."""
+        app, cfg = self.app, self.cfg
         T, Cs, Cd = self.T, self.Cs, self.Cd
         is_min = app.combine == "min"
         ident = jnp.float32(app.identity)
-        tile_gids = self.part.global_tile(
-            chip_id, jnp.arange(T, dtype=jnp.int32))
 
         # ---- 1. IQ drain (budgeted mailbox consumption) -------------------
         flag2d = state["mail_flag"].reshape(T, Cd)
@@ -358,21 +444,8 @@ class DataLocalEngine:
         emit_mask = b_idx[None, :] < total_take[:, None]
         pos = jnp.clip(pos, 0, self.col_idx.shape[0] - 1)
         dst = self.col_idx[pos]
-        cval = cur_val[vglob]
-        if app.edge_value == "add_w":
-            cand = cval + self.weights[pos]
-        elif app.edge_value == "add_one":
-            cand = cval + 1.0
-        elif app.edge_value == "mul_w":
-            cand = cval * self.weights[pos]
-        elif app.edge_value == "carry":
-            cand = cval
-        elif app.edge_value == "one":
-            cand = jnp.ones_like(cval)
-        else:
-            raise ValueError(app.edge_value)
+        cand = self._edge_value(cur_val[vglob], pos)
         cur_lo = cur_lo + (take_v2d.reshape(-1))
-        edges_per_tile = total_take
 
         # flatten records (tile ids are global; dst indices are global)
         R = T * B
@@ -380,13 +453,179 @@ class DataLocalEngine:
         cand = cand.reshape(R)
         emit_mask = emit_mask.reshape(R)
         src_tile = jnp.repeat(tile_gids, B)
+        return (new_vals, mail_val, mail_flag, cur_lo, cur_hi, cur_val,
+                consumed_per_tile, total_take, consumed_per_tile,
+                total_take, dst, cand, emit_mask, src_tile)
+
+    def _front_compact(self, row_lo, row_hi, state, chip_id, active, W):
+        """Compacted IQ drain + OQ emit over a W-tile active window.
+
+        Active tiles are compacted (stably, preserving tile order) into
+        the leading rows of a W-row window; every IQ/OQ tensor op then
+        runs on (W, .) gathers instead of (T, .) and the emission record
+        stream shrinks to W*oq_cap rows.  Invalid window lanes gather
+        tile T-1's rows, so their mailbox flags and cursor ranges are
+        forced to zero — otherwise an *active* tile T-1 would be drained
+        and emitted twice — making them combine-identity no-ops, and the
+        scatter-back drops them (sentinel row T, ``mode="drop"``).  Live
+        records keep the dense path's tile-major relative order, so the
+        downstream sorts, segment reductions and delivery scatters see
+        the same live sequence: state, counters and trace stay
+        bit-identical to ``_front_dense``.  Same return contract as
+        ``_front_dense`` (per-lane count vectors are (W,); the (T,)
+        renderings are scattered back only under telemetry)."""
+        app, cfg = self.app, self.cfg
+        T, Cs, Cd = self.T, self.Cs, self.Cd
+        is_min = app.combine == "min"
+        ident = jnp.float32(app.identity)
+        w_valid, w_rows, rows_drop = _compact_window(active, W, T)
+
+        # ---- 1. IQ drain on the window's mailbox rows ---------------------
+        flagW2 = (state["mail_flag"].reshape(T, Cd)[w_rows]
+                  & w_valid[:, None])
+        csum = jnp.cumsum(flagW2.astype(jnp.int32), axis=1)
+        takeW2 = flagW2 & (csum <= cfg.iq_cap)
+        takeW = takeW2.reshape(-1)
+        mval2 = state["mail_val"].reshape(T, Cd)
+        vals2 = state["values"].reshape(T, Cd)
+        mvalW = mval2[w_rows].reshape(-1)
+        valsW = vals2[w_rows].reshape(-1)
+        if cfg.backend == "pallas":
+            from ..kernels import ops as kops
+            nvW, imp8 = kops.relax(valsW, mvalW, takeW, combine=app.combine)
+            improvedW = imp8.astype(bool)
+        elif is_min:
+            improvedW = takeW & (mvalW < valsW)
+            nvW = jnp.where(improvedW, mvalW, valsW)
+        else:
+            improvedW = takeW
+            nvW = jnp.where(takeW, valsW + mvalW, valsW)
+        mail_flagW = flagW2.reshape(-1) & ~takeW
+        mail_valW = jnp.where(takeW, ident, mvalW)
+        consumedW = jnp.sum(takeW2, axis=1)
+
+        # ---- cursors, windowed --------------------------------------------
+        cur_lo2 = state["cur_lo"].reshape(T, Cs)
+        cur_loW = cur_lo2[w_rows].reshape(-1)
+        cur_hiW = state["cur_hi"].reshape(T, Cs)[w_rows].reshape(-1)
+        cur_valW = state["cur_val"].reshape(T, Cs)[w_rows].reshape(-1)
+        react = app.reactivate and self.Nd == self.Ns
+        if react:
+            # Cd == Cs here, so ``improvedW`` is laid out exactly like
+            # the windowed cursor rows (the dense path's improved[:Ns])
+            row_loW = row_lo.reshape(T, Cs)[w_rows].reshape(-1)
+            row_hiW = row_hi.reshape(T, Cs)[w_rows].reshape(-1)
+            cur_loW = jnp.where(improvedW, row_loW, cur_loW)
+            cur_hiW = jnp.where(improvedW, row_hiW, cur_hiW)
+            cur_valW = jnp.where(improvedW, nvW, cur_valW)
+
+        # ---- 2. OQ emit from the window -----------------------------------
+        B = cfg.oq_cap
+        rem2d = jnp.where(w_valid[:, None],
+                          (cur_hiW - cur_loW).reshape(W, Cs), 0)
+        prefix = jnp.cumsum(rem2d, axis=1)                    # inclusive
+        capped = jnp.minimum(prefix, B)
+        take_v2d = capped - jnp.concatenate(
+            [jnp.zeros((W, 1), jnp.int32), capped[:, :-1]], axis=1)
+        total_take = capped[:, -1]                            # (W,)
+        b_idx = jnp.arange(B, dtype=jnp.int32)
+        vslot = jax.vmap(
+            functools.partial(jnp.searchsorted, side="right"),
+            in_axes=(0, None))(capped, b_idx)
+        vslot = jnp.minimum(vslot, Cs - 1)                    # (W, B)
+        capped_prev = capped - take_v2d
+        offset = b_idx[None, :] - jnp.take_along_axis(capped_prev, vslot, axis=1)
+        vglob = vslot + jnp.arange(W, dtype=jnp.int32)[:, None] * Cs
+        pos = cur_loW[vglob] + offset
+        emit_mask = b_idx[None, :] < total_take[:, None]
+        pos = jnp.clip(pos, 0, self.col_idx.shape[0] - 1)
+        dst = self.col_idx[pos]
+        cand = self._edge_value(cur_valW[vglob], pos)
+        cur_loW = cur_loW + (take_v2d.reshape(-1))
+
+        # ---- ONE fused (W, .) scatter-back for the whole state ------------
+        # Scatter cost on XLA CPU is per update ROW, so the six per-array
+        # scatter-backs are stacked side by side into a single W-row
+        # scatter.  Everything rides as f32 *bits*: the mailbox flag as
+        # 0.0/1.0 (the != 0 reconstruction is exact), the int32 cursor
+        # bounds bitcast (concat/scatter-set/slice are pure data movement
+        # — no arithmetic touches the lanes, so the round-trip is
+        # bit-exact for any pattern), values/mail_val/cur_val untouched.
+        bc_f = lambda a: jax.lax.bitcast_convert_type(a, jnp.float32)
+        bc_i = lambda a: jax.lax.bitcast_convert_type(a, jnp.int32)
+        parts_T = [vals2, mval2,
+                   state["mail_flag"].reshape(T, Cd).astype(jnp.float32),
+                   bc_f(cur_lo2)]
+        parts_W = [nvW.reshape(W, Cd), mail_valW.reshape(W, Cd),
+                   mail_flagW.reshape(W, Cd).astype(jnp.float32),
+                   bc_f(cur_loW.reshape(W, Cs))]
+        if react:
+            parts_T += [bc_f(state["cur_hi"].reshape(T, Cs)),
+                        state["cur_val"].reshape(T, Cs)]
+            parts_W += [bc_f(cur_hiW.reshape(W, Cs)),
+                        cur_valW.reshape(W, Cs)]
+        stacked = jnp.concatenate(parts_T, axis=1).at[rows_drop].set(
+            jnp.concatenate(parts_W, axis=1), mode="drop")
+        new_vals = stacked[:, :Cd].reshape(-1)
+        mail_val = stacked[:, Cd:2 * Cd].reshape(-1)
+        mail_flag = (stacked[:, 2 * Cd:3 * Cd] != 0).reshape(-1)
+        c0 = 3 * Cd
+        cur_lo = bc_i(stacked[:, c0:c0 + Cs]).reshape(-1)
+        if react:
+            cur_hi = bc_i(stacked[:, c0 + Cs:c0 + 2 * Cs]).reshape(-1)
+            cur_val = stacked[:, c0 + 2 * Cs:c0 + 3 * Cs].reshape(-1)
+        else:
+            cur_hi, cur_val = state["cur_hi"], state["cur_val"]
+
+        # flatten records (tile ids are global; dst indices are global)
+        R = W * B
+        dst = dst.reshape(R)
+        cand = cand.reshape(R)
+        emit_mask = emit_mask.reshape(R)
+        src_tile = jnp.repeat(self.part.global_tile(chip_id, w_rows), B)
+        if cfg.telemetry:    # (T,) per-tile renderings for the tv_* vectors
+            consumed_full = jnp.zeros((T,), consumedW.dtype).at[rows_drop] \
+                .set(consumedW, mode="drop")
+            edges_full = jnp.zeros((T,), total_take.dtype).at[rows_drop] \
+                .set(total_take, mode="drop")
+        else:
+            consumed_full = edges_full = None
+        return (new_vals, mail_val, mail_flag, cur_lo, cur_hi, cur_val,
+                consumedW, total_take, consumed_full, edges_full, dst,
+                cand, emit_mask, src_tile)
+
+    def _step(self, row_lo, row_hi, state, chip_id, flush, active=None,
+              window=None, pad_off_to=None):
+        app, cfg, grid = self.app, self.cfg, self.cfg.grid
+        T, Cs, Cd = self.T, self.Cs, self.Cd
+        is_min = app.combine == "min"
+        ident = jnp.float32(app.identity)
+        tile_gids = self.part.global_tile(
+            chip_id, jnp.arange(T, dtype=jnp.int32))
+
+        if window is None:
+            (new_vals, mail_val, mail_flag, cur_lo, cur_hi, cur_val,
+             consumed_vec, edges_vec, consumed_per_tile, edges_per_tile,
+             dst, cand, emit_mask, src_tile) = self._front_dense(
+                row_lo, row_hi, state, tile_gids)
+        else:
+            if active is None:
+                active = self._active_tiles(state)
+            (new_vals, mail_val, mail_flag, cur_lo, cur_hi, cur_val,
+             consumed_vec, edges_vec, consumed_per_tile, edges_per_tile,
+             dst, cand, emit_mask, src_tile) = self._front_compact(
+                row_lo, row_hi, state, chip_id, active, window)
+        vals = state["values"]
         owner = jnp.minimum(dst // Cd, self.Tg - 1)
 
-        stats = dict(edges_processed=jnp.sum(edges_per_tile),
-                     records_consumed=jnp.sum(consumed_per_tile),
+        # per-lane maxima/sums equal the dense per-tile ones: compacted
+        # lanes cover every tile with nonzero work, and the counts the
+        # window drops are exact zeros (max over non-negatives, sums)
+        stats = dict(edges_processed=jnp.sum(edges_vec),
+                     records_consumed=jnp.sum(consumed_vec),
                      compute_per_tile_max=jnp.max(
-                         consumed_per_tile * PU_OPS_PER_RECORD
-                         + edges_per_tile * PU_OPS_PER_EDGE),
+                         consumed_vec * PU_OPS_PER_RECORD
+                         + edges_vec * PU_OPS_PER_EDGE),
                      filtered_at_proxy=jnp.float32(0.0),
                      coalesced_at_proxy=jnp.float32(0.0),
                      cascade_combined=jnp.float32(0.0))
@@ -459,6 +698,21 @@ class DataLocalEngine:
                            .astype(jnp.int32))
             stats["sanity_violations"] = jnp.minimum(
                 bad, 2 ** 20).astype(jnp.float32)
+        if off is not None and pad_off_to is not None:
+            # pad the off-chip buffer with masked sentinels to the dense
+            # length so every compaction bucket returns identical shapes
+            # (masked rows are dropped at the exchange scatter; the live
+            # records keep their order, so delivery is bit-identical)
+            pad = int(pad_off_to) - off["dst"].shape[0]
+            if pad > 0:
+                off = dict(
+                    dst=jnp.concatenate(
+                        [off["dst"],
+                         jnp.full((pad,), self.Ngd, jnp.int32)]),
+                    val=jnp.concatenate(
+                        [off["val"], jnp.full((pad,), ident, jnp.float32)]),
+                    mask=jnp.concatenate(
+                        [off["mask"], jnp.zeros((pad,), jnp.bool_)]))
         return new_state, stats, off
 
     # ------------------------------------------------------- owner delivery
@@ -857,10 +1111,9 @@ class DataLocalEngine:
     # ------------------------------------------------------- chunked stepping
     def _chunk_step_one(self, st, fl):
         """One monolithic superstep as a (state, stats) pair — the scan
-        body unit of the chunked run loop."""
-        new_state, stats, _ = self._step(self.row_lo, self.row_hi, st,
-                                         jnp.int32(0), fl)
-        return new_state, stats
+        body unit of the chunked run loop (compaction-ladder dispatched,
+        like the per-step path)."""
+        return self._step_mono(st, fl)
 
     def _chunk_impl(self, state, flush, done, steps_left, *, length: int):
         """Scan ``length`` monolithic supersteps in one device dispatch
@@ -926,7 +1179,8 @@ class DataLocalEngine:
                                             account, observer=observer)
         else:
             progress = _ProgressReporter(self.app.name, progress_every,
-                                         sanitize=cfg.sanitize)
+                                         sanitize=cfg.sanitize,
+                                         tiles=self.T)
             fill = links["diameter"] * 0.5
             if self._stat_names is None:   # one abstract trace per engine
                 self._stat_names = _stat_keys(self._chunk_step_one, state,
@@ -1343,18 +1597,29 @@ class _ProgressReporter:
     ``progress.<app>.steps`` / ``.pending`` updated every chunk, counter
     ``progress.<app>.reports`` per printed line — so harnesses read it
     without scraping stdout; when the sanitizer is on, the line also
-    carries the cumulative ``sanity_violations`` count."""
+    carries the cumulative ``sanity_violations`` count.
 
-    def __init__(self, name: str, every: int, sanitize: bool = False):
+    Compacted runs (``EngineConfig.compaction > 1``) additionally feed
+    the ``engine.active_fraction`` gauge (mean active-tile fraction of
+    the latest chunk) and per-capacity ``engine.bucket_occupancy.<cap>``
+    counters (supersteps spent in each ladder rung) from the
+    ``active_tiles`` / ``bucket_cap`` telemetry stats the bucket switch
+    emits — they ride the same chunk stat fetch, zero extra syncs."""
+
+    def __init__(self, name: str, every: int, sanitize: bool = False,
+                 tiles: int = 0):
         self.name = name
         self.every = every
         self.sanitize = sanitize
+        self.tiles = tiles
         self._next = every
         self._violations = 0.0
         reg = default_registry()
         self._g_steps = reg.gauge(f"progress.{name}.steps")
         self._g_pending = reg.gauge(f"progress.{name}.pending")
         self._c_reports = reg.counter(f"progress.{name}.reports")
+        self._g_active = reg.gauge("engine.active_fraction")
+        self._bucket_counters: dict = {}
 
     def report(self, steps: int, stacked, n_act: int) -> None:
         if n_act == 0:
@@ -1362,6 +1627,20 @@ class _ProgressReporter:
         pending = float(stacked["pending"][n_act - 1])
         self._g_steps.set(steps)
         self._g_pending.set(pending)
+        act = stacked.get("active_tiles")
+        if act is not None and self.tiles:
+            self._g_active.set(
+                float(np.mean(act[:n_act])) / self.tiles)
+            caps, cnts = np.unique(
+                np.asarray(stacked["bucket_cap"][:n_act]),
+                return_counts=True)
+            for cap, cnt in zip(caps.tolist(), cnts.tolist()):
+                c = self._bucket_counters.get(int(cap))
+                if c is None:
+                    c = default_registry().counter(
+                        f"engine.bucket_occupancy.{int(cap)}")
+                    self._bucket_counters[int(cap)] = c
+                c.inc(float(cnt))
         if self.sanitize and "sanity_violations" in stacked:
             self._violations += float(
                 np.sum(stacked["sanity_violations"][:n_act]))
@@ -1434,6 +1713,56 @@ def _deliver_pallas(mail_val, mail_flag, dst, val, mask, owner, T, Nd,
     mf = mail_flag | (cnt > 0)
     per_tile = jnp.sum(cnt.reshape(T, Nd // T), axis=1)
     return mv, mf, per_tile
+
+
+def capacity_ladder(T: int, levels: int) -> tuple:
+    """Window-capacity ladder for active-set compaction: ``(T, T/4,
+    T/16, ...)`` — the dense window plus ``levels`` power-of-two rungs
+    (each a quarter of the previous, floored at 1 tile; rungs that no
+    longer shrink are dropped).  Descending, so ``bucket_index`` can
+    pick the smallest capacity that fits the active count."""
+    caps = [int(T)]
+    for k in range(1, max(int(levels), 0) + 1):
+        c = max(int(T) >> (2 * k), 1)
+        if c < caps[-1]:
+            caps.append(c)
+    return tuple(caps)
+
+
+def bucket_index(n_act, caps: tuple):
+    """Index of the smallest ladder capacity that holds ``n_act`` active
+    tiles (0 = the dense window; traced — ``n_act`` may be a device
+    scalar, so this is the on-device ``lax.switch`` selector)."""
+    idx = jnp.int32(0)
+    for j, c in enumerate(caps[1:], start=1):
+        idx = jnp.where(n_act <= c, jnp.int32(j), idx)
+    return idx
+
+
+def _compact_window(active, W: int, T: int):
+    """Stable compaction of the (T,) active mask into a W-slot window.
+
+    Returns (w_valid, w_rows, rows_drop): per-window-slot validity, the
+    source tile row each slot gathers (invalid slots clamp to T-1 — the
+    caller must mask their gathered work to zero), and the scatter-back
+    row index (invalid slots -> sentinel row T, for ``mode="drop"``).
+    The cumsum keeps active tiles in tile order, which is what makes
+    the compacted record stream order-identical to the dense one.
+    The slot->tile map is a searchsorted over the inclusive cumsum (the
+    j-th active tile is the first row where the cumsum reaches j+1), NOT
+    a T-row scatter and NOT an argsort: XLA CPU serializes indexed
+    scatters and gathers per row, so a T-row scatter here (~70us at
+    T=1024) costs more than the whole windowed front saves, and a
+    full-length stable sort is worse still.  The W-row scatter-backs the
+    callers do are fine — their row count shrinks with the bucket."""
+    csum = jnp.cumsum(active.astype(jnp.int32))
+    tile_map = jnp.searchsorted(
+        csum, jnp.arange(1, W + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+    w_valid = tile_map < T
+    w_rows = jnp.minimum(tile_map, T - 1)
+    rows_drop = jnp.where(w_valid, w_rows, T)
+    return w_valid, w_rows, rows_drop
 
 
 def _pad(a: np.ndarray, n: int, fill) -> np.ndarray:

@@ -52,6 +52,7 @@ once per chunk (``run(chunk=0)`` keeps the per-step dispatch).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional
 
@@ -65,7 +66,7 @@ from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
                            RunResult, _drain_chunked, _legacy_span, _pad,
                            _ProgressReporter, _sanitize_gate, _scan_steps,
-                           _stat_keys, chunk_cycles,
+                           _stat_keys, bucket_index, chunk_cycles,
                            superstep_counters, superstep_cycles)
 from ..core.netstats import MSG_BITS, SuperstepTrace, TrafficCounters
 from ..core.proxy import chip_local_proxy
@@ -220,7 +221,8 @@ def _aggregate(stats, recv, telemetry: bool = False, mesh=None):
         if k.startswith("tv_"):
             vecs[k] = v                       # (chips_local, tiles_local)
             continue
-        if k in ("compute_per_tile_max", "delivered_max_per_tile"):
+        if k in ("compute_per_tile_max", "delivered_max_per_tile",
+                 "bucket_cap"):
             agg[k] = pmax(jnp.max(v))
         else:
             agg[k] = psum(jnp.sum(v))
@@ -406,6 +408,12 @@ class DistributedEngine:
         per = mesh.per
         telemetry = self.cfg.telemetry
         multi = self.C > 1
+        ladder = kernel._ladder
+        # compacted buckets pad their off-chip buffers to the dense
+        # length, so all switch branches (and the double-buffer bank)
+        # share one shape
+        pad_off = (self._off_record_len()
+                   if multi and len(ladder) > 1 else None)
 
         def step(row_lo, row_hi, state, chip_ids, flush):
             if double_buffer:
@@ -413,9 +421,37 @@ class DistributedEngine:
                 # the same scatter, one superstep later (the mailbox is
                 # untouched in between), overlapping this compute
                 state = _fold_bank(state, is_min)
-            new_state, stats, off = jax.vmap(
-                kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
-                row_lo, row_hi, state, chip_ids, flush)
+            if len(ladder) > 1:
+                # per-device bucket selection: the switch index is the
+                # *unbatched* max over this device's chips, so exactly
+                # one pre-traced branch executes per device (a per-chip
+                # index under vmap would run every branch); flags merge
+                # eagerly under double_buffer, so the post-fold mask is
+                # the true pending signal
+                active = jax.vmap(kernel._active_tiles)(state)
+                n_act = jnp.sum(active.astype(jnp.int32), axis=1)
+                idx = bucket_index(jnp.max(n_act), ladder)
+
+                def branch(w):
+                    def run(st, act):
+                        return jax.vmap(
+                            functools.partial(kernel.chip_superstep,
+                                              window=w, pad_off_to=pad_off),
+                            in_axes=(0, 0, 0, 0, None, 0))(
+                            row_lo, row_hi, st, chip_ids, flush, act)
+                    return run
+
+                new_state, stats, off = jax.lax.switch(
+                    idx, [branch(None if j == 0 else cap)
+                          for j, cap in enumerate(ladder)], state, active)
+                stats = dict(
+                    stats, active_tiles=n_act.astype(jnp.float32),
+                    bucket_cap=jnp.full((per,), jnp.take(
+                        jnp.asarray(ladder, jnp.float32), idx)))
+            else:
+                new_state, stats, off = jax.vmap(
+                    kernel.chip_superstep, in_axes=(0, 0, 0, 0, None))(
+                    row_lo, row_hi, state, chip_ids, flush)
             if multi:
                 # board-level exchange: every chip gathers the full
                 # off-chip record stream and keeps what it owns
@@ -616,7 +652,8 @@ class DistributedEngine:
             chunk_fn = self._get_chunk_fn(K)
             progress = _ProgressReporter(f"{self.app.name}/{self.C}chips",
                                          progress_every,
-                                         sanitize=cfg.sanitize)
+                                         sanitize=cfg.sanitize,
+                                         tiles=self.C * self.Tl)
             fill = links["diameter"] * 0.5
             board_div = n_board_links * _off_pkg_bits_per_cycle(pkg)
             # stat layout of the packed scan rows (the vmapped step's agg

@@ -112,9 +112,23 @@ def analysis_cases():
     seg = jnp.asarray([0, 3, 3, 7, 1, 0], jnp.int32)
     val = jnp.arange(6, dtype=jnp.float32)
     mail = jnp.full((8,), jnp.inf, jnp.float32).at[1].set(0.5)
-    return [(f"deliver_fused:{c}",
-             functools.partial(deliver_fused, seg, val,
-                               jnp.zeros((8,), jnp.float32) if c == "add"
-                               else mail, c, block_r=4, block_s=8),
-             c)
-            for c in ("min", "add")]
+    # compacted segment window: the record stream the engine's
+    # active-set branches hand the kernel — shorter than the mailbox,
+    # with dropped-lane sentinels (-1) interleaved mid-stream, still
+    # spanning multiple record blocks so the revisit reduction is
+    # exercised at the compacted shape too
+    wseg = jnp.asarray([2, -1, 5, 2, -1, 1], jnp.int32)
+    wval = jnp.arange(6, dtype=jnp.float32) + 0.25
+    cases = [(f"deliver_fused:{c}",
+              functools.partial(deliver_fused, seg, val,
+                                jnp.zeros((8,), jnp.float32) if c == "add"
+                                else mail, c, block_r=4, block_s=8),
+              c)
+             for c in ("min", "add")]
+    cases += [(f"deliver_fused:compact:{c}",
+               functools.partial(deliver_fused, wseg, wval,
+                                 jnp.zeros((8,), jnp.float32) if c == "add"
+                                 else mail, c, block_r=4, block_s=8),
+               c)
+              for c in ("min", "add")]
+    return cases

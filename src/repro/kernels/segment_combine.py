@@ -92,8 +92,18 @@ def analysis_cases():
     pass must accept for commutative combines)."""
     seg = jnp.asarray([0, 3, 3, 7, 1, 0], jnp.int32)
     val = jnp.arange(6, dtype=jnp.float32)
-    return [(f"segment_combine:{c}",
-             functools.partial(segment_combine, seg, val, 8, c,
-                               block_r=4, block_s=8),
-             c)
-            for c in ("min", "add")]
+    # compacted segment window: shorter record stream with dropped-lane
+    # sentinels interleaved (what the engine's active-set compaction
+    # branches produce), still multi-block over the record dim
+    wseg = jnp.asarray([4, -1, 0, 4, -1, 6], jnp.int32)
+    wval = jnp.arange(6, dtype=jnp.float32) + 0.5
+    return ([(f"segment_combine:{c}",
+              functools.partial(segment_combine, seg, val, 8, c,
+                                block_r=4, block_s=8),
+              c)
+             for c in ("min", "add")]
+            + [(f"segment_combine:compact:{c}",
+                functools.partial(segment_combine, wseg, wval, 8, c,
+                                  block_r=4, block_s=8),
+                c)
+               for c in ("min", "add")])

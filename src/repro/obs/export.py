@@ -18,7 +18,11 @@ https://ui.perfetto.dev.  The trace has three process groups:
     was double-buffered (``SuperstepTrace.double_buffer``) the board
     track instead shows ``exchange k (overlap)`` spans drawn over the
     *next* superstep's compute window — the overlap the accumulation
-    rule credits.
+    rule credits.  Compacted runs (``EngineConfig.compaction > 1``)
+    add an ``active-set compaction`` counter track here: per-superstep
+    ``active_fraction`` (active tiles / grid tiles) and ``bucket_cap``
+    (the selected capacity-ladder rung) sampled from the chunk stat
+    rows — no extra host syncs.
   * **chip c (sim load)** (pids 10+c) — per-chip counter ("C") tracks of
     the telemetry load vectors (delivered / recv / edges / …) sampled at
     each superstep's simulated start time; monolithic runs group tiles
@@ -219,12 +223,44 @@ def _load_events(rec, starts: List[float]) -> List[dict]:
     return evs
 
 
+_TID_COMPACTION = 90      # counter track on the sim process
+
+
+def _compaction_events(rec, starts: List[float]) -> List[dict]:
+    """Active-set compaction counter ("C") tracks on the simulated
+    clock: ``active_fraction`` (active tiles / grid tiles) and
+    ``bucket_cap`` (the capacity-ladder rung the superstep ran in),
+    one sample per superstep.  Both come from the telemetry stats the
+    engine's bucket switch emits into the packed chunk stat row — they
+    ride the existing chunk fetch, so rendering them adds no host
+    syncs.  Empty (and absent from the trace) on dense runs."""
+    act = rec.stat_matrix("active_tiles")
+    if act.size == 0 or not starts:
+        return []
+    cap = rec.stat_matrix("bucket_cap")
+    tiles = rec.meta.tiles if rec.meta is not None else 0
+    frac = act / tiles if tiles else act
+    evs = [_meta_event(PID_SIM, "", tid=_TID_COMPACTION,
+                       thread="active-set compaction")]
+    s_max = min(len(starts), act.shape[0])
+    for s in range(s_max):
+        evs.append({"ph": "C", "name": "active_fraction", "pid": PID_SIM,
+                    "tid": _TID_COMPACTION, "ts": starts[s],
+                    "args": {"active_fraction": float(frac[s])}})
+        if s < cap.shape[0]:
+            evs.append({"ph": "C", "name": "bucket_cap", "pid": PID_SIM,
+                        "tid": _TID_COMPACTION, "ts": starts[s],
+                        "args": {"bucket_cap": float(cap[s])}})
+    return evs
+
+
 def to_trace_events(rec) -> List[dict]:
     """All trace events of a recorded run (see module docstring)."""
     evs = _wall_events(rec)
     sim_evs, starts = _sim_events(rec)
     evs.extend(sim_evs)
     evs.extend(_load_events(rec, starts))
+    evs.extend(_compaction_events(rec, starts))
     return evs
 
 

@@ -1,0 +1,197 @@
+"""Active-set compaction (``EngineConfig.compaction``): the shape-
+bucketed sparse-superstep path through the engine hot loop.
+
+Acceptance properties:
+  * the capacity ladder and on-device bucket selector honor the exact
+    boundaries — an active count *at* a capacity picks that rung, one
+    over spills to the next larger one;
+  * ``_compact_window`` is a stable (tile-order-preserving) compaction
+    whose scatter-back rows drop exactly the invalid lanes;
+  * compacted runs are **bit-identical** to dense — same final values,
+    TrafficCounters, SuperstepTrace and superstep count — for all six
+    apps, monolithic and 4-chip, per-step (chunk=0) and chunked
+    (chunk=8) loops, with and without the double-buffered exchange, on
+    the Pallas delivery backend, and under reactivation churn (SSSP at
+    ``oq_cap=1``, where tiles re-enter the active set every superstep);
+  * the dense oracle stays the default: ``compaction=0`` runs carry no
+    bucket telemetry stats.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import _compact_window, bucket_index, capacity_ladder
+from repro.core.tilegrid import square_grid
+from repro.graph import apps, rmat_edges
+from repro.graph.rmat import histogram_input
+
+GRID = square_grid(16)
+ALL_APPS = ("bfs", "sssp", "wcc", "pagerank", "spmv", "histo")
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_edges(8, edge_factor=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def root(g):
+    return int(np.argmax(g.out_degree()))
+
+
+def _run(name, g, root, chunk, chips=0, **extra):
+    """One full run per app (Table-II proxy policy, as test_obs)."""
+    if chips:
+        extra["chips"] = chips
+    if name == "bfs":
+        return apps.bfs(g, root, GRID, oq_cap=8, run_chunk=chunk, **extra)
+    if name == "sssp":
+        px = apps.table2_proxy(GRID, "sssp")
+        return apps.sssp(g, root, GRID, proxy=px, oq_cap=8,
+                         run_chunk=chunk, **extra)
+    if name == "wcc":
+        px = apps.table2_proxy(GRID, "wcc")
+        return apps.wcc(g, GRID, proxy=px, oq_cap=8, run_chunk=chunk,
+                        **extra)
+    if name == "pagerank":
+        px = apps.table2_proxy(GRID, "pagerank")
+        return apps.pagerank(g, GRID, proxy=px, epochs=2, oq_cap=8,
+                             run_chunk=chunk, **extra)
+    if name == "spmv":
+        x = np.random.default_rng(3).random(g.n_cols).astype(np.float32)
+        px = apps.table2_proxy(GRID, "spmv", cascade_levels=1)
+        return apps.spmv(g, x, GRID, proxy=px, oq_cap=8, run_chunk=chunk,
+                         **extra)
+    if name == "histo":
+        bins = g.n_rows // 8
+        hv = histogram_input(g, bins)
+        px = apps.table2_proxy(GRID, "histo")
+        return apps.histogram(hv, bins, GRID, proxy=px, oq_cap=8,
+                              run_chunk=chunk, **extra)
+    raise ValueError(name)
+
+
+def _assert_bit_identical(dense, comp, label):
+    assert np.array_equal(dense.values, comp.values), f"{label}: values"
+    dd, dc = dense.run.counters.as_dict(), comp.run.counters.as_dict()
+    assert dd == dc, {k: (dd[k], dc[k]) for k in dd if dd[k] != dc[k]}
+    assert dense.run.trace.to_dict() == comp.run.trace.to_dict(), \
+        f"{label}: trace"
+    assert dense.run.supersteps == comp.run.supersteps, f"{label}: steps"
+
+
+# ----------------------------------------------------- ladder boundaries
+def test_capacity_ladder_shape():
+    assert capacity_ladder(1024, 3) == (1024, 256, 64, 16)
+    assert capacity_ladder(16, 2) == (16, 4, 1)
+    # rungs floor at 1 and non-shrinking rungs are dropped
+    assert capacity_ladder(4, 5) == (4, 1)
+    assert capacity_ladder(1, 3) == (1,)
+    # levels <= 0: dense only
+    assert capacity_ladder(256, 0) == (256,)
+
+
+def test_bucket_index_exact_boundaries():
+    """An active count exactly at a capacity picks that rung; one over
+    spills to the next larger rung — for every rung of the ladder."""
+    ladder = capacity_ladder(1024, 3)          # (1024, 256, 64, 16)
+    for j, cap in enumerate(ladder):
+        assert int(bucket_index(jnp.int32(cap), ladder)) == j, cap
+        if j > 0:
+            assert int(bucket_index(jnp.int32(cap + 1), ladder)) == j - 1
+    # empty active set sits in the smallest window
+    assert int(bucket_index(jnp.int32(0), ladder)) == len(ladder) - 1
+
+
+def test_compact_window_stable_roundtrip():
+    T, W = 64, 16
+    rng = np.random.default_rng(7)
+    for n in (0, 1, W - 1, W, 5, 11):
+        act = np.zeros(T, bool)
+        act[np.sort(rng.choice(T, n, replace=False))] = True
+        w_valid, w_rows, rows_drop = (np.asarray(a) for a in
+                                      _compact_window(jnp.asarray(act),
+                                                      W, T))
+        assert int(w_valid.sum()) == n
+        # stable: window slots enumerate active tiles in tile order
+        assert w_rows[w_valid].tolist() == np.flatnonzero(act).tolist()
+        # invalid lanes clamp the gather row and drop the scatter row
+        assert np.all(w_rows[~w_valid] == T - 1)
+        assert np.all(rows_drop[~w_valid] == T)
+        # scatter-back via rows_drop touches exactly the active rows
+        hit = np.zeros(T, np.int32)
+        np.add.at(hit, rows_drop[w_valid], 1)
+        assert np.array_equal(hit.astype(bool), act)
+
+
+def test_compact_window_overfull_truncates():
+    """More active tiles than slots: the window takes the first W in
+    tile order (the engine never selects such a bucket — bucket_index
+    spills to a larger rung — but the primitive must stay sane)."""
+    T, W = 32, 4
+    act = np.ones(T, bool)
+    w_valid, w_rows, _ = (np.asarray(a) for a in
+                          _compact_window(jnp.asarray(act), W, T))
+    assert w_valid.all()
+    assert w_rows.tolist() == [0, 1, 2, 3]
+
+
+# ------------------------------------------------- whole-run bit-identity
+@pytest.mark.parametrize("chunk", (0, 8))
+@pytest.mark.parametrize("name", ALL_APPS)
+def test_mono_bit_identical(name, chunk, g, root):
+    dense = _run(name, g, root, chunk)
+    comp = _run(name, g, root, chunk, compaction=2)
+    _assert_bit_identical(dense, comp, f"{name}/mono/chunk{chunk}")
+
+
+@pytest.mark.parametrize("chunk,db", ((0, False), (8, False), (8, True)))
+@pytest.mark.parametrize("name", ALL_APPS)
+def test_4chip_bit_identical(name, chunk, db, g, root):
+    dense = _run(name, g, root, chunk, chips=4, double_buffer=db)
+    comp = _run(name, g, root, chunk, chips=4, double_buffer=db,
+                compaction=2)
+    _assert_bit_identical(dense, comp,
+                          f"{name}/4chip/chunk{chunk}/db{int(db)}")
+
+
+def test_4chip_db_chunk0_bit_identical(g, root):
+    """The remaining (chunk=0, double_buffer) corner on one min and one
+    add app — the per-step loop drives the deferred exchange directly."""
+    for name in ("sssp", "histo"):
+        dense = _run(name, g, root, 0, chips=4, double_buffer=True)
+        comp = _run(name, g, root, 0, chips=4, double_buffer=True,
+                    compaction=2)
+        _assert_bit_identical(dense, comp, f"{name}/4chip/chunk0/db1")
+
+
+def test_reactivation_churn_bit_identical(g, root):
+    """SSSP at oq_cap=1: cursors reopen and tiles re-enter the active
+    set every superstep (maximum bucket churn — the selector crosses
+    rung boundaries many times per run), deepest ladder."""
+    px = apps.table2_proxy(GRID, "sssp")
+    dense = apps.sssp(g, root, GRID, proxy=px, oq_cap=1, run_chunk=8)
+    comp = apps.sssp(g, root, GRID, proxy=px, oq_cap=1, run_chunk=8,
+                     compaction=3)
+    _assert_bit_identical(dense, comp, "sssp/churn/c3")
+
+
+@pytest.mark.parametrize("name", ("bfs", "sssp"))
+def test_pallas_backend_bit_identical(name, g, root):
+    dense = _run(name, g, root, 8, backend="pallas")
+    comp = _run(name, g, root, 8, backend="pallas", compaction=2)
+    _assert_bit_identical(dense, comp, f"{name}/pallas")
+
+
+def test_dense_default_has_no_bucket_stats(g, root):
+    """compaction=0 (the default) must stay the dense oracle: no bucket
+    switch, no active-set telemetry stats in the chunk rows."""
+    from repro import obs
+    rec = obs.TimelineRecorder()
+    _run("bfs", g, root, 8, observer=rec)
+    keys = {k for s in rec.spans for k in s.stats}
+    assert "active_tiles" not in keys and "bucket_cap" not in keys
+    rec2 = obs.TimelineRecorder()
+    _run("bfs", g, root, 8, observer=rec2, compaction=2)
+    keys2 = {k for s in rec2.spans for k in s.stats}
+    assert {"active_tiles", "bucket_cap"} <= keys2

@@ -170,6 +170,48 @@ def test_trace_has_span_per_chunk_per_track(bfs4_rec):
     assert pids == {obs_export.PID_CHIP0 + c for c in range(4)}
 
 
+# --------------------------------------------- compaction telemetry track
+def test_compaction_track_schema_and_metrics(g, root, bfs4_rec):
+    """Compacted runs emit the active-set counter track (one
+    active_fraction + bucket_cap sample per superstep, on the sim
+    process) plus the engine.active_fraction gauge and per-capacity
+    bucket-occupancy counters — all riding the existing chunk stat
+    fetch.  Dense runs emit none of it."""
+    reg = default_registry()
+    before = dict(reg.snapshot()["counters"])
+    rec = obs.TimelineRecorder()
+    r = _run("bfs", g, root, telemetry=True, observer=rec, compaction=2)
+    evs = obs.to_trace_events(rec)
+    comp = [e for e in evs if e["ph"] == "C"
+            and e["pid"] == obs_export.PID_SIM
+            and e["tid"] == obs_export._TID_COMPACTION]
+    fracs = [e for e in comp if e["name"] == "active_fraction"]
+    caps = [e for e in comp if e["name"] == "bucket_cap"]
+    assert len(fracs) == r.run.supersteps
+    assert len(caps) == r.run.supersteps
+    assert all(0.0 <= e["args"]["active_fraction"] <= 1.0 for e in fracs)
+    from repro.core.engine import capacity_ladder
+    ladder = set(map(float, capacity_ladder(GRID.ny * GRID.nx, 2)))
+    assert {e["args"]["bucket_cap"] for e in caps} <= ladder
+    for e in comp:                       # schema: counter-track events
+        assert {"ph", "pid", "tid", "name", "ts", "args"} <= set(e)
+        assert e["ts"] >= 0.0
+    snap = reg.snapshot()
+    assert 0.0 <= snap["gauges"]["engine.active_fraction"] <= 1.0
+    occ = {k: v - before.get(k, 0.0)
+           for k, v in snap["counters"].items()
+           if k.startswith("engine.bucket_occupancy.")}
+    occ = {k: v for k, v in occ.items() if v}
+    assert occ, "no bucket-occupancy counters incremented"
+    assert {float(k.rsplit(".", 1)[1]) for k in occ} <= ladder
+    assert sum(occ.values()) == r.run.supersteps
+    # dense run (module fixture): no compaction track at all
+    dense_rec, _ = bfs4_rec
+    dense = [e for e in obs.to_trace_events(dense_rec)
+             if e.get("tid") == obs_export._TID_COMPACTION]
+    assert dense == []
+
+
 # ------------------------------------------------------- imbalance metrics
 def _gini_oracle(x):
     """O(n²) mean-absolute-difference definition."""
