@@ -1,0 +1,179 @@
+"""Fault-tolerance recovery benchmark: chip loss, rollback, re-shard.
+
+Each row runs one app on the distributed engine twice — unfailed, then
+with a :class:`repro.runtime.fault.FaultInjector` dropping a chip
+mid-run — with superstep checkpointing on a cadence
+(``EngineConfig.ckpt_every_supersteps``).  Recorded per row:
+
+  * ``recovery_equal`` — the PR's core guarantee, asserted: final
+    values, TrafficCounters, superstep count and every SuperstepTrace
+    vector of the recovered run are **bit-identical** to the unfailed
+    run's.
+  * ``reprice_ratio`` — ``costmodel.trace_time_s`` of the faulted
+    run's trace divided by its measured ``time_s``.  Exactly 1.0: the
+    recovery overhead legs (checkpoint writes, the discarded replay
+    window, the re-shard restore) are priced from
+    ``trace.recovery_events`` with the same shared helpers the run
+    loop's separate overhead accumulator used.
+  * ``overhead_cycles`` / ``overhead_frac`` — the simulated cost of
+    fault tolerance (faulted minus unfailed cycles), deterministic f64.
+  * ``recovery_wall_s`` — host wall-clock the failure cost (faulted
+    minus unfailed run wall), dominated by the mesh rebuild/recompile;
+    noisy on CI, gated ratio-only.
+  * ``n_checkpoints`` / ``n_rollbacks`` / ``ckpt_image_bits`` — event
+    log shape.
+
+Rows sweep checkpoint cadence and chip count (4- and 16-chip
+partitions of a 64-tile grid), plus one legacy-dispatch (``chunk=0``)
+row.  Emits BENCH_recovery.json; --smoke runs two tiny configs,
+asserts the bit-identity and exact-reprice contracts, and still writes
+the JSON (scripts/bench_check.py gates it against the committed copy).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from common import row, timed  # noqa: F401  (path bootstrap)
+
+import numpy as np
+
+from repro.core.costmodel import trace_time_s
+from repro.core.netstats import SuperstepTrace
+from repro.core.tilegrid import square_grid
+from repro.graph import rmat_edges
+from repro.graph.apps import engine_and_state
+from repro.runtime import FaultInjector
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_recovery.json")
+
+# (app, scale, tiles, chips, oq_cap, chunk, ckpt_every, at_superstep, chip)
+CONFIGS = [
+    ("bfs", 9, 64, 4, 16, 8, 2, 5, 1),
+    ("bfs", 9, 64, 4, 16, 8, 5, 7, 3),
+    ("bfs", 9, 64, 16, 16, 8, 2, 5, 9),
+    ("bfs", 9, 64, 16, 16, 8, 5, 7, 14),
+    ("bfs", 9, 64, 4, 16, 0, 3, 5, 2),      # legacy per-step dispatch
+    ("sssp", 9, 64, 4, 16, 8, 3, 5, 0),
+    ("pagerank", 9, 64, 4, 16, 8, 3, 4, 2),
+]
+SMOKE_CONFIGS = [
+    ("bfs", 8, 16, 4, 16, 8, 3, 4, 1),
+    ("bfs", 8, 16, 4, 16, 0, 3, 4, 2),
+]
+
+
+def _engines(app, g, grid, chips, oq_cap, ckpt_every):
+    kw = dict(chips=chips, oq_cap=oq_cap,
+              ckpt_every_supersteps=ckpt_every)
+    if app in ("bfs", "sssp"):
+        kw["root"] = int(np.argmax(g.out_degree()))
+    eng, state, _ = engine_and_state(app, g, grid, **kw)
+    return eng, state
+
+
+def bench_recovery(app, scale, tiles, chips, oq_cap, chunk, ckpt_every,
+                   at_superstep, chip) -> dict:
+    g = rmat_edges(scale, edge_factor=8, seed=1)
+    grid = square_grid(tiles)
+
+    eng, state = _engines(app, g, grid, chips, oq_cap, ckpt_every)
+    t0 = time.time()
+    base_state, base = eng.run(dict(state), chunk=chunk)
+    wall_unfailed = time.time() - t0
+
+    eng2, state2 = _engines(app, g, grid, chips, oq_cap, ckpt_every)
+    inj = FaultInjector(at_superstep=at_superstep, chip=chip)
+    t0 = time.time()
+    f_state, f = eng2.run(dict(state2), chunk=chunk, fault_injector=inj)
+    wall_faulted = time.time() - t0
+    assert inj.fired, (app, at_superstep, base.supersteps)
+
+    recovery_equal = bool(
+        np.array_equal(base_state["values"], f_state["values"])
+        and base.counters.as_dict() == f.counters.as_dict()
+        and base.supersteps == f.supersteps
+        and all(getattr(base.trace, k) == getattr(f.trace, k)
+                for k in SuperstepTrace._VECTOR_FIELDS))
+    assert recovery_equal, f"recovery not bit-identical: {app}"
+    reprice = trace_time_s(eng2.cfg.pkg, grid, f.trace) / f.time_s
+    events = f.trace.recovery_events
+    ckpts = [e for e in events if e["kind"] == "checkpoint"]
+    r = dict(app=app, tiles=tiles, scale=scale, chips=chips,
+             oq_cap=oq_cap, chunk=chunk, ckpt_every=ckpt_every,
+             at_superstep=at_superstep, lost_chip=chip,
+             supersteps=int(base.supersteps),
+             recovery_equal=recovery_equal,
+             reprice_ratio=float(reprice),
+             overhead_cycles=float(f.cycles - base.cycles),
+             overhead_frac=float((f.cycles - base.cycles)
+                                 / max(base.cycles, 1e-12)),
+             wall_s_unfailed=wall_unfailed, wall_s_faulted=wall_faulted,
+             recovery_wall_s=max(wall_faulted - wall_unfailed, 0.0),
+             n_checkpoints=len(ckpts),
+             n_rollbacks=sum(1 for e in events
+                             if e["kind"] == "rollback"),
+             ckpt_image_bits=float(ckpts[0]["bits"]) if ckpts else 0.0)
+    print(f"# {app}/{chips}chips/chunk{chunk}/every{ckpt_every}: "
+          f"steps={r['supersteps']} equal={recovery_equal} "
+          f"reprice={reprice!r} overhead={r['overhead_frac']*100:.2f}% "
+          f"recovery_wall={r['recovery_wall_s']*1e3:.0f}ms", flush=True)
+    return r
+
+
+def run(small: bool = True, out_path: str = DEFAULT_OUT) -> list:
+    # smoke rows ride along so the committed baseline contains the rows
+    # CI regenerates (bench_check compares the smoke subset by row key)
+    rows = [bench_recovery(*c) for c in CONFIGS + SMOKE_CONFIGS]
+    _write(rows, out_path)
+    return rows
+
+
+def smoke(out_path: str = DEFAULT_OUT) -> None:
+    """CI gate: tiny configs, asserts the recovery contracts, writes
+    the JSON artifact."""
+    rows = [bench_recovery(*c) for c in SMOKE_CONFIGS]
+    for r in rows:
+        assert r["recovery_equal"]
+        assert r["reprice_ratio"] == 1.0, r["reprice_ratio"]
+        assert r["n_rollbacks"] >= 1
+    _write(rows, out_path)
+    print(f"# smoke OK -> {out_path}")
+
+
+def _write(rows: list, out_path: str) -> None:
+    payload = dict(
+        benchmark="recovery",
+        description="chip-loss recovery: superstep checkpoint/rollback "
+                    "+ re-shard onto survivors; recovered runs are "
+                    "bit-identical and reprice exactly",
+        rows=rows,
+        all_recovery_equal=all(r["recovery_equal"] for r in rows),
+        all_reprice_exact=all(r["reprice_ratio"] == 1.0 for r in rows),
+        max_overhead_frac=max(r["overhead_frac"] for r in rows),
+        note="overhead_cycles/reprice_ratio are deterministic f64 "
+             "(simulated BSP time); recovery_wall_s is host wall clock "
+             "dominated by the post-loss mesh rebuild + recompile and "
+             "is gated ratio-only.",
+    )
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out_path} (max overhead "
+          f"{payload['max_overhead_frac']*100:.2f}%)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs + contract asserts")
+    ap.add_argument("--full", action="store_true",
+                    help="(alias of the default row set)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.out)
+    else:
+        run(small=not args.full, out_path=args.out)

@@ -31,10 +31,22 @@ baseline with per-field tolerances:
     (``host_syncs_compacted``) are gated exactly.
 
 Rows are matched on (app, tiles, scale, oq_cap, proxy, chunk, chips,
-devices, compaction) — the trailing three are absent from rows that
-predate their axes; a baseline row missing from the fresh run is a
+devices, compaction, ckpt_every) — trailing fields are absent from rows
+that predate their axes; a baseline row missing from the fresh run is a
 regression.  Exits nonzero
 on any regression and writes a markdown report for the CI artifact.
+
+BENCH_recovery.json (the fault-tolerance benchmark) is gated with the
+same machinery when the committed baseline exists:
+
+  * ``recovery_equal`` (bit-identical recovered run) must stay true and
+    ``reprice_ratio`` must stay **exactly** equal (1.0 in the committed
+    baseline: the trace replay re-derives the faulted run's time to the
+    bit) — plus exact ``supersteps`` / ``n_checkpoints`` /
+    ``n_rollbacks`` and 1e-6-relative ``overhead_cycles``;
+  * ``recovery_wall_s`` (host wall clock of the loss: mesh rebuild +
+    recompile + replay) is gated ratio-only — fresh must stay under
+    ``--max-wall-ratio`` (default 4x) of the committed value.
 
 Usage:
   python scripts/bench_check.py                  # re-run + compare
@@ -51,14 +63,18 @@ import tempfile
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(REPO, "BENCH_engine.json")
+RECOVERY_BASELINE = os.path.join(REPO, "BENCH_recovery.json")
 
 EXACT_FIELDS = ("supersteps", "host_syncs_legacy", "host_syncs_chunked",
-                "host_syncs_compacted", "mesh_devices")
+                "host_syncs_compacted", "mesh_devices", "reprice_ratio",
+                "n_checkpoints", "n_rollbacks")
 TRUE_FLAGS = ("counters_equal", "trace_equal", "values_equal",
-              "compaction_equal")
-SIM_FIELDS = ("sim_time_s", "sim_time_s_db")
+              "compaction_equal", "recovery_equal")
+SIM_FIELDS = ("sim_time_s", "sim_time_s_db", "overhead_cycles")
+# wall-clock fields gated ratio-only (fresh <= base * max_wall_ratio)
+WALL_RATIO_FIELDS = ("recovery_wall_s",)
 KEY_FIELDS = ("app", "tiles", "scale", "oq_cap", "proxy", "chunk",
-              "chips", "devices", "compaction")
+              "chips", "devices", "compaction", "ckpt_every")
 # wall-clock speedup collapse fraction, scaled per forced device count
 # (multi-device CPU runs are the noisiest rows)
 _DEVICE_FRAC = {2: 0.6, 4: 0.4}
@@ -87,18 +103,38 @@ def _generate(out_path: str) -> None:
     engine_throughput.run(small=True, out_path=out_path)
 
 
+def _generate_recovery(out_path: str) -> None:
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import recovery
+    recovery.smoke(out_path)
+
+
 def compare(baseline: dict, fresh: dict, *, min_frac: float = 0.25,
-            sim_rel_tol: float = 1e-6):
-    """Returns (regressions, notes): lists of human-readable strings."""
+            sim_rel_tol: float = 1e-6, max_wall_ratio: float = 4.0,
+            allow_missing: bool = False):
+    """Returns (regressions, notes): lists of human-readable strings.
+
+    ``allow_missing=True`` downgrades baseline rows absent from the
+    fresh run to notes — used for the recovery gate, where CI
+    regenerates only the smoke subset of the committed rows — but at
+    least one baseline row must still match, else the gate is vacuous
+    and that itself is a regression.
+    """
     regressions, notes = [], []
+    matched = 0
     fresh_rows = {_key(r): r for r in fresh.get("rows", [])}
     for brow in baseline.get("rows", []):
         k = _key(brow)
         label = "/".join(str(v) for v in k)
         frow = fresh_rows.pop(k, None)
         if frow is None:
-            regressions.append(f"{label}: row missing from fresh run")
+            if allow_missing:
+                notes.append(f"{label}: not re-run (baseline-only row)")
+            else:
+                regressions.append(f"{label}: row missing from fresh run")
             continue
+        matched += 1
         for f in EXACT_FIELDS:
             if f in brow and frow.get(f) != brow.get(f):
                 regressions.append(
@@ -114,6 +150,18 @@ def compare(baseline: dict, fresh: dict, *, min_frac: float = 0.25,
                 regressions.append(
                     f"{label}: {f} drifted {b_sim:g} -> {f_sim:g} "
                     f"(rel tol {sim_rel_tol:g})")
+        for f in WALL_RATIO_FIELDS:
+            if f not in brow:
+                continue
+            b_w, f_w = float(brow.get(f, 0.0)), float(frow.get(f, 0.0))
+            # 1s floor so near-zero baselines don't make the gate flaky
+            if f_w > max(b_w, 1.0) * max_wall_ratio:
+                regressions.append(
+                    f"{label}: {f} blew up {b_w:.2f}s -> {f_w:.2f}s "
+                    f"(> {max_wall_ratio:g}x baseline)")
+            elif f_w > b_w:
+                notes.append(f"{label}: {f} {b_w:.2f}s -> {f_w:.2f}s "
+                             f"(within {max_wall_ratio:g}x wall ratio)")
         frac = _min_frac_for(brow, min_frac)
         for sp in ("speedup", "speedup_compaction"):
             if sp not in brow:
@@ -129,6 +177,10 @@ def compare(baseline: dict, fresh: dict, *, min_frac: float = 0.25,
     for k in fresh_rows:
         notes.append("/".join(str(v) for v in k)
                      + ": new row not in baseline")
+    if allow_missing and matched == 0:
+        regressions.append(
+            "no baseline rows matched the fresh run (vacuous gate — "
+            "row keys drifted?)")
     return regressions, notes
 
 
@@ -154,8 +206,18 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", default=None,
                     help="pre-generated fresh BENCH_engine.json "
                          "(default: re-run the benchmark)")
+    ap.add_argument("--recovery-baseline", default=RECOVERY_BASELINE)
+    ap.add_argument("--fresh-recovery", default=None,
+                    help="pre-generated fresh BENCH_recovery.json "
+                         "(default: re-run the recovery smoke)")
+    ap.add_argument("--recovery-only", action="store_true",
+                    help="gate only BENCH_recovery.json (skip the "
+                         "engine-throughput re-run)")
     ap.add_argument("--min-speedup-frac", type=float, default=0.25)
     ap.add_argument("--sim-rel-tol", type=float, default=1e-6)
+    ap.add_argument("--max-wall-ratio", type=float, default=4.0,
+                    help="recovery_wall_s collapse factor (wall clock; "
+                         "ratio-only gate)")
     ap.add_argument("--report", default=None,
                     help="write a markdown report here")
     ap.add_argument("--ci", action="store_true",
@@ -164,15 +226,42 @@ def main(argv=None) -> int:
                          "workflow invocation is self-describing)")
     args = ap.parse_args(argv)
 
-    fresh_path = args.fresh
-    if fresh_path is None:
-        fresh_path = os.path.join(tempfile.mkdtemp(prefix="bench_check_"),
-                                  "BENCH_engine.json")
-        _generate(fresh_path)
-    regressions, notes = compare(
-        _load(args.baseline), _load(fresh_path),
-        min_frac=args.min_speedup_frac, sim_rel_tol=args.sim_rel_tol)
-    report = to_markdown(regressions, notes, args.baseline, fresh_path)
+    regressions, notes = [], []
+    sections = []
+    if not args.recovery_only:
+        fresh_path = args.fresh
+        if fresh_path is None:
+            fresh_path = os.path.join(
+                tempfile.mkdtemp(prefix="bench_check_"),
+                "BENCH_engine.json")
+            _generate(fresh_path)
+        r, n = compare(
+            _load(args.baseline), _load(fresh_path),
+            min_frac=args.min_speedup_frac, sim_rel_tol=args.sim_rel_tol)
+        regressions += r
+        notes += n
+        sections.append((args.baseline, fresh_path))
+    if os.path.exists(args.recovery_baseline):
+        fresh_rec = args.fresh_recovery
+        if fresh_rec is None:
+            fresh_rec = os.path.join(
+                tempfile.mkdtemp(prefix="bench_check_rec_"),
+                "BENCH_recovery.json")
+            _generate_recovery(fresh_rec)
+        r, n = compare(
+            _load(args.recovery_baseline), _load(fresh_rec),
+            min_frac=args.min_speedup_frac, sim_rel_tol=args.sim_rel_tol,
+            max_wall_ratio=args.max_wall_ratio, allow_missing=True)
+        regressions += r
+        notes += n
+        sections.append((args.recovery_baseline, fresh_rec))
+    elif args.recovery_only:
+        regressions.append(
+            f"--recovery-only but no baseline at {args.recovery_baseline}")
+    report = to_markdown(
+        regressions, notes,
+        "; ".join(b for b, _ in sections) or args.recovery_baseline,
+        "; ".join(f for _, f in sections) or "(none)")
     print(report)
     if args.report:
         os.makedirs(os.path.dirname(os.path.abspath(args.report)),

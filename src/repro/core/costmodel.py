@@ -413,6 +413,8 @@ def _trace_from_peak(peak) -> tuple:
     trace["chips_y"] = int(d.get("chips_y", 1))
     trace["chips_x"] = int(d.get("chips_x", 1))
     trace["double_buffer"] = bool(d.get("double_buffer", False))
+    trace["recovery_events"] = [dict(ev)
+                                for ev in d.get("recovery_events", ())]
     hbm = vec("hbm_bits") if "hbm_bits" in d else None
     return trace, hbm
 
@@ -460,8 +462,12 @@ def _board_links_for(cfg: PackageConfig, td) -> int:
     return int(td["board_links"])
 
 
-def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
-                         mem_bits_hbm: float) -> float:
+def _parsed_terms(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
+                  mem_bits_hbm: float):
+    """Per-superstep level terms + accounting constants of a parsed trace
+    dict — the shared front half of the full replay and the
+    recovery-window replay (so a faulted run's discarded-work pricing
+    cannot drift from its base replay)."""
     if hbm_bits is None:
         # Apportion the run's total HBM miss traffic across supersteps
         # proportionally to touched dataset bits.
@@ -476,14 +482,104 @@ def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
                                         mem_bits_hbm / max(len(touched), 1))
     links = link_provisioning(grid, cfg)
     dy, dx = grid.dies
+    blinks = _board_links_for(cfg, td)
     terms = step_cycle_terms(
         cfg, links, compute_ops=td["compute_ops"],
         intra_bits=td["intra_bits"], die_bits=td["die_bits"],
         pkg_bits=td["pkg_bits"], endpoint_bits=td["endpoint_bits"],
         hbm_bits=hbm_bits, off_chip_bits=td["off_chip_bits"],
-        board_links=_board_links_for(cfg, td), n_dies=dy * dx)
+        board_links=blinks, n_dies=dy * dx)
     io_lat = 2.0 * IO_DIE_RXTX_LAT_NS * CLOCK_GHZ
     fill = links["diameter"] * 0.5
+    return terms, io_lat, fill, blinks
+
+
+def _window_cycles(td, terms, io_lat: float, fill: float,
+                   lo: int, hi: int) -> float:
+    """Replay cycles of supersteps ``[lo, hi)`` only — the discarded-work
+    window of a rollback event.  Uses the exact per-step rule of the full
+    replay below (sync or double-buffered), restricted to the window; in
+    double-buffer mode the window's first charged step pays the exchange
+    of the last charged step *before* the window, which is precisely the
+    ``prev_exch`` the run loop restores from its checkpoint snapshot."""
+    if td.get("double_buffer"):
+        core = terms["compute"]
+        for name in STEP_CYCLE_LEVELS[1:]:
+            if name != "board" and name in terms:
+                core = np.maximum(core, terms[name])
+        board = terms["board"]
+        exch = board + io_lat * (td["off_chip_msgs"] > 0)
+        charged = (core > 0) | (board > 0) | (td["pending"] > 0)
+        ce, ee = core[charged], exch[charged]
+        prev = np.concatenate(([0.0], ee[:-1]))
+        pos = np.flatnonzero(charged)
+        sel = (pos >= lo) & (pos < hi)
+        return (float(np.sum(np.maximum(ce, prev)[sel]))
+                + float(np.sum(sel)) * fill)
+    t = terms["compute"]
+    for name in STEP_CYCLE_LEVELS[1:]:
+        if name in terms:
+            t = np.maximum(t, terms[name])
+    charged = (t > 0) | (td["pending"] > 0)
+    idx = np.arange(t.shape[0])
+    w = charged & (idx >= lo) & (idx < hi)
+    cycles = float(np.sum(t[w]))
+    cycles += float(np.sum(w)) * fill
+    cycles += float(np.sum(w & (td["off_chip_msgs"] > 0))) * io_lat
+    return cycles
+
+
+def checkpoint_leg_cycles(cfg: PackageConfig, bits: float,
+                          board_links: int) -> float:
+    """Cycles to stream a ``bits``-sized checkpoint image over the
+    provisioned board links (checkpoint write, restore and
+    re-shard-onto-survivors all move the same image; the serialization
+    matches the BSP board leg).  The single formula the distributed run
+    loop's fault-tolerance accounting and the trace replay share — so
+    re-pricing a faulted run under its own config reproduces its
+    measured time exactly."""
+    return float(bits) / (max(int(board_links), 1)
+                          * _off_pkg_bits_per_cycle(cfg))
+
+
+def recovery_waste_cycles(cfg: PackageConfig, grid: TileGrid, trace,
+                          lo: int, hi: int) -> float:
+    """Cycles the run loop spent executing supersteps ``[lo, hi)`` — the
+    work a rollback to checkpoint ``lo`` after failing at ``hi``
+    discards.  The run loop calls this at rollback time (its trace then
+    holds rows ``[0, hi)``); the replay recomputes it from the final
+    trace, whose ``[lo, hi)`` rows are bit-identical because the resumed
+    run re-records them — both sides therefore add the exact same
+    float."""
+    td, hbm_bits = _trace_from_peak(trace)
+    if td is None:
+        return 0.0
+    terms, io_lat, fill, _ = _parsed_terms(cfg, grid, td, hbm_bits, 0.0)
+    return _window_cycles(td, terms, io_lat, fill, int(lo), int(hi))
+
+
+def _recovery_overhead_cycles(cfg: PackageConfig, td, terms, io_lat: float,
+                              fill: float, blinks: int) -> float:
+    """Replay the fault-tolerance event log: checkpoint/restore board
+    legs plus each rollback's discarded-work window, accumulated in
+    execution order (the run loop adds the identical floats in the
+    identical order into its separate overhead accumulator)."""
+    oh = 0.0
+    for ev in td.get("recovery_events") or ():
+        kind = ev.get("kind")
+        if kind in ("checkpoint", "reshard"):
+            oh += checkpoint_leg_cycles(cfg, float(ev.get("bits", 0.0)),
+                                        blinks)
+        elif kind == "rollback":
+            oh += _window_cycles(td, terms, io_lat, fill,
+                                 int(ev["from_step"]), int(ev["at_step"]))
+    return oh
+
+
+def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
+                         mem_bits_hbm: float) -> float:
+    terms, io_lat, fill, blinks = _parsed_terms(cfg, grid, td, hbm_bits,
+                                                mem_bits_hbm)
     if td.get("double_buffer"):
         # Overlap-aware accumulation (double-buffered boundary exchange):
         # superstep k's board leg + IO-die latency overlap superstep
@@ -503,16 +599,21 @@ def _trace_time_s_parsed(cfg: PackageConfig, grid: TileGrid, td, hbm_bits,
             ce, np.concatenate(([0.0], ee[:-1])))))
         cycles += ce.shape[0] * fill
         cycles += float(ee[-1]) if ee.shape[0] else 0.0
-        return cycles / (CLOCK_GHZ * 1e9)
-    t = terms["compute"]
-    for name in STEP_CYCLE_LEVELS[1:]:
-        if name in terms:
-            t = np.maximum(t, terms[name])
-    charged = (t > 0) | (td["pending"] > 0)
-    cycles = float(np.sum(t[charged]))
-    cycles += float(np.sum(charged)) * fill
-    io_steps = charged & (td["off_chip_msgs"] > 0)
-    cycles += float(np.sum(io_steps)) * io_lat
+    else:
+        t = terms["compute"]
+        for name in STEP_CYCLE_LEVELS[1:]:
+            if name in terms:
+                t = np.maximum(t, terms[name])
+        charged = (t > 0) | (td["pending"] > 0)
+        cycles = float(np.sum(t[charged]))
+        cycles += float(np.sum(charged)) * fill
+        io_steps = charged & (td["off_chip_msgs"] > 0)
+        cycles += float(np.sum(io_steps)) * io_lat
+    # fault-tolerance overhead: checkpoint legs, rollback waste, re-shard
+    # legs — the run loop keeps these in a separate accumulator added
+    # once at the end, so one final addition here matches it bit-exactly
+    cycles += _recovery_overhead_cycles(cfg, td, terms, io_lat, fill,
+                                        blinks)
     return cycles / (CLOCK_GHZ * 1e9)
 
 

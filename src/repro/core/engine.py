@@ -176,6 +176,19 @@ class EngineConfig:
     # bucket is bit-identical in values, counters and SuperstepTrace to
     # compaction=0 (the oracle; tests/test_compaction.py is the gate).
     compaction: int = 0
+    # Fault tolerance (distributed runtime; 0 = off): checkpoint the
+    # chunked-scan carry every this-many supersteps, at the chunk
+    # host-accounting boundary the run loop already pays (zero extra
+    # host syncs), through the atomic ``checkpoint/ckpt.py`` writer.  On
+    # an injected chip loss (``runtime.fault.FaultInjector``) the run
+    # re-shards the lost device's chip block onto the surviving devices
+    # (``ExecMesh`` rebuild + ``runtime.elastic.reshard_checkpoint``),
+    # rolls host accounting back to the snapshot and replays — final
+    # values/counters/trace/supersteps are bit-identical to an unfailed
+    # run, and the checkpoint/rollback/re-shard overhead is priced into
+    # ``time_s`` so the reprice contract still holds exactly
+    # (``costmodel.checkpoint_leg_cycles`` / ``recovery_waste_cycles``).
+    ckpt_every_supersteps: int = 0
 
     @property
     def iq_cap(self) -> int:
@@ -1406,7 +1419,8 @@ def _stat_keys(step_one, state, flush):
 
 def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
                    element_bits, progress, add_chunk_cycles, cycles,
-                   observer=None):
+                   observer=None, *, steps0=0, flush0=None, boundary=None,
+                   vec_sums=None):
     """The host side of the chunked run loop, shared verbatim by the
     monolithic and distributed engines (so chunk unpacking, accounting
     and termination cannot drift between them).
@@ -1424,11 +1438,23 @@ def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
     cannot perturb the computation (it only reads).  Every chunk's
     device_get increments the ``engine.host_syncs`` metric, observer or
     not, so telemetry-on/off sync counts are directly comparable.
+
+    The keyword-only extensions serve the distributed engine's
+    fault-tolerance layer (defaults keep the monolithic call untouched):
+    ``steps0`` / ``flush0`` resume the loop from a restored checkpoint
+    carry; ``boundary(steps, state, flush, host_done, cycles) -> cycles``
+    runs at each chunk host-accounting boundary *after* the chunk's
+    accounting (it checkpoints on cadence and may raise the fault
+    injector's chip-loss error, which the caller's retry loop turns into
+    a rollback); ``vec_sums`` (a dict) accumulates the per-superstep sum
+    of every telemetry vector stat (``pc_*``) across the run — the
+    straggler-rebalancing load feed, riding the existing fetch.
     """
     sync_ctr = default_registry().counter("engine.host_syncs")
-    steps = 0
+    steps = int(steps0)
     chunk_idx = 0
-    flush = jnp.zeros((), jnp.bool_)
+    flush = jnp.zeros((), jnp.bool_) if flush0 is None else \
+        jnp.asarray(flush0, jnp.bool_)
     done = jnp.zeros((), jnp.bool_)
     while steps < maxs:
         t0 = time.perf_counter()
@@ -1448,6 +1474,10 @@ def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
             counters.add(chunk_counters(stacked, n_act))
             trace.append_chunk(stacked, n_act, element_bits=element_bits)
             cycles = add_chunk_cycles(stacked, n_act, cycles)
+            if vec_sums is not None:
+                for k, v in vecs.items():
+                    s = np.sum(np.asarray(v[:n_act], np.float64), axis=0)
+                    vec_sums[k] = vec_sums.get(k, 0.0) + s
         t3 = time.perf_counter()
         if observer is not None:
             observer.on_chunk(ChunkSpan(
@@ -1458,6 +1488,8 @@ def _drain_chunked(chunk_fn, state, maxs, keys, counters, trace,
         steps += n_act
         chunk_idx += 1
         progress.report(steps, stacked, n_act)
+        if boundary is not None:
+            cycles = boundary(steps, state, flush, bool(host_done), cycles)
         if host_done or n_act == 0:
             break
     return state, steps, cycles

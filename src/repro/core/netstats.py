@@ -105,6 +105,18 @@ class SuperstepTrace:
     (``EngineConfig.double_buffer``): re-pricing replays the matching
     overlap-aware BSP accumulation, so the priced time reproduces the
     run's own (the reprice contract holds in both modes).
+
+    ``recovery_events`` is the fault-tolerance machinery's
+    execution-order log (checkpoint writes, rollbacks, re-shards onto
+    survivors), *not* a per-superstep vector: a recovered run's vector
+    rows are bit-identical to the unfailed run's (the rollback truncates
+    them and the replay re-records them), while the events record the
+    overhead timeline — ``costmodel._trace_time_s_parsed`` replays them
+    (checkpoint/restore board legs, discarded-work windows) so the
+    reprice contract holds on faulted runs too.  Event dicts carry
+    ``kind`` ('checkpoint' | 'rollback' | 'reshard') plus kind-specific
+    fields (``step`` / ``from_step`` / ``at_step`` / ``bits`` /
+    ``chip`` / ``devices``).
     """
 
     compute_ops: List[float] = dataclasses.field(default_factory=list)
@@ -120,6 +132,7 @@ class SuperstepTrace:
     chips_y: int = 1
     chips_x: int = 1
     double_buffer: bool = False
+    recovery_events: List[dict] = dataclasses.field(default_factory=list)
 
     _VECTOR_FIELDS = ("compute_ops", "intra_bits", "die_bits", "pkg_bits",
                       "endpoint_bits", "off_chip_bits", "off_chip_msgs",
@@ -127,6 +140,16 @@ class SuperstepTrace:
 
     def __len__(self) -> int:
         return len(self.compute_ops)
+
+    def truncate(self, n: int) -> "SuperstepTrace":
+        """Drop every recorded superstep past the first ``n`` (rollback to
+        a checkpoint: the replay re-records the discarded rows
+        bit-identically).  ``recovery_events`` survive — they log the
+        fault-tolerance timeline in execution order, not per-step rows."""
+        n = max(int(n), 0)
+        for f in self._VECTOR_FIELDS:
+            del getattr(self, f)[n:]
+        return self
 
     def append_step(self, stats, element_bits: int = MSG_BITS) -> None:
         """Record one superstep from the run loop's device-fetched stats."""
@@ -180,10 +203,21 @@ class SuperstepTrace:
         self.touched_bits.extend((touched * element_bits).tolist())
         self.pending.extend(vec("pending"))
 
+    # recovery-event fields that index trace rows: shifted when traces
+    # concatenate so events keep pointing at their supersteps
+    _EVENT_STEP_KEYS = ("step", "from_step", "at_step")
+
     def extend(self, other: "SuperstepTrace") -> "SuperstepTrace":
         """Concatenate another trace (epoch-style apps accumulate runs)."""
+        base = len(self)
         for f in self._VECTOR_FIELDS:
             getattr(self, f).extend(getattr(other, f))
+        for ev in other.recovery_events:
+            ev = dict(ev)
+            for k in self._EVENT_STEP_KEYS:
+                if k in ev:
+                    ev[k] = int(ev[k]) + base
+            self.recovery_events.append(ev)
         self.board_links = max(self.board_links, other.board_links)
         self.chips_y = max(self.chips_y, other.chips_y)
         self.chips_x = max(self.chips_x, other.chips_x)
@@ -197,6 +231,8 @@ class SuperstepTrace:
         d["chips_y"] = self.chips_y
         d["chips_x"] = self.chips_x
         d["double_buffer"] = self.double_buffer
+        if self.recovery_events:
+            d["recovery_events"] = [dict(ev) for ev in self.recovery_events]
         return d
 
     @classmethod
@@ -207,6 +243,8 @@ class SuperstepTrace:
                 double_buffer=bool(d.get("double_buffer", False)))
         for f in cls._VECTOR_FIELDS:
             getattr(t, f).extend(float(v) for v in d.get(f, ()))
+        t.recovery_events.extend(dict(ev)
+                                 for ev in d.get("recovery_events", ()))
         return t
 
 

@@ -53,16 +53,24 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import tempfile
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from ..checkpoint.ckpt import save_checkpoint
 from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS,
+                              PU_OPS_PER_EDGE, PU_OPS_PER_RECORD,
                               _off_pkg_bits_per_cycle,
-                              board_link_provisioning, link_provisioning)
+                              board_link_provisioning, checkpoint_leg_cycles,
+                              link_provisioning, recovery_waste_cycles)
+from ..runtime.elastic import reshard_checkpoint
+from ..runtime.fault import ChipLostError
+from ..runtime.straggler import detect_stragglers, rebalance_chunks
 from ..core.engine import (INF, AppSpec, DataLocalEngine, EngineConfig,
                            RunResult, _drain_chunked, _legacy_span, _pad,
                            _ProgressReporter, _sanitize_gate, _scan_steps,
@@ -244,6 +252,153 @@ def _aggregate(stats, recv, telemetry: bool = False, mesh=None):
 
 
 # --------------------------------------------------------------------------
+class _FaultTolerance:
+    """Superstep checkpoint/rollback controller for one ``run()`` call.
+
+    At each host-accounting boundary (per chunk on the chunked loop, per
+    superstep on the legacy loop) it polls the fault injector — a raised
+    :class:`ChipLostError` unwinds to ``run()``'s retry loop — and, on
+    cadence, writes the scan carry through the atomic checkpoint writer
+    plus an in-memory snapshot of the host accounting (counters, trace
+    length, BSP cycles, in-flight exchange, telemetry sums).
+
+    ``recover()`` rebuilds the :class:`ExecMesh` on the surviving
+    devices, restores the carry through ``runtime.elastic``'s
+    reshard-on-restore path, rolls the host accounting back to the
+    snapshot, and prices every overhead leg (checkpoint writes,
+    discarded replay window, re-shard restore) into a *separate*
+    accumulator the run adds exactly once at the very end.  Keeping the
+    overhead out of the main accumulator is what makes a recovered run
+    bit-identical to an unfailed one: the replay re-adds the identical
+    floats in the identical order, and the cost model re-prices the
+    overhead from the trace's recovery events with the same shared
+    helpers (``checkpoint_leg_cycles`` / ``recovery_waste_cycles``), so
+    ``reprice_ratio`` stays exactly 1.0.
+    """
+
+    def __init__(self, eng, directory, every, injector, counters, trace,
+                 prev_exch, overhead, vec_sums, n_board_links):
+        self.eng = eng
+        self.dir = directory
+        self.every = int(every)
+        self.injector = injector
+        self.counters = counters
+        self.trace = trace
+        self.prev_exch = prev_exch
+        self.overhead = overhead
+        self.vec_sums = vec_sums
+        self.blinks = n_board_links
+        self.pkg = eng.cfg.pkg
+        self.grid = eng.cfg.grid
+        self.events = trace.recovery_events
+        self._snap = None
+        self._next = self.every if self.every > 0 else None
+        self._bits = None              # carry image size (static shapes)
+        self._tmpl = None              # restore template (shape/dtype tree)
+
+    def _image_bits(self, state) -> float:
+        if self._bits is None:
+            self._bits = 8.0 * (sum(
+                int(np.prod(v.shape)) * v.dtype.itemsize
+                for v in state.values()) + 1)       # +1: the flush flag
+        return self._bits
+
+    def checkpoint(self, steps, state, flush, cycles) -> None:
+        """Write the carry at superstep ``steps`` + snapshot accounting."""
+        bits = self._image_bits(state)
+        host_state = jax.device_get(state)
+        if self._tmpl is None:
+            self._tmpl = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                          for k, v in host_state.items()}
+        flush_b = bool(np.asarray(flush))
+        save_checkpoint(
+            self.dir, int(steps),
+            dict(state=host_state, flush=np.asarray(flush_b)),
+            extra_meta=dict(cycles=float(cycles),
+                            prev_exch=float(self.prev_exch[0]),
+                            overhead=float(self.overhead[0]),
+                            counters=self.counters.as_dict()))
+        # the write is priced as overhead, never into `cycles`: the main
+        # accumulator must replay bit-identically to an unfailed run
+        self.overhead[0] += checkpoint_leg_cycles(self.pkg, bits,
+                                                  self.blinks)
+        self.events.append(dict(kind="checkpoint", step=int(steps),
+                                bits=float(bits)))
+        self._snap = dict(
+            steps=int(steps), flush=flush_b, cycles=float(cycles),
+            prev_exch=float(self.prev_exch[0]),
+            counters=self.counters.as_dict(),
+            vec_sums=(None if self.vec_sums is None else
+                      {k: np.array(v, np.float64)
+                       for k, v in self.vec_sums.items()}))
+
+    def at_boundary(self, steps, state, flush, done, cycles):
+        """The run loop's boundary hook: poll the injector first (so a
+        loss at a checkpoint boundary still forces a real rollback),
+        then checkpoint on cadence.  Returns ``cycles`` unchanged — the
+        hook never perturbs the main accumulator."""
+        if self.injector is not None:
+            self.injector.poll(int(steps))          # may raise ChipLostError
+        if self._next is not None and steps >= self._next and not done:
+            self.checkpoint(steps, state, flush, cycles)
+            while self._next <= steps:
+                self._next += self.every
+        return cycles
+
+    def recover(self, err):
+        """Chip loss: re-shard onto the survivors + roll back.
+
+        Returns ``(state, flush, steps, cycles)`` for the retry loop to
+        resume from the last checkpoint."""
+        eng, snap = self.eng, self._snap
+        lo, hi = snap["steps"], int(err.at_step)
+        # 1. price the discarded window [lo, hi) from the trace rows
+        #    BEFORE truncating — with the same vectorized helper the
+        #    cost model's replay uses, so both sides sum the identical
+        #    floats in the identical order
+        self.overhead[0] += recovery_waste_cycles(
+            self.pkg, self.grid, self.trace, lo, hi)
+        self.events.append(dict(kind="rollback", chip=int(err.chip),
+                                from_step=int(lo), at_step=int(hi)))
+        # 2. roll host accounting back to the snapshot
+        self.trace.truncate(lo)
+        for k, v in snap["counters"].items():
+            setattr(self.counters, k, v)
+        self.counters.supersteps = int(snap["counters"]["supersteps"])
+        self.prev_exch[0] = snap["prev_exch"]
+        if self.vec_sums is not None:
+            self.vec_sums.clear()
+            if snap["vec_sums"]:
+                self.vec_sums.update(snap["vec_sums"])
+        # 3. rebuild the mesh on the survivors; recompiles on next call
+        _, new_ndev = eng._drop_device()
+        # 4. restore the carry through the elastic reshard path: chip-
+        #    stacked leaves re-shard over the surviving device axis
+        jmesh = jax.make_mesh((eng.mesh.ndev,), (eng.mesh.axis,))
+
+        def rule(path, shape):
+            if shape and shape[0] == eng.C and eng.mesh.is_sharded:
+                return P(eng.mesh.axis)
+            return P()
+
+        restored = reshard_checkpoint(
+            self.dir, dict(state=self._tmpl,
+                           flush=jax.ShapeDtypeStruct((), np.bool_)),
+            jmesh, rule, step=lo)
+        state = restored["state"]
+        flush = bool(np.asarray(restored["flush"]))
+        # 5. the restore streams the carry image back over board links
+        self.overhead[0] += checkpoint_leg_cycles(self.pkg, self._bits,
+                                                  self.blinks)
+        self.events.append(dict(kind="reshard", step=int(lo),
+                                bits=float(self._bits),
+                                chip=int(err.chip), devices=int(new_ndev)))
+        if self._next is not None:
+            self._next = lo + self.every
+        return state, flush, lo, snap["cycles"]
+
+
+# --------------------------------------------------------------------------
 class DistributedEngine:
     """Multi-chip rendering of :class:`DataLocalEngine`.
 
@@ -295,6 +450,8 @@ class DistributedEngine:
         # dividing subset with a warning (no hard failure)
         self.mesh = ExecMesh.build(self.C, backend=backend)
         self.backend = self.mesh.backend_name
+        self._backend_req = backend
+        self.last_load_vecs = None     # summed pc_* vectors of the last run
         # execute the deferred-bank exchange only where there IS an
         # exchange; the cost model's double_buffer flag stays cfg-driven
         self._db_exec = bool(cfg.double_buffer) and self.C > 1
@@ -313,6 +470,27 @@ class DistributedEngine:
         """Stacked (chips, tiles_local*chunk) -> global per-index array."""
         a = np.asarray(a_stacked).reshape(self.C * self.Tl, chunk)
         return a[self._inv].reshape(-1)
+
+    # ------------------------------------------------------------- elasticity
+    def _drop_device(self) -> tuple:
+        """Rebuild the execution mesh on one fewer device (chip loss).
+
+        The logical chip count stays ``self.C`` — the grid partition and
+        global tile numbering are placement invariants — only the device
+        set hosting the chip blocks shrinks, so the lost chip's block is
+        re-hosted by the survivors.  Compiled step/chunk functions are
+        mesh-bound and dropped; the packed-stat layout and off-record
+        buffer length are mesh-independent and kept.  Returns
+        (old_ndev, new_ndev)."""
+        old_ndev = self.mesh.ndev
+        if old_ndev > 1:
+            backend = "vmap" if self._backend_req == "vmap" else "auto"
+            self.mesh = ExecMesh.build(self.C, backend=backend,
+                                       device_count=old_ndev - 1)
+            self.backend = self.mesh.backend_name
+            self._step = None
+            self._chunk_fns = {}
+        return old_ndev, self.mesh.ndev
 
     # ---------------------------------------------------------------- state
     def init_state(self, seed_idx=None, seed_val=None,
@@ -566,7 +744,8 @@ class DistributedEngine:
     # ------------------------------------------------------------------ run
     def run(self, state, max_supersteps: Optional[int] = None,
             progress_every: int = 0, chunk: Optional[int] = None,
-            observer=None):
+            observer=None, fault_injector=None,
+            ckpt_dir: Optional[str] = None):
         """Run distributed supersteps until drained; returns
         (state-with-global-values, RunResult).
 
@@ -581,7 +760,19 @@ class DistributedEngine:
         host-accounting boundary exactly like the monolithic engine —
         zero extra host syncs, bit-identical results; with
         ``EngineConfig.telemetry`` the spans carry per-chip ``pc_*``
-        load vectors."""
+        load vectors.
+
+        Fault tolerance: with ``EngineConfig.ckpt_every_supersteps > 0``
+        the scan carry is checkpointed at the same boundaries (cadence
+        in supersteps, zero extra host syncs — the carry is already on
+        the host's side of the sync).  ``fault_injector``
+        (runtime.fault.FaultInjector) injects a chip loss mid-run; the
+        engine re-shards onto the surviving devices, rolls back to the
+        last checkpoint and replays — final values, counters, supersteps
+        and trace are bit-identical to an unfailed run, with all
+        recovery overhead priced separately (see trace.recovery_events).
+        ``ckpt_dir`` overrides the checkpoint directory (default: a
+        fresh temp dir per run)."""
         cfg, part = self.cfg, self.part
         maxs = max_supersteps or cfg.max_supersteps
         K = cfg.run_chunk if chunk is None else int(chunk)
@@ -612,6 +803,21 @@ class DistributedEngine:
         # flight while this superstep computes; the final one drains in
         # the open (tail charge after the loop).  Stays 0.0 synchronous.
         prev_exch = [0.0]
+        # recovery overhead (checkpoint legs, discarded replay windows,
+        # re-shard restores) accumulates apart from `cycles` and is added
+        # exactly once after the drain tail — see _FaultTolerance
+        overhead = [0.0]
+        vec_sums = {} if cfg.telemetry else None
+        ft = None
+        if cfg.ckpt_every_supersteps > 0 or fault_injector is not None:
+            ft = _FaultTolerance(
+                self,
+                directory=(ckpt_dir or tempfile.mkdtemp(
+                    prefix=f"repro_ckpt_{self.app.name}_")),
+                every=cfg.ckpt_every_supersteps, injector=fault_injector,
+                counters=counters, trace=trace, prev_exch=prev_exch,
+                overhead=overhead, vec_sums=vec_sums,
+                n_board_links=n_board_links)
 
         def account(stats):
             """Legacy-loop per-superstep accounting.  The chunked branch
@@ -625,6 +831,11 @@ class DistributedEngine:
                            float(stats.get("sanity_violations", 0.0)))
             counters.add(superstep_counters(stats))
             trace.append_step(stats, element_bits=cfg.element_bits)
+            if vec_sums is not None:
+                for k, v in stats.items():
+                    if k.startswith("pc_"):
+                        vec_sums[k] = (vec_sums.get(k, 0.0)
+                                       + np.asarray(v, np.float64))
             # ---- BSP time model: monolithic levels + the board-level leg
             t_board = float(stats.get("off_chip_hop_msgs", 0.0)) * MSG_BITS / (
                 n_board_links * _off_pkg_bits_per_cycle(pkg))
@@ -645,11 +856,29 @@ class DistributedEngine:
                     if stats.get("off_chip_msgs", 0.0) > 0:
                         cycles += io_lat_cycles
 
+        boundary = None
+        if ft is not None:
+            if K <= 0:
+                def boundary(bsteps, bstate, bflush, bdone):
+                    nonlocal cycles
+                    cycles = ft.at_boundary(bsteps, bstate, bflush, bdone,
+                                            cycles)
+            else:
+                boundary = ft.at_boundary
+            ft.checkpoint(0, state, False, cycles)   # step-0 baseline
+
         if K <= 0:
-            state, steps = self._run_legacy(state, maxs, progress_every,
-                                            account, observer=observer)
+            steps0, flush0 = 0, False
+            while True:
+                try:
+                    state, steps = self._run_legacy(
+                        state, maxs, progress_every, account,
+                        observer=observer, steps0=steps0, flush0=flush0,
+                        boundary=boundary)
+                    break
+                except ChipLostError as e:
+                    state, flush0, steps0, cycles = ft.recover(e)
         else:
-            chunk_fn = self._get_chunk_fn(K)
             progress = _ProgressReporter(f"{self.app.name}/{self.C}chips",
                                          progress_every,
                                          sanitize=cfg.sanitize,
@@ -702,12 +931,25 @@ class DistributedEngine:
                             cycles += io_lat_cycles
                 return cycles
 
-            state, steps, cycles = _drain_chunked(
-                chunk_fn, state, maxs, self._stat_names, counters, trace,
-                cfg.element_bits, progress, add_chunk_cycles, cycles,
-                observer=observer)
+            steps0, flush0 = 0, False
+            while True:
+                try:
+                    # re-fetched each attempt: a recovery rebuilds the
+                    # mesh, so the compiled chunk fn must be re-bound
+                    chunk_fn = self._get_chunk_fn(K)
+                    state, steps, cycles = _drain_chunked(
+                        chunk_fn, state, maxs, self._stat_names, counters,
+                        trace, cfg.element_bits, progress, add_chunk_cycles,
+                        cycles, observer=observer, steps0=steps0,
+                        flush0=flush0, boundary=boundary,
+                        vec_sums=vec_sums)
+                    break
+                except ChipLostError as e:
+                    state, flush0, steps0, cycles = ft.recover(e)
         cycles += prev_exch[0]   # final in-flight exchange drains in the open
+        cycles += overhead[0]    # recovery legs, priced once at the end
         counters.supersteps = steps
+        self.last_load_vecs = vec_sums
         time_s = cycles / (CLOCK_GHZ * 1e9)
         out_state = dict(state)
         out_state["values"] = self._gather(state["values"], self.Cd)
@@ -727,16 +969,22 @@ class DistributedEngine:
         return out_state, result
 
     def _run_legacy(self, state, maxs, progress_every, account,
-                    observer=None):
+                    observer=None, *, steps0=0, flush0=False,
+                    boundary=None):
         """The seed per-superstep dispatch loop (one host sync per
         superstep) — the measured baseline for the chunked loop.  With an
         ``observer``, each superstep emits one single-step span at the
-        per-step host sync this loop already pays."""
+        per-step host sync this loop already pays.
+
+        ``steps0``/``flush0`` resume mid-run from a checkpoint;
+        ``boundary(steps, state, flush, done)`` hooks the per-superstep
+        host sync (fault injection + checkpoint cadence) at the point
+        where the loop's continue/break decision is already known."""
         write_back = self._write_back
         step_fn = self._get_step()
         sync_ctr = default_registry().counter("engine.host_syncs")
-        steps = 0
-        flush_flag = jnp.asarray(False)
+        steps = int(steps0)
+        flush_flag = jnp.asarray(bool(flush0))
         while steps < maxs:
             t0 = time.perf_counter()
             state, stats = step_fn(state, flush_flag)
@@ -752,15 +1000,66 @@ class DistributedEngine:
                                                (t1, t2), (t2, t3)))
             if flush_flag:
                 flush_flag = jnp.asarray(False)
-            if stats["pending"] == 0:
-                if write_back and stats["p_resident"] > 0:
-                    flush_flag = jnp.asarray(True)
-                    continue
+            pending_zero = stats["pending"] == 0
+            want_flush = bool(pending_zero and write_back
+                              and stats["p_resident"] > 0)
+            if want_flush:
+                flush_flag = jnp.asarray(True)
+            done = pending_zero and not want_flush
+            if boundary is not None:
+                # sees the NEXT iteration's flush flag, so a checkpoint
+                # taken here resumes with the correct write-back phase
+                boundary(steps, state, flush_flag, done)
+            if done:
                 break
+            if want_flush:
+                continue
             if progress_every and steps % progress_every == 0:
                 print(f"  [{self.app.name}/{self.C}chips] step {steps} "
                       f"pending={stats['pending']:.0f}")
         return state, steps
+
+    # ---------------------------------------------------- straggler handling
+    def rebalance_plan(self, n_items: Optional[int] = None,
+                       max_ratio: float = 1.5, threshold: float = 2.0):
+        """Straggler-aware ownership re-chunking plan for the next wave.
+
+        Feeds the last run's accumulated per-chip ``pc_*`` telemetry
+        (requires ``EngineConfig.telemetry``) into ``runtime.straggler``:
+        per-chip load is modeled in PU ops — edges streamed plus records
+        drained (the cost model's ``PU_OPS_PER_EDGE`` /
+        ``PU_OPS_PER_RECORD``) plus exchange arrivals — and
+        ``rebalance_chunks`` returns new destination-range boundaries
+        over ``n_items`` (default: the global destination index space).
+        Purely advisory between query waves: applying it re-partitions
+        ownership for the *next* run, never perturbing the current one,
+        so every wave stays bit-exact.  Returns a dict with the measured
+        load, straggler mask/imbalance ratio, new boundaries, and the
+        predicted post-rebalance imbalance."""
+        v = self.last_load_vecs
+        if not v:
+            raise ValueError(
+                "no per-chip load telemetry: run() with "
+                "EngineConfig.telemetry=True before rebalance_plan()")
+        zero = np.zeros(self.C, np.float64)
+        load = (np.asarray(v.get("pc_edges", zero), np.float64)
+                * PU_OPS_PER_EDGE
+                + np.asarray(v.get("pc_records", zero), np.float64)
+                * PU_OPS_PER_RECORD
+                + np.asarray(v.get("pc_recv", zero), np.float64))
+        mask, ratio = detect_stragglers(load, threshold=threshold)
+        n = int(self.part.grid.num_tiles * self.Cd
+                if n_items is None else n_items)
+        bounds = rebalance_chunks(load, n, max_ratio=max_ratio)
+        # predicted post-rebalance load: piecewise-uniform density over
+        # the old equal chunks, integrated over the new boundaries
+        eq = n / self.C
+        cum = np.concatenate([[0.0], np.cumsum(load)])
+        new_load = np.diff(np.interp(bounds, np.arange(self.C + 1) * eq,
+                                     cum))
+        pred = float(new_load.max() / max(new_load.mean(), 1e-9))
+        return dict(load=load, stragglers=mask, imbalance=float(ratio),
+                    boundaries=bounds, predicted_imbalance=pred)
 
 
 # --------------------------------------------------------------------------

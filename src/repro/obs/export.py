@@ -22,7 +22,10 @@ https://ui.perfetto.dev.  The trace has three process groups:
     add an ``active-set compaction`` counter track here: per-superstep
     ``active_fraction`` (active tiles / grid tiles) and ``bucket_cap``
     (the selected capacity-ladder rung) sampled from the chunk stat
-    rows — no extra host syncs.
+    rows — no extra host syncs.  Fault-tolerant runs add a ``fault
+    tolerance`` track: checkpoint / re-shard spans sized by the image's
+    board-leg serialization and rollback spans covering the discarded
+    replay window (``SuperstepTrace.recovery_events``).
   * **chip c (sim load)** (pids 10+c) — per-chip counter ("C") tracks of
     the telemetry load vectors (delivered / recv / edges / …) sampled at
     each superstep's simulated start time; monolithic runs group tiles
@@ -41,8 +44,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.costmodel import (CLOCK_GHZ, IO_DIE_RXTX_LAT_NS, PackageConfig,
-                              STEP_CYCLE_LEVELS, link_provisioning,
-                              step_cycle_terms)
+                              STEP_CYCLE_LEVELS, checkpoint_leg_cycles,
+                              link_provisioning, step_cycle_terms)
 
 PID_HOST = 0
 PID_SIM = 1
@@ -254,6 +257,56 @@ def _compaction_events(rec, starts: List[float]) -> List[dict]:
     return evs
 
 
+_TID_RECOVERY = 91        # fault-tolerance track on the sim process
+
+
+def _recovery_events(rec, starts: List[float]) -> List[dict]:
+    """Fault-tolerance spans ("X") on the simulated clock, from the
+    run's ``SuperstepTrace.recovery_events`` log: ``checkpoint`` and
+    ``re-shard`` spans sized by the image's board-leg serialization
+    (``costmodel.checkpoint_leg_cycles`` — the same pricing the run's
+    separate overhead accumulator uses) and ``rollback`` spans covering
+    the discarded ``[from_step, at_step)`` replay window.  Empty (and
+    absent) on unfailed runs without a checkpoint cadence."""
+    result, meta = rec.result, rec.meta
+    if result is None or result.trace is None or not starts:
+        return []
+    events = getattr(result.trace, "recovery_events", None)
+    if not events:
+        return []
+    pkg = meta.pkg if meta is not None and meta.pkg is not None \
+        else PackageConfig()
+    blinks = int(getattr(result.trace, "board_links", 1))
+    end = starts[-1]
+
+    def at(step):
+        s = int(step)
+        return starts[s] if s < len(starts) else end
+
+    evs = [_meta_event(PID_SIM, "", tid=_TID_RECOVERY,
+                       thread="fault tolerance")]
+    for ev in events:
+        kind = ev.get("kind")
+        if kind in ("checkpoint", "reshard"):
+            dur = checkpoint_leg_cycles(pkg, float(ev.get("bits", 0.0)),
+                                        blinks) * _US_PER_CYCLE
+            name = ("checkpoint" if kind == "checkpoint"
+                    else f"re-shard (chip {ev.get('chip', '?')} lost)")
+            evs.append({"ph": "X", "name": f"{name} @ step {ev['step']}",
+                        "pid": PID_SIM, "tid": _TID_RECOVERY,
+                        "ts": at(ev["step"]), "dur": dur,
+                        "args": dict(ev)})
+        elif kind == "rollback":
+            lo, hi = int(ev["from_step"]), int(ev["at_step"])
+            evs.append({"ph": "X",
+                        "name": f"rollback [{lo}:{hi}) "
+                                f"(chip {ev.get('chip', '?')})",
+                        "pid": PID_SIM, "tid": _TID_RECOVERY,
+                        "ts": at(lo), "dur": max(at(hi) - at(lo), 0.0),
+                        "args": dict(ev)})
+    return evs
+
+
 def to_trace_events(rec) -> List[dict]:
     """All trace events of a recorded run (see module docstring)."""
     evs = _wall_events(rec)
@@ -261,6 +314,7 @@ def to_trace_events(rec) -> List[dict]:
     evs.extend(sim_evs)
     evs.extend(_load_events(rec, starts))
     evs.extend(_compaction_events(rec, starts))
+    evs.extend(_recovery_events(rec, starts))
     return evs
 
 

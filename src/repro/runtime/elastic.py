@@ -1,5 +1,3 @@
-# seed: unused — elastic-restart scaffolding from the repo seed; no checkpoint
-# consumer imports it (repro.analysis.deadcode quarantine).
 """Elastic restart: resume a checkpoint on a different mesh shape.
 
 The checkpoint stores plain host arrays; re-placement happens through the

@@ -1,11 +1,23 @@
-"""Fault-tolerant training loop.
+"""Fault-tolerant loops: training-step rollback and engine chip loss.
 
-At thousand-node scale *something* fails every few minutes; the loop
+At thousand-node scale *something* fails every few minutes; a loop
 must (a) checkpoint on a cadence, (b) catch step failures, (c) roll back
 to the last checkpoint and continue, (d) give up only after repeated
 failures at the same step.  Failures are injected in tests via
 SimulatedFailure; on real hardware the same except-path catches XLA/ICI
 errors surfaced as RuntimeError/jaxlib errors.
+
+Two consumers share this module:
+
+  * :class:`FaultTolerantLoop` — the training-step rendering (step /
+    batch / metrics history).
+  * :class:`FaultInjector` / :class:`ChipLostError` — the distributed
+    graph engine's rendering: the injector is polled at every superstep
+    host-accounting boundary of ``DistributedEngine.run`` and raises a
+    chip loss once; the engine's recovery path re-shards the lost
+    device's chip block onto the survivors (``ExecMesh`` rebuild +
+    ``elastic.reshard_checkpoint``) and replays from the last superstep
+    checkpoint, bit-identically.
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ import logging
 from typing import Callable, Optional
 
 import jax
+import numpy as np
 
 from ..checkpoint.ckpt import (latest_step, restore_checkpoint,
                                save_checkpoint)
@@ -23,6 +36,51 @@ log = logging.getLogger("repro.fault")
 
 class SimulatedFailure(RuntimeError):
     """Raised by test hooks to emulate a node loss / ICI timeout."""
+
+
+class ChipLostError(RuntimeError):
+    """A chip (and the device hosting its block) dropped out mid-run.
+
+    Raised by :class:`FaultInjector` inside ``DistributedEngine.run``'s
+    boundary hook; the engine's retry loop catches it and recovers."""
+
+    def __init__(self, chip: int, at_step: int):
+        super().__init__(f"chip {chip} lost at superstep {at_step}")
+        self.chip = int(chip)
+        self.at_step = int(at_step)
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Injects one chip loss at a chosen (or seeded-random) superstep.
+
+    ``poll(steps)`` is called by the distributed run loop at every
+    superstep host-accounting boundary (per chunk on the chunked loop,
+    per step on the legacy loop); the first boundary at or past
+    ``at_superstep`` raises :class:`ChipLostError` once.  Because the
+    chunked loop only observes steps at chunk granularity, the loss
+    surfaces at the first boundary covering ``at_superstep`` — exactly
+    where a real loss would first be *detected* by the host.
+    """
+
+    at_superstep: int
+    chip: int = 0
+    fired: bool = False
+
+    @classmethod
+    def seeded(cls, seed: int, max_superstep: int,
+               num_chips: int = 1) -> "FaultInjector":
+        """Uniform random loss point in ``[1, max_superstep]`` and chip in
+        ``[0, num_chips)`` from a deterministic seed (test harnesses)."""
+        rng = np.random.default_rng(seed)
+        return cls(
+            at_superstep=int(rng.integers(1, max(int(max_superstep), 1) + 1)),
+            chip=int(rng.integers(0, max(int(num_chips), 1))))
+
+    def poll(self, steps: int) -> None:
+        if not self.fired and steps >= self.at_superstep:
+            self.fired = True
+            raise ChipLostError(self.chip, steps)
 
 
 @dataclasses.dataclass
@@ -45,6 +103,7 @@ class FaultTolerantLoop:
         history = []
         step = start_step
         retries = 0
+        fail_step: Optional[int] = None
         while step < num_steps:
             batch = self.batch_at(step)
             try:
@@ -56,6 +115,11 @@ class FaultTolerantLoop:
                     lambda x: x.block_until_ready()
                     if hasattr(x, "block_until_ready") else x, metrics)
             except (SimulatedFailure, RuntimeError) as e:
+                # per-step retry budget: a failure at a *different* step
+                # starts a fresh count (the docstring's contract — one
+                # flaky step must not eat another's budget)
+                if fail_step != step:
+                    fail_step, retries = step, 0
                 retries += 1
                 log.warning("step %d failed (%s); retry %d", step, e,
                             retries)
@@ -66,8 +130,11 @@ class FaultTolerantLoop:
                     state = restore_checkpoint(self.ckpt_dir, state,
                                                step=last)
                     step = last
+                    # roll metrics back with the state: the replayed
+                    # steps re-append their metrics, so keeping the old
+                    # entries would double-count every replayed step
+                    del history[max(last - start_step, 0):]
                 continue
-            retries = 0
             state = new_state
             history.append(jax.device_get(metrics))
             step += 1

@@ -40,7 +40,7 @@ def rebalance_chunks(load: np.ndarray, n_items: int,
     eq = n_items / t
     # per-item density within old chunk ~ load/chunk; target boundaries
     # equalize cumulative load.
-    density = np.repeat(load / eq, 1)               # per old chunk
+    density = load / eq                             # per old chunk
     cum = np.concatenate([[0.0], np.cumsum(density)])
     targets = np.linspace(0, cum[-1], t + 1)
     # invert the cumulative-load curve at old-chunk granularity
@@ -49,13 +49,31 @@ def rebalance_chunks(load: np.ndarray, n_items: int,
     pos = np.round(pos).astype(np.int64)
     # clamp chunk sizes to [eq/max_ratio, eq*max_ratio] to bound movement
     sizes = np.diff(pos)
-    sizes = np.clip(sizes, int(eq / max_ratio), int(np.ceil(eq * max_ratio)))
-    # repair total
-    diff = n_items - sizes.sum()
-    sizes[np.argsort(-sizes)[: abs(diff)]] += np.sign(diff)
-    out = np.concatenate([[0], np.cumsum(sizes)])
-    out[-1] = n_items
-    return out
+    lo_sz = min(int(eq / max_ratio), n_items // t)
+    hi_sz = max(int(np.ceil(eq * max_ratio)), int(np.ceil(eq)))
+    sizes = np.clip(sizes, lo_sz, hi_sz)
+    # repair the post-clip drift fully: the clip can move the total by
+    # up to t * (hi_sz - lo_sz), so one +-1 pass over at most t chunks
+    # is not enough — keep spreading +-1 corrections (largest chunks
+    # shrink first, smallest grow first) until the sizes sum exactly,
+    # never leaving the clip window, so the cumulative boundaries are
+    # monotone by construction and no final-chunk overwrite is needed.
+    # (termination: t*lo_sz <= n_items <= t*hi_sz, so whenever the sum is
+    # off there is room in the needed direction, and every pass moves the
+    # sum at least 1 toward n_items)
+    while True:
+        diff = int(n_items - sizes.sum())
+        if diff == 0:
+            break
+        if diff > 0:
+            room = sizes < hi_sz
+            order = np.argsort(sizes[room], kind="stable")
+            sizes[np.flatnonzero(room)[order][:diff]] += 1
+        else:
+            room = sizes > lo_sz
+            order = np.argsort(-sizes[room], kind="stable")
+            sizes[np.flatnonzero(room)[order][:-diff]] -= 1
+    return np.concatenate([[0], np.cumsum(sizes)])
 
 
 def rebalance_experts(expert_load: np.ndarray, capacity: int):

@@ -1,0 +1,348 @@
+"""Fault-tolerant distributed runtime (``repro.runtime`` + driver).
+
+Acceptance properties:
+  * a chip loss injected at a seeded random superstep recovers
+    **bit-identically** to an unfailed run — same final values,
+    TrafficCounters, superstep count and SuperstepTrace vectors — for
+    all six apps on 4 chips, across chunked/legacy dispatch,
+    double-buffered exchange on/off and active-set compaction on/off
+    (and on a real 4-device ``shard_map`` mesh via subprocess);
+  * re-pricing a faulted run's trace under its own config reproduces
+    its measured time **exactly** (``reprice_ratio == 1.0``): the
+    recovery overhead legs (checkpoint writes, discarded replay window,
+    re-shard restore) are priced from ``trace.recovery_events`` with
+    the same shared helpers the run loop used;
+  * ``FaultTolerantLoop.run`` rolls its metrics history back with the
+    state (no double-counted replay steps) and budgets retries
+    **per step** (a flaky step cannot eat another step's budget; a
+    persistently failing step still gives up);
+  * ``straggler.rebalance_chunks`` returns monotone boundaries whose
+    sizes sum exactly to ``n_items`` and stay inside the clip window —
+    including when the post-clip drift exceeds the tile count.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import trace_time_s
+from repro.core.netstats import SuperstepTrace
+from repro.core.tilegrid import square_grid
+from repro.graph import rmat_edges
+from repro.graph.apps import engine_and_state
+from repro.graph.rmat import histogram_input
+from repro.runtime import (FaultInjector, FaultTolerantLoop,
+                           SimulatedFailure, detect_stragglers,
+                           rebalance_chunks)
+
+from _subproc import run_devices
+
+GRID = square_grid(16)
+ALL_APPS = ("bfs", "sssp", "wcc", "pagerank", "spmv", "histo")
+CHIPS = 4
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_edges(8, edge_factor=8, seed=1)
+
+
+def _engine(name, g, **kw):
+    kw.setdefault("chips", CHIPS)
+    kw.setdefault("oq_cap", 16)
+    if name in ("bfs", "sssp"):
+        # root 0 can be isolated in an RMAT sample; seed from the hub
+        kw.setdefault("root", int(np.argmax(g.out_degree())))
+    if name == "histo":
+        bins = g.n_rows // 8
+        return engine_and_state(name, g, GRID,
+                                histo_values=histogram_input(g, bins),
+                                bins=bins, **kw)
+    return engine_and_state(name, g, GRID, **kw)
+
+
+def _assert_bit_identical(base_state, base, f_state, f):
+    assert np.array_equal(base_state["values"], f_state["values"])
+    assert base.counters.as_dict() == f.counters.as_dict()
+    assert base.supersteps == f.supersteps
+    for k in SuperstepTrace._VECTOR_FIELDS:
+        assert getattr(base.trace, k) == getattr(f.trace, k), k
+    assert base.trace.board_links == f.trace.board_links
+    assert base.trace.double_buffer == f.trace.double_buffer
+
+
+def _fault_pair(name, g, *, chunk, seed=None, at=None, chip=1,
+                ckpt_dir=None, **cfg_kw):
+    """(unfailed run, chip-loss run) of the same app+config."""
+    cfg_kw.setdefault("ckpt_every_supersteps", 3)
+    eng, state, _ = _engine(name, g, **cfg_kw)
+    base_state, base = eng.run(dict(state), chunk=chunk)
+    eng2, state2, _ = _engine(name, g, **cfg_kw)
+    if seed is not None:
+        inj = FaultInjector.seeded(seed, max_superstep=base.supersteps,
+                                   num_chips=CHIPS)
+    else:
+        inj = FaultInjector(at_superstep=at, chip=chip)
+    f_state, f = eng2.run(dict(state2), chunk=chunk, fault_injector=inj,
+                          ckpt_dir=ckpt_dir)
+    assert inj.fired, "injector never fired: loss point past drain"
+    return base_state, base, f_state, f, eng2
+
+
+# ---------------------------------------------------- chip-loss bit-identity
+@pytest.mark.parametrize("name", ALL_APPS)
+def test_chip_loss_recovers_bit_identical(name, g, tmp_path):
+    """Seeded random loss point/chip, all six apps, chunked dispatch."""
+    seed = zlib.crc32(name.encode())       # stable across interpreters
+    base_state, base, f_state, f, _ = _fault_pair(
+        name, g, chunk=8, seed=seed, ckpt_dir=str(tmp_path / name))
+    _assert_bit_identical(base_state, base, f_state, f)
+    # the unfailed run checkpoints on the same cadence, nothing more
+    assert all(ev["kind"] == "checkpoint"
+               for ev in base.trace.recovery_events)
+    kinds = [ev["kind"] for ev in f.trace.recovery_events]
+    assert "rollback" in kinds and "reshard" in kinds
+    assert kinds[0] == "checkpoint"          # the step-0 baseline
+
+
+@pytest.mark.parametrize("chunk", [0, 8])
+@pytest.mark.parametrize("double_buffer", [False, True])
+@pytest.mark.parametrize("compaction", [0, 2])
+def test_chip_loss_matrix(g, chunk, double_buffer, compaction):
+    """Dispatch-mode matrix: legacy/chunked x double-buffer x
+    compaction, loss pinned mid-run."""
+    base_state, base, f_state, f, eng = _fault_pair(
+        "bfs", g, chunk=chunk, at=5, chip=2,
+        double_buffer=double_buffer, compaction=compaction)
+    _assert_bit_identical(base_state, base, f_state, f)
+    # the faulted run costs strictly more — overhead is priced, not lost
+    assert f.cycles > base.cycles
+
+
+@pytest.mark.parametrize("double_buffer", [False, True])
+def test_faulted_run_reprices_exactly(g, double_buffer):
+    """reprice_ratio == 1.0 *exactly* on a faulted run: the trace
+    replay re-derives base + overhead with bit-identical floats."""
+    _, base, _, f, eng = _fault_pair("bfs", g, chunk=8, at=5,
+                                     double_buffer=double_buffer)
+    t = trace_time_s(eng.cfg.pkg, GRID, f.trace)
+    assert t == f.time_s
+    assert t / f.time_s == 1.0
+    # and the unfailed run's contract still holds
+    assert trace_time_s(eng.cfg.pkg, GRID, base.trace) == base.time_s
+
+
+def test_checkpoint_cadence_alone_is_inert(g):
+    """A checkpoint cadence without a failure changes nothing but the
+    event log (checkpoint legs are priced overhead, exactly repriced)."""
+    eng, state, _ = _engine("bfs", g)
+    base_state, base = eng.run(dict(state), chunk=8)
+    eng2, state2, _ = _engine("bfs", g, ckpt_every_supersteps=2)
+    c_state, c = eng2.run(dict(state2), chunk=8)
+    _assert_bit_identical(base_state, base, c_state, c)
+    assert all(ev["kind"] == "checkpoint"
+               for ev in c.trace.recovery_events)
+    assert len(c.trace.recovery_events) > 1
+    assert c.cycles > base.cycles
+    assert trace_time_s(eng2.cfg.pkg, GRID, c.trace) == c.time_s
+
+
+def test_chip_loss_on_4_device_mesh(g):
+    """Real multi-device recovery: 4 forced host devices, shard_map
+    backend.  After the loss the mesh rebuilds on the surviving 3
+    devices — the largest subset dividing 4 chips is 2 devices (2 chips
+    per device), so the lost chip's block lands on a survivor."""
+    out = run_devices("""
+import numpy as np
+from repro.core.tilegrid import square_grid
+from repro.graph import rmat_edges
+from repro.graph.apps import engine_and_state
+from repro.runtime import FaultInjector
+
+g = rmat_edges(8, edge_factor=8, seed=1)
+grid = square_grid(16)
+kw = dict(chips=4, oq_cap=16, backend="shard_map",
+          ckpt_every_supersteps=3, root=int(np.argmax(g.out_degree())))
+eng, state, _ = engine_and_state("bfs", g, grid, **kw)
+assert eng.mesh.ndev == 4, eng.mesh
+base_state, base = eng.run(dict(state), chunk=8)
+eng2, state2, _ = engine_and_state("bfs", g, grid, **kw)
+inj = FaultInjector(at_superstep=5, chip=3)
+f_state, f = eng2.run(dict(state2), chunk=8, fault_injector=inj)
+assert inj.fired
+assert eng2.mesh.ndev == 2, f"mesh not rebuilt on survivors: {eng2.mesh}"
+ev = f.trace.recovery_events
+assert any(e["kind"] == "reshard" and e["devices"] == 2 for e in ev), ev
+assert np.array_equal(base_state["values"], f_state["values"])
+assert base.counters.as_dict() == f.counters.as_dict()
+assert base.supersteps == f.supersteps
+print("MESH_RECOVERY_OK")
+""", n=4)
+    assert "MESH_RECOVERY_OK" in out
+
+
+# ------------------------------------------------------ recovery event log
+def _mk_trace(n):
+    t = SuperstepTrace()
+    for i in range(n):
+        for f in SuperstepTrace._VECTOR_FIELDS:
+            getattr(t, f).append(float(i))
+    return t
+
+
+def test_recovery_events_roundtrip_and_extend():
+    t = _mk_trace(6)
+    t.recovery_events.append(dict(kind="checkpoint", step=0, bits=8.0))
+    t.recovery_events.append(dict(kind="rollback", chip=1, from_step=0,
+                                  at_step=4))
+    d = t.to_dict()
+    assert d["recovery_events"] == t.recovery_events
+    rt = SuperstepTrace.from_dict(d)
+    assert rt.recovery_events == t.recovery_events
+    # an event-free trace keeps its legacy dict shape
+    assert "recovery_events" not in SuperstepTrace().to_dict()
+    # extend() shifts the appended trace's event step anchors
+    other = _mk_trace(3)
+    other.recovery_events.append(dict(kind="checkpoint", step=1, bits=2.0))
+    t.extend(other)
+    assert t.recovery_events[-1]["step"] == 6 + 1
+
+
+def test_trace_truncate():
+    t = _mk_trace(5)
+    t.truncate(2)
+    assert len(t) == 2
+    assert t.compute_ops == [0.0, 1.0]
+    assert all(len(getattr(t, f)) == 2 for f in t._VECTOR_FIELDS)
+    t.truncate(0)
+    assert len(t) == 0
+
+
+# ------------------------------------------------- FaultTolerantLoop fixes
+def _loop(tmp_path, hook=None, **kw):
+    def train_step(state, batch):
+        s = state + batch
+        return s, {"loss": float(s)}
+
+    return FaultTolerantLoop(train_step=train_step,
+                             batch_at=lambda step: float(step + 1),
+                             ckpt_dir=str(tmp_path), failure_hook=hook,
+                             **kw)
+
+
+def test_loop_history_rolls_back_with_state(tmp_path):
+    """A rollback replays steps; their metrics must not double-count."""
+    fails = {5: 1}
+
+    def hook(step):
+        if fails.get(step, 0) > 0:
+            fails[step] -= 1
+            raise SimulatedFailure(f"step {step}")
+
+    loop = _loop(tmp_path / "a", hook, ckpt_every=2)
+    state, history = loop.run(np.float64(0.0), 8)
+    ref_state, ref_history = _loop(tmp_path / "b", ckpt_every=2).run(
+        np.float64(0.0), 8)
+    assert state == ref_state
+    assert history == ref_history          # exactly one entry per step
+    assert len(history) == 8
+
+
+def test_loop_retry_budget_is_per_step(tmp_path):
+    """Two different flaky steps each get the full budget."""
+    fails = {2: 2, 5: 2}
+
+    def hook(step):
+        if fails.get(step, 0) > 0:
+            fails[step] -= 1
+            raise SimulatedFailure(f"step {step}")
+
+    loop = _loop(tmp_path / "c", hook, ckpt_every=2,
+                 max_retries_per_step=2)
+    state, history = loop.run(np.float64(0.0), 8)
+    assert len(history) == 8
+    assert state == float(sum(range(1, 9)))
+
+
+def test_loop_gives_up_on_persistent_step(tmp_path):
+    """A step that always fails exhausts its budget even though the
+    rollback replays earlier (succeeding) steps in between."""
+    calls = [0]
+
+    def hook(step):
+        if step == 3:
+            calls[0] += 1
+            raise SimulatedFailure("always")
+
+    loop = _loop(tmp_path / "d", hook, ckpt_every=2,
+                 max_retries_per_step=3)
+    with pytest.raises(SimulatedFailure):
+        loop.run(np.float64(0.0), 8)
+    assert calls[0] == 4                   # initial try + 3 retries
+
+
+# ------------------------------------------------------ straggler rebalance
+def _assert_valid_boundaries(b, t, n_items):
+    assert b.shape == (t + 1,)
+    assert b[0] == 0 and b[-1] == n_items
+    sizes = np.diff(b)
+    assert (sizes >= 0).all(), "non-monotone boundaries"
+    assert sizes.sum() == n_items
+
+
+def test_rebalance_exact_total_random():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        t = int(rng.integers(2, 65))
+        n_items = int(rng.integers(t, 5000))
+        load = rng.random(t) * 10 ** rng.integers(0, 6)
+        max_ratio = float(rng.uniform(1.05, 4.0))
+        b = rebalance_chunks(load, n_items, max_ratio=max_ratio)
+        _assert_valid_boundaries(b, t, n_items)
+
+
+def test_rebalance_large_drift():
+    """One molten-hot chunk: the clip's drift exceeds the tile count,
+    which the seed's single +-1 repair pass (and its final-boundary
+    overwrite) silently corrupted."""
+    t = 16
+    load = np.ones(t)
+    load[0] = 1e9
+    b = rebalance_chunks(load, 160, max_ratio=1.5)
+    _assert_valid_boundaries(b, t, 160)
+    sizes = np.diff(b)
+    # every chunk stays inside the clip window after the full repair
+    assert sizes.min() >= min(int(160 / t / 1.5), 160 // t)
+    assert sizes.max() <= max(int(np.ceil(160 / t * 1.5)),
+                              int(np.ceil(160 / t)))
+    # the hot chunk never ends up above the equal share
+    assert sizes[0] <= 160 // t
+
+
+def test_rebalance_balanced_is_noop():
+    b = rebalance_chunks(np.ones(8), 800)
+    assert (np.diff(b) == 100).all()
+
+
+def test_detect_stragglers():
+    load = np.array([1.0, 1.0, 1.0, 9.0])
+    mask, ratio = detect_stragglers(load, threshold=2.0)
+    assert mask.tolist() == [False, False, False, True]
+    assert ratio == pytest.approx(3.0)
+
+
+def test_rebalance_plan_from_telemetry(g):
+    """End-to-end: telemetry run -> straggler verdict -> advisory
+    boundaries for the next wave."""
+    eng, state, _ = _engine("bfs", g, telemetry=True)
+    eng.run(dict(state), chunk=8)
+    plan = eng.rebalance_plan()
+    assert plan["load"].shape == (CHIPS,)
+    _assert_valid_boundaries(plan["boundaries"], CHIPS,
+                             GRID.num_tiles * eng.Cd)
+    assert plan["imbalance"] >= 1.0
+    assert plan["predicted_imbalance"] <= plan["imbalance"] + 1e-9
+    eng2, state2, _ = _engine("bfs", g)       # telemetry off
+    eng2.run(dict(state2), chunk=8)
+    with pytest.raises(ValueError):
+        eng2.rebalance_plan()
